@@ -1,0 +1,61 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark corresponds to a table/claim in the paper (see DESIGN.md §6)
+and prints ``name,us_per_call,derived`` CSV rows.  Online A/B metrics are
+not reproducible offline; each benchmark reports the stated offline proxy on
+synthetic data, labelled in the ``derived`` field.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from repro.configs.linksage import CONFIG as GNN_CONFIG
+from repro.core.linksage import LinkSAGETrainer
+from repro.data import GraphGenConfig, generate_job_marketplace_graph
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 3, **kwargs):
+    """Returns (result, us_per_call) — best of `repeats` after one warmup."""
+    fn(*args, **kwargs)
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6
+
+
+_CACHE: dict = {}
+
+
+def standard_graph(seed: int = 0):
+    key = ("graph", seed)
+    if key not in _CACHE:
+        _CACHE[key] = generate_job_marketplace_graph(
+            GraphGenConfig(num_members=600, num_jobs=180, seed=seed))
+    return _CACHE[key]
+
+
+def trained_gnn(seed: int = 0, steps: int = 150, aggregator: str = "mean"):
+    key = ("gnn", seed, steps, aggregator)
+    if key not in _CACHE:
+        g, truth = standard_graph(seed)
+        cfg = replace(GNN_CONFIG, hidden_dim=64, embed_dim=64, fanouts=(8, 4),
+                      aggregator=aggregator)
+        tr = LinkSAGETrainer(cfg, g, seed=seed)
+        tr.train(steps, batch_size=64)
+        m_emb = tr.embed_nodes("member", np.arange(g.num_nodes["member"]))
+        j_emb = tr.embed_nodes("job", np.arange(g.num_nodes["job"]))
+        _CACHE[key] = (g, truth, cfg, tr, m_emb, j_emb)
+    return _CACHE[key]

@@ -1,0 +1,94 @@
+"""Kernel micro-benchmarks + roofline table readout.
+
+Kernel timings on CPU use the XLA ``ref`` path (the interpret-mode Pallas
+path is a Python-level simulator — correctness tool, not a perf proxy).
+The per-kernel derived field reports achieved elements/s; real-TPU numbers
+come from the dry-run roofline (bench_roofline below reads those JSONs).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels import ops
+
+RNG = np.random.default_rng(0)
+
+
+def bench_neighbor_mean():
+    feats = jnp.asarray(RNG.normal(size=(4096, 10, 128)).astype(np.float32))
+    mask = jnp.asarray((RNG.random((4096, 10)) < 0.8).astype(np.float32))
+    fn = jax.jit(lambda f, m: ops.neighbor_mean(f, m, impl="ref"))
+    out, us = timed(lambda: jax.block_until_ready(fn(feats, mask)))
+    emit("kernel_neighbor_mean_4096x10x128", us,
+         f"gb_per_s={feats.nbytes / (us / 1e6) / 1e9:.2f}")
+
+
+def bench_sage_attention():
+    q = jnp.asarray(RNG.normal(size=(4096, 128)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(4096, 10, 128)).astype(np.float32))
+    mask = jnp.asarray((RNG.random((4096, 10)) < 0.8).astype(np.float32))
+    fn = jax.jit(lambda q_, k_, m: ops.neighbor_attention(q_, k_, k_, m, impl="ref"))
+    out, us = timed(lambda: jax.block_until_ready(fn(q, k, mask)))
+    emit("kernel_sage_attention_4096x10x128", us,
+         f"gb_per_s={k.nbytes * 2 / (us / 1e6) / 1e9:.2f}")
+
+
+def bench_flash_attention_ref():
+    b, hq, hkv, s, dh = 1, 8, 2, 2048, 64
+    q = jnp.asarray(RNG.normal(size=(b, hq, s, dh)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(b, hkv, s, dh)).astype(np.float32))
+    fn = jax.jit(lambda q_, k_: ops.mha(q_, k_, k_, causal=True, impl="ref"))
+    out, us = timed(lambda: jax.block_until_ready(fn(q, k)))
+    flops = 4 * b * hq * s * s * dh
+    emit("kernel_flash_attention_2k_ref", us,
+         f"gflops_per_s={flops / (us / 1e6) / 1e9:.1f}")
+
+
+def bench_ssd_scan_ref():
+    b, L, H, P, N = 2, 2048, 8, 64, 128
+    x = jnp.asarray(RNG.normal(size=(b, L, H, P)).astype(np.float32))
+    dt = jnp.asarray((RNG.random((b, L, H)) * 0.1).astype(np.float32))
+    A = jnp.asarray(-RNG.random(H).astype(np.float32))
+    B = jnp.asarray(RNG.normal(size=(b, L, N)).astype(np.float32))
+    C = jnp.asarray(RNG.normal(size=(b, L, N)).astype(np.float32))
+    fn = jax.jit(lambda *a: ops.ssd(*a, chunk=128, impl="ref")[0])
+    out, us = timed(lambda: jax.block_until_ready(fn(x, dt, A, B, C)))
+    emit("kernel_ssd_scan_2k_ref", us,
+         f"tokens_per_s={b * L / (us / 1e6):.0f}")
+
+
+def bench_roofline():
+    """Read the dry-run artifacts and print the roofline rows (one per
+    compiled arch × shape baseline on the single-pod mesh)."""
+    base = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+    rows = 0
+    for path in sorted(glob.glob(os.path.join(base, "*__16x16.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("status") != "compiled" or "t_compute_s" not in d:
+            continue
+        rows += 1
+        emit(f"roofline_{d['arch']}_{d['shape']}",
+             d.get("compile_seconds", 0) * 1e6,
+             f"t_compute_ms={d['t_compute_s'] * 1e3:.2f};"
+             f"t_memory_ms={d['t_memory_s'] * 1e3:.2f};"
+             f"t_collective_ms={d['t_collective_s'] * 1e3:.2f};"
+             f"dominant={d['dominant']};useful={d['useful_flops_ratio']:.2f}")
+    if rows == 0:
+        emit("roofline_table", 0.0, "no_dryrun_artifacts_yet_run_repro.launch.dryrun")
+
+
+ALL_KERNELS = [
+    bench_neighbor_mean,
+    bench_sage_attention,
+    bench_flash_attention_ref,
+    bench_ssd_scan_ref,
+    bench_roofline,
+]

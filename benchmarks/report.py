@@ -1,0 +1,72 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run artifacts:  PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_all():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(BASE, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | status | compile s | args GiB/dev | temp GiB/dev |",
+           "|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if "shape" not in d:
+            continue   # linksage-gnn auxiliary artifact has its own format
+        ma = d.get("memory_analysis", {})
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {d.get('status')} "
+            f"| {d.get('compile_seconds', 0):.1f} "
+            f"| {fmt_bytes(ma.get('argument_size', 0))} "
+            f"| {fmt_bytes(ma.get('temp_size', 0))} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | t_compute ms | t_memory ms | t_collective ms | "
+           "dominant | useful | coll GiB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        if d.get("mesh") != "16x16" or "t_compute_s" not in d or "shape" not in d:
+            continue
+        out.append(
+            f"| {d['arch']} | {d['shape']} "
+            f"| {d['t_compute_s'] * 1e3:.1f} | {d['t_memory_s'] * 1e3:.1f} "
+            f"| {d['t_collective_s'] * 1e3:.1f} | {d['dominant']} "
+            f"| {d['useful_flops_ratio']:.2f} "
+            f"| {fmt_bytes(d['coll_bytes_per_dev'])} |")
+    return "\n".join(out)
+
+
+def summarize(rows):
+    done = [d for d in rows if d.get("status") == "compiled"]
+    failed = [d for d in rows if d.get("status") == "FAILED"]
+    print(f"# {len(done)} compiled, {len(failed)} failed, {len(rows)} total\n")
+    if failed:
+        print("## FAILURES")
+        for d in failed:
+            print(f"- {d['arch']} × {d['shape']} × {d['mesh']}: {d.get('error')}")
+        print()
+    print("## §Dry-run\n")
+    print(dryrun_table(rows))
+    print("\n## §Roofline (single-pod 16x16)\n")
+    print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    summarize(load_all())

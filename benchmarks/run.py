@@ -1,0 +1,38 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on benchmark name")
+    ap.add_argument("--skip-slow", action="store_true",
+                    help="skip the GNN-training benchmarks (tables 3-10)")
+    args = ap.parse_args()
+
+    from benchmarks.kernels_bench import ALL_KERNELS
+    from benchmarks.tables import ALL_TABLES
+
+    benches = list(ALL_TABLES) + list(ALL_KERNELS)
+    if args.skip_slow:
+        benches = [b for b in benches if b.__name__ == "bench_graph_construction"]
+        benches += list(ALL_KERNELS)
+    if args.only:
+        benches = [b for b in benches if args.only in b.__name__]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in dict.fromkeys(benches):
+        try:
+            bench()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{bench.__name__},nan,FAILED")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

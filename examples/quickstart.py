@@ -1,0 +1,43 @@
+"""Quickstart: build a job-marketplace graph, train LinkSAGE, evaluate
+retrieval, save a checkpoint.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.linksage import CONFIG
+from repro.core.eval import retrieval_eval
+from repro.core.linksage import LinkSAGETrainer
+from repro.data import GraphGenConfig, generate_job_marketplace_graph
+
+
+def main():
+    print("== LinkSAGE quickstart ==")
+    graph, truth = generate_job_marketplace_graph(
+        GraphGenConfig(num_members=600, num_jobs=180, seed=0))
+    census = graph.census()
+    print(f"graph: {census['total_nodes']} nodes, {census['total_edges']} edges")
+    for k, v in sorted(census["edges"].items()):
+        print(f"  {k:22s} {v}")
+
+    trainer = LinkSAGETrainer(CONFIG, graph, seed=0)
+    print("\ntraining GNN encoder–decoder (in-batch negatives)…")
+    hist = trainer.train(200, batch_size=64, verbose=True, log_every=40)
+    print(f"loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+    m_emb = trainer.embed_nodes("member", np.arange(600))
+    j_emb = trainer.embed_nodes("job", np.arange(180))
+    src, dst = truth["engagements"]
+    res = retrieval_eval(m_emb, j_emb, src, dst, k=10)
+    rng = np.random.default_rng(0)
+    rand = retrieval_eval(rng.normal(size=m_emb.shape),
+                          rng.normal(size=j_emb.shape), src, dst, k=10)
+    print(f"\nrecall@10: linksage={res['recall']:.3f}  random={rand['recall']:.3f}")
+
+    path = save_checkpoint("checkpoints/quickstart", 200, trainer.state.params)
+    print(f"checkpoint saved to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Batched serving demo: prefill a batch of prompts, then decode with the
+production serve_step (KV caches / SSM states), for any --arch smoke config.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch llama3-8b --tokens 32
+    PYTHONPATH=src python examples/serve_decode.py --arch mamba2-780m
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import model_init
+from repro.models.transformer import decode_step, prefill
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                       (args.batch, args.prompt_len)), jnp.int32)
+
+    print(f"prefilling {args.batch}×{args.prompt_len} ({cfg.name})…")
+    t0 = time.time()
+    logits, state = prefill(params, cfg, prompts,
+                            max_seq=args.prompt_len + args.tokens)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    print(f"prefill: {time.time() - t0:.2f}s")
+
+    dstep = jax.jit(lambda p, t, s: decode_step(p, cfg, t, s))
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.tokens - 1):
+        logits, state = dstep(params, tok, state)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = np.stack([np.asarray(t) for t in out], axis=1)
+    print(f"decoded {args.tokens - 1} steps × {args.batch} seqs in {dt:.2f}s "
+          f"({(args.tokens - 1) * args.batch / dt:.1f} tok/s)")
+    print("sample token ids:", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end LM training driver: a ~100M-parameter llama-family model
+trained for a few hundred steps on synthetic bigram data, using the
+production train_step (remat, chunked CE, AdamW, grad clip).
+
+    PYTHONPATH=src python examples/train_lm_100m.py --steps 300
+
+The default geometry is ~103M params (d=768, 12L, GQA 12/4, vocab 32000).
+CPU throughput is the limiter; --steps 20 for a smoke pass.
+"""
+import argparse
+import time
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.base import ArchConfig
+from repro.configs import get_smoke_config
+from repro.data.lm_data import SyntheticTokenStream
+from repro.launch.steps import make_train_step
+from repro.models import model_init
+from repro.nn import param_count
+from repro.optim import adamw_init
+
+LLAMA_100M = ArchConfig(
+    name="llama-100m", family="dense", source="examples (llama3-family geometry)",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=4, d_ff=2048,
+    vocab_size=32000, rope_theta=500_000.0,
+    param_dtype="float32", act_dtype="float32", remat="none",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + 20 steps (CI-speed)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("llama3_8b") if args.smoke else LLAMA_100M
+    steps = 20 if args.smoke else args.steps
+
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    print(f"model: {cfg.name}  params={param_count(params):,}")
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg, lr=args.lr))
+
+    stream = SyntheticTokenStream(cfg.vocab_size, seed=0)
+    t_start = time.time()
+    for i in range(steps):
+        toks = stream.sample(args.batch, args.seq)
+        batch = {"tokens": jax.numpy.asarray(toks[:, :-1]),
+                 "labels": jax.numpy.asarray(toks[:, 1:])}
+        params, opt, m = step_fn(params, opt, batch)
+        if i % 20 == 0 or i == steps - 1:
+            dt = time.time() - t_start
+            print(f"step {i:4d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.2f}  ({dt:.0f}s elapsed)")
+    save_checkpoint("checkpoints/lm100m", steps, params)
+    print("done; checkpoint saved.")
+
+
+if __name__ == "__main__":
+    main()

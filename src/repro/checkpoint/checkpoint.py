@@ -1,0 +1,65 @@
+"""Pytree checkpointing: flat-keyed .npz payload + json manifest.
+
+Layout on disk::
+
+    <dir>/step_000100/
+        manifest.json   # treedef repr, flat key order, dtypes, shapes
+        arrays.npz      # one entry per leaf, keyed by flat path
+
+Restore rebuilds the exact pytree structure; a structural mismatch against a
+template is a hard error (guards against silent config drift).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [(jax.tree_util.keystr(path), leaf) for path, leaf in flat[0]]
+    return leaves, flat[1]
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    path = os.path.join(directory, f"step_{step:06d}")
+    os.makedirs(path, exist_ok=True)
+    leaves, _ = _flatten_with_paths(tree)
+    arrays = {key: np.asarray(leaf) for key, leaf in leaves}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": [k for k, _ in leaves],
+        "shapes": {k: list(np.asarray(v).shape) for k, v in leaves},
+        "dtypes": {k: str(np.asarray(v).dtype) for k, v in leaves},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def load_checkpoint(directory: str, step: int, template):
+    """Restore into the structure of ``template`` (values are replaced)."""
+    path = os.path.join(directory, f"step_{step:06d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten_with_paths(template)
+    keys = [k for k, _ in leaves]
+    if keys != manifest["keys"]:
+        missing = set(manifest["keys"]) ^ set(keys)
+        raise ValueError(f"checkpoint structure mismatch; differing keys: {sorted(missing)[:8]}")
+    restored = [data[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)$", d))]
+    return max(steps) if steps else None

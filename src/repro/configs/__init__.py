@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    ArchConfig,
+    InputShape,
+    all_arch_configs,
+    canonical_arch_id,
+    get_config,
+    get_smoke_config,
+    smoke_reduce,
+)
+
+__all__ = [
+    "ARCH_IDS",
+    "INPUT_SHAPES",
+    "ArchConfig",
+    "InputShape",
+    "all_arch_configs",
+    "canonical_arch_id",
+    "get_config",
+    "get_smoke_config",
+    "smoke_reduce",
+]

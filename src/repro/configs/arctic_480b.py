@@ -1,0 +1,24 @@
+"""Snowflake Arctic 480B — 128-expert top-2 MoE with parallel dense residual
+FFN [hf:Snowflake/snowflake-arctic-base]."""
+from repro.configs.base import ArchConfig, smoke_reduce
+
+CONFIG = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    source="hf:Snowflake/snowflake-arctic-base",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,                 # per-expert FFN width
+    vocab_size=32000,
+    num_experts=128,
+    experts_per_token=2,
+    moe_dense_residual=True,   # dense FFN in parallel with routed experts
+    d_ff_dense=4864,
+    rope_theta=1_000_000.0,
+)
+
+
+def smoke():
+    return smoke_reduce(CONFIG)

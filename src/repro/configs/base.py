@@ -1,0 +1,208 @@
+"""Architecture/config dataclasses and the --arch registry.
+
+Each assigned architecture lives in ``repro/configs/<id>.py`` and exposes
+``CONFIG`` (the exact published configuration, cited) plus ``smoke()`` (a
+reduced same-family variant for CPU tests: <=2 layers, d_model<=512,
+<=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | vlm | hybrid | ssm | audio
+    source: str                      # citation (arXiv id / model card)
+    num_layers: int
+    d_model: int
+    num_heads: int                   # 0 for attention-free families
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # attention details
+    head_dim: int = 0                # derived (d_model//num_heads) when 0
+    qkv_bias: bool = False
+    rope_theta: float = 500_000.0
+    sliding_window: int = 0          # 0 = full attention (long_500k swaps in 8192)
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_dense_residual: bool = False # arctic: dense FFN in parallel with MoE
+    moe_every: int = 1               # layer period of MoE FFNs (jamba: 2)
+    d_ff_dense: int = 0              # width of the arctic parallel dense FFN
+
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    attn_layer_period: int = 0       # jamba: one attention layer per this many
+    attn_layer_offset: int = 0
+
+    # modality frontend (stub — precomputed embeddings arrive via input_specs)
+    modality: str = "text"           # text | vision | audio
+    num_prefix_embeddings: int = 0   # patch/frame embeddings per example
+
+    # misc
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    param_dtype: str = "bfloat16"    # full-scale dry-run dtype
+    act_dtype: str = "bfloat16"
+
+    # LinkSAGE integration (paper technique part B): condition the ranker
+    # backbone on precomputed GNN member/job embeddings.
+    gnn_conditioning: bool = False
+    gnn_embed_dim: int = 128
+
+    # remat policy for train_step: none | block | full
+    remat: str = "block"
+    # Tensor parallelism over "model".  False = pure data parallel (the right
+    # choice for sub-1B models where TP psums dominate — §Perf lever).
+    tp: bool = True
+    # ZeRO-3/FSDP: shard weight contraction dims over "data" (all-gather per
+    # block).  Right for big-model training; wrong for serving (per-token
+    # weight all-gathers) and for small models where GSPMD all-reduces
+    # activation-sized partials instead (§Perf lever: fsdp=False).
+    fsdp: bool = True
+    # Megatron-SP-style sequence sharding of the residual stream between
+    # blocks: the saved per-block activations shard over "model", cutting the
+    # remat residual stack by the model-axis size (§Perf lever).
+    seq_shard: bool = False
+    # lax.scan unroll factor for the block stack.  The dry-run sets this to
+    # num_blocks (full unroll) so cost_analysis counts every layer — XLA's
+    # HloCostAnalysis counts a while-loop body once, which would undercount
+    # FLOPs/collectives by the trip count.
+    scan_unroll: int = 1
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.act_dtype)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def is_attn_layer(self, i: int) -> bool:
+        if self.family == "ssm":
+            return False
+        if self.attn_layer_period:
+            return i % self.attn_layer_period == self.attn_layer_offset
+        return True
+
+    def is_moe_layer(self, i: int) -> bool:
+        return self.num_experts > 0 and (i % self.moe_every == self.moe_every - 1)
+
+    def with_sliding_window(self, window: int) -> "ArchConfig":
+        return replace(self, sliding_window=window)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "llama3_8b",
+    "arctic_480b",
+    "pixtral_12b",
+    "jamba_1_5_large_398b",
+    "mamba2_780m",
+    "phi3_5_moe_42b",
+    "musicgen_medium",
+    "yi_6b",
+    "qwen1_5_32b",
+    "codeqwen1_5_7b",
+]
+
+# CLI aliases (--arch uses the dashed public ids)
+_ALIASES = {
+    "llama3-8b": "llama3_8b",
+    "arctic-480b": "arctic_480b",
+    "pixtral-12b": "pixtral_12b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "mamba2-780m": "mamba2_780m",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "phi3.5-moe-42b": "phi3_5_moe_42b",
+    "musicgen-medium": "musicgen_medium",
+    "yi-6b": "yi_6b",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "linksage": "linksage",
+}
+
+
+def canonical_arch_id(name: str) -> str:
+    key = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    return key
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical_arch_id(name)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical_arch_id(name)}")
+    return mod.smoke()
+
+
+def all_arch_configs() -> dict:
+    return {aid: get_config(aid) for aid in ARCH_IDS}
+
+
+def smoke_reduce(cfg: ArchConfig, **overrides) -> ArchConfig:
+    """Generic reduction preserving family structure (2 layers, d<=512, <=4 experts)."""
+    d_model = min(cfg.d_model, 256)
+    num_heads = min(cfg.num_heads, 4) if cfg.num_heads else 0
+    ratio = max(cfg.num_heads // max(cfg.num_kv_heads, 1), 1) if cfg.num_heads else 1
+    num_kv = max(num_heads // min(ratio, num_heads), 1) if num_heads else 0
+    kw = dict(
+        num_layers=2,
+        d_model=d_model,
+        num_heads=num_heads,
+        num_kv_heads=num_kv,
+        head_dim=(d_model // num_heads) if num_heads else 0,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        d_ff_dense=min(cfg.d_ff_dense, 512) if cfg.d_ff_dense else 0,
+        vocab_size=min(cfg.vocab_size, 1024),
+        num_experts=min(cfg.num_experts, 4) if cfg.num_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2) if cfg.experts_per_token else 0,
+        ssm_state=min(cfg.ssm_state, 32) if cfg.ssm_state else 0,
+        ssm_head_dim=min(cfg.ssm_head_dim, 32) if cfg.ssm_head_dim else 0,
+        num_prefix_embeddings=min(cfg.num_prefix_embeddings, 16),
+        attn_layer_period=min(cfg.attn_layer_period, 2) if cfg.attn_layer_period else 0,
+        attn_layer_offset=min(cfg.attn_layer_offset, 1) if cfg.attn_layer_period else 0,
+        moe_every=min(cfg.moe_every, 2),
+        param_dtype="float32",
+        act_dtype="float32",
+        remat="none",
+    )
+    kw.update(overrides)
+    return replace(cfg, **kw)

@@ -1,0 +1,21 @@
+"""CodeQwen1.5-7B — qwen1.5-architecture dense decoder
+[hf:Qwen/CodeQwen1.5-7B]."""
+from repro.configs.base import ArchConfig, smoke_reduce
+
+CONFIG = ArchConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    source="hf:Qwen/CodeQwen1.5-7B",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,           # MHA (assigned shape: kv=32)
+    d_ff=13440,
+    vocab_size=92416,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)
+
+
+def smoke():
+    return smoke_reduce(CONFIG)

@@ -1,0 +1,28 @@
+"""Jamba 1.5 Large 398B — hybrid Mamba+attention, 1:7 interleave, 16-expert
+top-2 MoE every other layer [arXiv:2403.19887]."""
+from repro.configs.base import ArchConfig, smoke_reduce
+
+CONFIG = ArchConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    source="arXiv:2403.19887",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    num_experts=16,
+    experts_per_token=2,
+    moe_every=2,               # MoE FFN every other layer
+    attn_layer_period=8,       # 1 attention layer per 8 (1:7 mamba:attn)
+    attn_layer_offset=4,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    rope_theta=1_000_000.0,
+)
+
+
+def smoke():
+    return smoke_reduce(CONFIG, num_layers=2, attn_layer_period=2, attn_layer_offset=1)

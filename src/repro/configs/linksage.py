@@ -1,0 +1,44 @@
+"""LinkSAGE GNN configuration (the paper's own model, §4.2).
+
+Encoder: 2-hop GraphSAGE over the heterogeneous job-marketplace graph with
+per-node-type feature transforms and mean or attention aggregation.
+Decoder: in-batch negative dot-product (default), MLP, or cosine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    name: str = "linksage"
+    feat_dim: int = 64             # input feature dim (common across node types)
+    hidden_dim: int = 128
+    embed_dim: int = 128           # served embedding size
+    num_node_types: int = 6
+    fanouts: tuple = (10, 5)
+    aggregator: str = "mean"       # mean | attention  (paper supports both)
+    decoder: str = "inbatch"       # inbatch | mlp | cosine
+    num_sage_layers: int = 2
+    mlp_decoder_hidden: int = 128
+    cosine_scale: float = 10.0
+    # paper's in-batch decoder scores raw dot products; normalization is for
+    # the served EBR embeddings, not the training objective
+    l2_normalize: bool = False
+    dropout: float = 0.0
+    # production-scale table sizes (used ONLY by the dry-run ShapeDtypeStructs)
+    prod_num_members: int = 1_000_000_000
+    prod_num_jobs: int = 50_000_000
+
+    def with_aggregator(self, agg: str) -> "GNNConfig":
+        return replace(self, aggregator=agg)
+
+    def with_decoder(self, dec: str) -> "GNNConfig":
+        return replace(self, decoder=dec)
+
+
+CONFIG = GNNConfig()
+
+
+def smoke() -> GNNConfig:
+    return replace(CONFIG, hidden_dim=32, embed_dim=32, feat_dim=16, fanouts=(4, 3))

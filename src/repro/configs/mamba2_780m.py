@@ -1,0 +1,22 @@
+"""Mamba-2 780M — attention-free SSM with SSD (state-space duality)
+[arXiv:2405.21060]."""
+from repro.configs.base import ArchConfig, smoke_reduce
+
+CONFIG = ArchConfig(
+    name="mamba2-780m",
+    family="ssm",
+    source="arXiv:2405.21060",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,               # attention-free
+    num_kv_heads=0,
+    d_ff=0,                    # mamba2 block subsumes the FFN
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+)
+
+
+def smoke():
+    return smoke_reduce(CONFIG)

@@ -1,0 +1,31 @@
+"""MusicGen-medium — decoder-only transformer over EnCodec tokens
+[arXiv:2306.05284].
+
+Per the carve-out, the EnCodec conv codec / mel frontend is NOT implemented:
+``input_specs`` provides precomputed conditioning frame embeddings of shape
+[batch, num_prefix, d_model]; the decoder autoregresses over the 2048-entry
+codebook vocabulary.  Deviation noted in DESIGN.md: we use RoPE instead of
+MusicGen's learned sinusoidal embeddings (positional scheme is not the
+paper-under-reproduction's concern).
+"""
+from repro.configs.base import ArchConfig, smoke_reduce
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    source="arXiv:2306.05284",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,           # MHA
+    d_ff=6144,
+    vocab_size=2048,           # EnCodec codebook
+    norm="layernorm",
+    rope_theta=10_000.0,
+    modality="audio",
+    num_prefix_embeddings=256, # conditioning frames
+)
+
+
+def smoke():
+    return smoke_reduce(CONFIG)

@@ -1,0 +1,28 @@
+"""Pixtral 12B — pixtral-ViT frontend (stubbed) + mistral-nemo style decoder
+backbone [hf:mistralai/Pixtral-12B-2409].
+
+Per the carve-out, the vision encoder is NOT implemented: ``input_specs``
+provides precomputed patch embeddings of shape [batch, num_prefix, d_model]
+which the decoder consumes as a prefix.
+"""
+from repro.configs.base import ArchConfig, smoke_reduce
+
+CONFIG = ArchConfig(
+    name="pixtral-12b",
+    family="vlm",
+    source="hf:mistralai/Pixtral-12B-2409",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,              # mistral-nemo explicit head_dim (not d_model//heads)
+    d_ff=14336,
+    vocab_size=131072,
+    rope_theta=1_000_000.0,
+    modality="vision",
+    num_prefix_embeddings=1024,   # 1 image = 1024 patch embeddings (32x32)
+)
+
+
+def smoke():
+    return smoke_reduce(CONFIG)

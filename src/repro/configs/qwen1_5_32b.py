@@ -1,0 +1,20 @@
+"""Qwen1.5-32B — dense decoder with QKV bias [hf:Qwen/Qwen1.5-0.5B family]."""
+from repro.configs.base import ArchConfig, smoke_reduce
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    source="hf:Qwen/Qwen1.5-0.5B",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,           # MHA (assigned shape: kv=40)
+    d_ff=27392,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)
+
+
+def smoke():
+    return smoke_reduce(CONFIG)

@@ -1,0 +1,19 @@
+"""Yi-6B — llama-architecture dense decoder with GQA kv=4 [arXiv:2403.04652]."""
+from repro.configs.base import ArchConfig, smoke_reduce
+
+CONFIG = ArchConfig(
+    name="yi-6b",
+    family="dense",
+    source="arXiv:2403.04652",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    rope_theta=5_000_000.0,
+)
+
+
+def smoke():
+    return smoke_reduce(CONFIG)

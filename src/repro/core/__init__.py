@@ -1,0 +1,11 @@
+"""LinkSAGE core: the paper's contribution.
+
+  graph     — heterogeneous job-marketplace graph (§3)
+  sampler   — fixed-fanout multi-hop tiles (DeepGNN role, §4.1)
+  encoder   — GraphSAGE mean/attention encoder (§4.2)
+  decoder   — MLP / cosine / in-batch decoders + losses (§4.2)
+  linksage  — model assembly + link-prediction training (§4.3)
+  transfer  — frozen encoder → downstream DNN rankers (§5.1)
+  nearline  — nearline inference pipeline (§5.2, Figure 4)
+  eval      — offline proxies for the §7 A/B metrics
+"""

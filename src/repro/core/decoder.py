@@ -1,0 +1,64 @@
+"""GNN decoders + link-prediction losses (paper §4.2).
+
+Supported decoders:
+  * in-batch negatives:  score(i,j) = M_i · J_j over the full B×B grid,
+    y_ij = 1 on matched pairs; sigmoid cross-entropy (paper's Loss eq).
+  * MLP:     score = MLP(concat(m, j)) for explicit (m, j, label) tuples.
+  * cosine:  score = s · cos(m, j).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.linksage import GNNConfig
+
+
+def decoder_init(key, cfg: GNNConfig):
+    if cfg.decoder == "mlp":
+        return {"mlp": nn.mlp_init(key, 2 * cfg.embed_dim, cfg.mlp_decoder_hidden, 1)}
+    return {}
+
+
+def pair_scores(params, cfg: GNNConfig, m_emb, j_emb):
+    """Scores for aligned pairs: m_emb [B,e], j_emb [B,e] -> [B]."""
+    if cfg.decoder == "mlp":
+        x = jnp.concatenate([m_emb, j_emb], axis=-1)
+        return nn.mlp_apply(params["mlp"], x)[..., 0]
+    if cfg.decoder == "cosine":
+        m = m_emb / (jnp.linalg.norm(m_emb, axis=-1, keepdims=True) + 1e-6)
+        j = j_emb / (jnp.linalg.norm(j_emb, axis=-1, keepdims=True) + 1e-6)
+        return cfg.cosine_scale * jnp.sum(m * j, axis=-1)
+    return jnp.sum(m_emb * j_emb, axis=-1)
+
+
+def inbatch_score_matrix(m_emb, j_emb):
+    """Full B_m × B_j dot-product score grid (in-batch negative decoder)."""
+    return m_emb @ j_emb.T
+
+
+def sigmoid_ce(logits, labels):
+    """Numerically-stable sigmoid cross-entropy (paper's Loss equation)."""
+    zeros = jnp.zeros_like(logits)
+    return jnp.maximum(logits, zeros) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+
+
+def inbatch_loss(cfg: GNNConfig, m_emb, j_emb, pos_mask=None):
+    """Paper's in-batch negative loss: positives on the diagonal by default.
+
+    ``pos_mask`` ([B,B] 0/1) overrides the diagonal when the batch contains
+    duplicate members/jobs (y_ij from the label tuples).
+    """
+    scores = inbatch_score_matrix(m_emb, j_emb)
+    if cfg.decoder == "cosine":
+        scores = cfg.cosine_scale * scores
+    b = scores.shape[0]
+    y = jnp.eye(b, dtype=scores.dtype) if pos_mask is None else pos_mask.astype(scores.dtype)
+    return jnp.mean(sigmoid_ce(scores, y))
+
+
+def pairwise_loss(params, cfg: GNNConfig, m_emb, j_emb, labels):
+    """Explicit (member, job, label) tuple loss for the MLP/cosine decoders."""
+    logits = pair_scores(params, cfg, m_emb, j_emb)
+    return jnp.mean(sigmoid_ce(logits, labels.astype(logits.dtype)))

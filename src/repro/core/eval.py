@@ -1,0 +1,71 @@
+"""Offline evaluation: recall@k, AUC, per-segment metrics.
+
+These are the offline proxies for the paper's online A/B metrics (§7): the
+synthetic graph's ground-truth match function defines relevance, so recall
+and AUC measure exactly what the GNN is supposed to learn.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def recall_at_k(scores: np.ndarray, positives: list, k: int = 10) -> float:
+    """scores [num_members, num_jobs]; positives[i] = set of relevant job ids."""
+    hits, total = 0, 0
+    topk = np.argpartition(-scores, min(k, scores.shape[1] - 1), axis=1)[:, :k]
+    for i, pos in enumerate(positives):
+        if not pos:
+            continue
+        hits += len(set(topk[i].tolist()) & pos)
+        total += min(len(pos), k)
+    return hits / max(total, 1)
+
+
+def auc(labels: np.ndarray, scores: np.ndarray) -> float:
+    """Rank-based AUC (no sklearn dependency)."""
+    order = np.argsort(scores, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(scores) + 1)
+    # average ties
+    sorted_scores = scores[order]
+    i = 0
+    while i < len(sorted_scores):
+        j = i
+        while j + 1 < len(sorted_scores) and sorted_scores[j + 1] == sorted_scores[i]:
+            j += 1
+        if j > i:
+            ranks[order[i:j + 1]] = ranks[order[i:j + 1]].mean()
+        i = j + 1
+    pos = labels > 0
+    n_pos, n_neg = int(pos.sum()), int((~pos).sum())
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return (ranks[pos].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg)
+
+
+def retrieval_eval(member_emb: np.ndarray, job_emb: np.ndarray,
+                   eng_src: np.ndarray, eng_dst: np.ndarray,
+                   *, k: int = 10, segment_mask: np.ndarray | None = None):
+    """EBR-style evaluation: dot-product retrieval vs ground-truth engagements."""
+    positives = [set() for _ in range(member_emb.shape[0])]
+    for m, j in zip(eng_src, eng_dst):
+        positives[m].add(int(j))
+    scores = member_emb @ job_emb.T
+    members = [i for i, p in enumerate(positives) if p]
+    if segment_mask is not None:
+        members = [i for i in members if segment_mask[i]]
+    if not members:
+        return {"recall": 0.0, "num_members": 0}
+    sub = np.array(members)
+    r = recall_at_k(scores[sub], [positives[i] for i in sub], k=k)
+    return {"recall": r, "num_members": len(members)}
+
+
+def pairwise_auc_eval(score_fn, pos_pairs, neg_pairs):
+    """AUC over explicit positive/negative (member, job) pair lists."""
+    pm, pj = pos_pairs
+    nm, nj = neg_pairs
+    s_pos = score_fn(pm, pj)
+    s_neg = score_fn(nm, nj)
+    labels = np.concatenate([np.ones(len(s_pos)), np.zeros(len(s_neg))])
+    return auc(labels, np.concatenate([s_pos, s_neg]))

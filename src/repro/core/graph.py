@@ -1,0 +1,102 @@
+"""Heterogeneous job-marketplace graph (paper §3).
+
+Node types (Table 1): member, job, skill, title, company, position.
+Edge types (Table 2), stored directed with explicit reciprocals (§4.3 found
+bidirectional member↔title / member↔skill / member,job↔position edges
+optimal):
+
+    attribute edges   member→{skill,title,company,position}
+                      job→{skill,title,company,position}   (+ reverses)
+    engagement edges  member→job  (save/apply/click)
+    recruiter edges   job→member  (reach-outs)
+
+Storage is CSR per edge type (host-side numpy) — this plays the role of
+DeepGNN's graph engine: it owns topology + features and answers fixed-fanout
+sampling queries.  Device-side code only ever sees the padded tiles produced
+by :mod:`repro.core.sampler`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+NODE_TYPES = ["member", "job", "skill", "title", "company", "position"]
+NODE_TYPE_ID = {t: i for i, t in enumerate(NODE_TYPES)}
+NUM_NODE_TYPES = len(NODE_TYPES)
+
+# canonical directed edge types; reverses are added explicitly
+EDGE_TYPES = [
+    ("member", "skill"), ("member", "title"), ("member", "company"), ("member", "position"),
+    ("job", "skill"), ("job", "title"), ("job", "company"), ("job", "position"),
+    ("member", "job"),    # seeker engagement
+    ("job", "member"),    # recruiter interaction
+    # reciprocal attribute edges (graph densification, §4.3)
+    ("skill", "member"), ("title", "member"), ("company", "member"), ("position", "member"),
+    ("skill", "job"), ("title", "job"), ("company", "job"), ("position", "job"),
+]
+
+
+@dataclass
+class CSR:
+    """Compressed sparse rows for one directed edge type."""
+    indptr: np.ndarray    # [num_src + 1] int64
+    indices: np.ndarray   # [num_edges] int32 destination node ids (type-local)
+
+    @staticmethod
+    def from_edges(src: np.ndarray, dst: np.ndarray, num_src: int) -> "CSR":
+        order = np.argsort(src, kind="stable")
+        src_s, dst_s = src[order], dst[order]
+        counts = np.bincount(src_s, minlength=num_src)
+        indptr = np.zeros(num_src + 1, np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return CSR(indptr=indptr, indices=dst_s.astype(np.int32))
+
+    def neighbors(self, node: int) -> np.ndarray:
+        return self.indices[self.indptr[node]:self.indptr[node + 1]]
+
+    def degree(self, node: int) -> int:
+        return int(self.indptr[node + 1] - self.indptr[node])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+
+@dataclass
+class HeteroGraph:
+    """The job-marketplace graph: per-type features + per-edge-type CSR."""
+    num_nodes: dict                     # node_type -> int
+    features: dict                      # node_type -> [n, d_feat] float32
+    adj: dict = field(default_factory=dict)   # (src_t, dst_t) -> CSR
+    feat_dim: int = 0
+
+    def __post_init__(self):
+        if self.features:
+            self.feat_dim = next(iter(self.features.values())).shape[1]
+
+    def add_edges(self, src_type: str, dst_type: str, src: np.ndarray, dst: np.ndarray,
+                  *, reciprocal: bool = False) -> None:
+        assert src_type in NODE_TYPE_ID and dst_type in NODE_TYPE_ID
+        self.adj[(src_type, dst_type)] = CSR.from_edges(
+            np.asarray(src), np.asarray(dst), self.num_nodes[src_type])
+        if reciprocal:
+            self.adj[(dst_type, src_type)] = CSR.from_edges(
+                np.asarray(dst), np.asarray(src), self.num_nodes[dst_type])
+
+    def edge_count(self, src_type: str, dst_type: str) -> int:
+        key = (src_type, dst_type)
+        return self.adj[key].num_edges if key in self.adj else 0
+
+    def relations_from(self, node_type: str):
+        """Edge types outgoing from ``node_type`` present in this graph."""
+        return [(s, d) for (s, d) in self.adj if s == node_type]
+
+    def census(self) -> dict:
+        """Table 1 + Table 2 style statistics."""
+        return {
+            "nodes": dict(self.num_nodes),
+            "edges": {f"{s}->{d}": csr.num_edges for (s, d), csr in self.adj.items()},
+            "total_nodes": int(sum(self.num_nodes.values())),
+            "total_edges": int(sum(c.num_edges for c in self.adj.values())),
+        }

@@ -1,0 +1,330 @@
+"""Nearline GNN inference framework (paper §5.2, Figure 4).
+
+Faithfully reproduces the production dataflow without the JVM/Kafka stack:
+
+  Kafka topics            → :class:`Topic` (append log + consumer offsets)
+  NoSQL feature stores    → :class:`NoSQLStore` (keyed store with I/O counters)
+  neighbor stores/type    → :class:`NeighborStore` (bounded per-node lists)
+  sequential join         → :meth:`NearlineInference._sequential_join`
+  nearline GNN inference  → batched jitted encoder on the joined tiles
+  online feature store    → :class:`EmbeddingStore` (embedding + timestamp)
+
+Triggers (paper): (1) a recruiter creates a job posting; (2) new neighbors
+(members who applied/saved/clicked) arrive on an existing job.  Member
+embeddings refresh symmetrically on engagement/profile events.
+
+The "stateful job marketplace graph" emerges from the stores: during
+inference only neighbors + their input features are needed — not a full
+graph engine with temporal processing/sampling (§5.2) — which is exactly
+what the sequential join provides.
+"""
+from __future__ import annotations
+
+import time as _time
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.linksage import GNNConfig
+from repro.core.graph import NODE_TYPE_ID, NODE_TYPES
+from repro.core.sampler import ComputeGraphBatch
+
+
+# --------------------------------------------------------------- messaging
+
+
+@dataclass
+class Event:
+    time: float                      # simulated seconds
+    kind: str                        # job_created | engagement | recruiter_interaction | member_update
+    payload: dict
+
+
+class Topic:
+    """Kafka-topic stand-in: append-only log with per-consumer offsets."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.log: list[Event] = []
+        self.offsets: dict[str, int] = defaultdict(int)
+
+    def publish(self, event: Event) -> None:
+        self.log.append(event)
+
+    def poll(self, consumer: str, max_events: int, *, upto_time: float | None = None):
+        start = self.offsets[consumer]
+        out = []
+        for ev in self.log[start:start + max_events]:
+            if upto_time is not None and ev.time > upto_time:
+                break
+            out.append(ev)
+        self.offsets[consumer] += len(out)
+        return out
+
+    def lag(self, consumer: str) -> int:
+        return len(self.log) - self.offsets[consumer]
+
+
+# ------------------------------------------------------------------ stores
+
+
+class NoSQLStore:
+    """In-memory NoSQL store with read/write accounting (I/O bottleneck
+    analysis, §5.2 challenge (c))."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._d: dict = {}
+        self.reads = 0
+        self.writes = 0
+
+    def put(self, key, value) -> None:
+        self._d[key] = value
+        self.writes += 1
+
+    def get(self, key, default=None):
+        self.reads += 1
+        return self._d.get(key, default)
+
+    def multi_get(self, keys):
+        self.reads += len(keys)
+        return [self._d.get(k) for k in keys]
+
+    def __contains__(self, key):
+        return key in self._d
+
+    def __len__(self):
+        return len(self._d)
+
+
+class NeighborStore:
+    """Per-edge-type bounded neighbor lists keyed by (node_type, id).
+
+    One store monitors job neighbors per node type (paper: "multiple feature
+    stores that monitor job neighbors per node type").
+    """
+
+    def __init__(self, max_neighbors: int = 64):
+        self.stores: dict = {}
+        self.max_neighbors = max_neighbors
+
+    def _store(self, src_type: str, dst_type: str) -> NoSQLStore:
+        key = (src_type, dst_type)
+        if key not in self.stores:
+            self.stores[key] = NoSQLStore(f"neigh:{src_type}->{dst_type}")
+        return self.stores[key]
+
+    def add(self, src_type: str, src_id: int, dst_type: str, dst_id: int) -> None:
+        st = self._store(src_type, dst_type)
+        cur = st.get(src_id) or []
+        cur = (cur + [dst_id])[-self.max_neighbors:]
+        st.put(src_id, cur)
+
+    def neighbors(self, node_type: str, node_id: int):
+        """Merged (dst_type_id, dst_id) neighbor list across edge types."""
+        out = []
+        for (s, d), st in self.stores.items():
+            if s != node_type:
+                continue
+            ids = st.get(node_id)
+            if ids:
+                tid = NODE_TYPE_ID[d]
+                out.extend((tid, i) for i in ids)
+        return out
+
+
+class EmbeddingStore(NoSQLStore):
+    """Online feature store: (node_type, id) -> (embedding, refresh_time)."""
+
+    def put_embedding(self, node_type: str, node_id: int, emb: np.ndarray,
+                      t: float) -> None:
+        self.put((node_type, int(node_id)), (emb, t))
+
+    def get_embedding(self, node_type: str, node_id: int):
+        return self.get((node_type, int(node_id)))
+
+
+# -------------------------------------------------------------- inference
+
+
+@dataclass
+class NearlineMetrics:
+    events_processed: int = 0
+    batches: int = 0
+    nodes_refreshed: int = 0
+    encoder_seconds: float = 0.0
+    staleness: list = field(default_factory=list)   # event.time -> refresh time deltas
+    join_reads: int = 0
+
+    def summary(self) -> dict:
+        st = np.array(self.staleness) if self.staleness else np.array([0.0])
+        return {
+            "events": self.events_processed,
+            "batches": self.batches,
+            "nodes_refreshed": self.nodes_refreshed,
+            "encoder_ms_per_batch": 1e3 * self.encoder_seconds / max(self.batches, 1),
+            "staleness_p50_s": float(np.percentile(st, 50)),
+            "staleness_p99_s": float(np.percentile(st, 99)),
+            "join_reads": self.join_reads,
+        }
+
+
+class NearlineInference:
+    """The nearline pipeline: poll → update stores → sequential join → encode
+    → push embeddings (Figure 4)."""
+
+    def __init__(self, cfg: GNNConfig, encoder_params, *, fanouts=None,
+                 micro_batch: int = 64, max_neighbors: int = 64, seed: int = 0):
+        self.cfg = cfg
+        self.params = encoder_params
+        self.fanouts = fanouts or cfg.fanouts
+        self.micro_batch = micro_batch
+        self.topic = Topic("job-marketplace-events")
+        self.neighbor_store = NeighborStore(max_neighbors)
+        self.feature_store = NoSQLStore("node-features")      # input features per node
+        self.embedding_store = EmbeddingStore("gnn-embeddings")
+        self.metrics = NearlineMetrics()
+        self.rng = np.random.default_rng(seed)
+        self._encode = None  # jitted lazily (needs tile shapes)
+
+    # ---- store bootstrap (initial graph snapshot load) -------------------
+    def bootstrap_from_graph(self, graph) -> None:
+        for ntype in NODE_TYPES:
+            feats = graph.features[ntype]
+            for i in range(feats.shape[0]):
+                self.feature_store.put((NODE_TYPE_ID[ntype], i), feats[i])
+        for (s, d), csr in graph.adj.items():
+            for src in range(len(csr.indptr) - 1):
+                for dst in csr.neighbors(src):
+                    self.neighbor_store.add(s, src, d, int(dst))
+
+    # ---- event application ----------------------------------------------
+    def _apply_event(self, ev: Event):
+        touched = []
+        p = ev.payload
+        if ev.kind == "job_created":
+            self.feature_store.put((NODE_TYPE_ID["job"], p["job_id"]), p["features"])
+            for attr in ("title", "company", "position", "skill"):
+                if attr in p:
+                    self.neighbor_store.add("job", p["job_id"], attr, p[attr])
+                    self.neighbor_store.add(attr, p[attr], "job", p["job_id"])
+            touched.append(("job", p["job_id"], ev.time))
+        elif ev.kind == "engagement":                  # member saved/applied/clicked
+            self.neighbor_store.add("member", p["member_id"], "job", p["job_id"])
+            touched.append(("job", p["job_id"], ev.time))
+            touched.append(("member", p["member_id"], ev.time))
+        elif ev.kind == "recruiter_interaction":       # recruiter reached out
+            self.neighbor_store.add("job", p["job_id"], "member", p["member_id"])
+            touched.append(("job", p["job_id"], ev.time))
+        elif ev.kind == "member_update":
+            self.feature_store.put((NODE_TYPE_ID["member"], p["member_id"]), p["features"])
+            touched.append(("member", p["member_id"], ev.time))
+        return touched
+
+    # ---- sequential join: node -> neighbors -> neighbor features ---------
+    def _fetch_feats(self, tid: int, nid: int) -> np.ndarray:
+        f = self.feature_store.get((tid, nid))
+        self.metrics.join_reads += 1
+        if f is None:
+            f = np.zeros(self.cfg.feat_dim, np.float32)
+        return f
+
+    def _sample_neighbors(self, tid: int, nid: int, fanout: int):
+        merged = self.neighbor_store.neighbors(NODE_TYPES[tid], nid)
+        ty = np.zeros(fanout, np.int32)
+        ids = np.zeros(fanout, np.int32)
+        mask = np.zeros(fanout, np.float32)
+        if merged:
+            picks = self.rng.integers(0, len(merged), fanout)
+            for slot, pk in enumerate(picks):
+                t, i = merged[pk]
+                ty[slot], ids[slot], mask[slot] = t, i, 1.0
+        return ty, ids, mask
+
+    def _sequential_join(self, nodes) -> ComputeGraphBatch:
+        f1, f2 = self.fanouts
+        b = len(nodes)
+        d = self.cfg.feat_dim
+        q_feat = np.zeros((b, d), np.float32)
+        q_type = np.zeros(b, np.int32)
+        n1_feat = np.zeros((b, f1, d), np.float32)
+        n1_type = np.zeros((b, f1), np.int32)
+        n1_mask = np.zeros((b, f1), np.float32)
+        n2_feat = np.zeros((b, f1, f2, d), np.float32)
+        n2_type = np.zeros((b, f1, f2), np.int32)
+        n2_mask = np.zeros((b, f1, f2), np.float32)
+        for r, (ntype, nid) in enumerate(nodes):
+            tid = NODE_TYPE_ID[ntype]
+            q_type[r] = tid
+            q_feat[r] = self._fetch_feats(tid, nid)
+            ty, ids, m = self._sample_neighbors(tid, nid, f1)
+            n1_type[r], n1_mask[r] = ty, m
+            for s in range(f1):
+                if m[s] == 0:
+                    continue
+                n1_feat[r, s] = self._fetch_feats(ty[s], ids[s])
+                ty2, ids2, m2 = self._sample_neighbors(ty[s], ids[s], f2)
+                n2_type[r, s], n2_mask[r, s] = ty2, m2
+                for u in range(f2):
+                    if m2[u]:
+                        n2_feat[r, s, u] = self._fetch_feats(ty2[u], ids2[u])
+        return ComputeGraphBatch(q_feat, q_type, n1_feat, n1_type, n1_mask,
+                                 n2_feat, n2_type, n2_mask)
+
+    # ---- the nearline loop ------------------------------------------------
+    def process(self, *, upto_time: float | None = None, max_batches: int = 10**9,
+                clock: float | None = None) -> int:
+        """Drain pending events in micro-batches; returns #events handled.
+
+        ``clock`` is the simulated wall time when processing happens (for
+        staleness accounting); defaults to each event's own time + a small
+        pipeline delay, modelling the few-seconds nearline lag.
+        """
+        from repro.core.linksage import _to_jnp  # local import (cycle)
+        from repro.core import encoder as enc
+
+        total = 0
+        for _ in range(max_batches):
+            events = self.topic.poll("nearline", self.micro_batch, upto_time=upto_time)
+            if not events:
+                break
+            touched: dict = {}
+            for ev in events:
+                for (ntype, nid, t) in self._apply_event(ev):
+                    touched[(ntype, nid)] = t   # newest trigger wins
+            nodes = list(touched.keys())
+            pad = (-len(nodes)) % 8 if len(nodes) % 8 else 0
+            tile = self._sequential_join(nodes + nodes[:1] * pad)
+            t0 = _time.perf_counter()
+            emb = np.asarray(enc.encoder_apply(self.params, self.cfg, _to_jnp(tile)))
+            self.metrics.encoder_seconds += _time.perf_counter() - t0
+            refresh_time = (clock if clock is not None
+                            else max(ev.time for ev in events) + 2.0)
+            for r, (ntype, nid) in enumerate(nodes):
+                self.embedding_store.put_embedding(ntype, nid, emb[r], refresh_time)
+                self.metrics.staleness.append(refresh_time - touched[(ntype, nid)])
+            self.metrics.events_processed += len(events)
+            self.metrics.batches += 1
+            self.metrics.nodes_refreshed += len(nodes)
+            total += len(events)
+        return total
+
+
+class OfflineBatchInference:
+    """The pre-nearline baseline (§5.2): daily batch job — embeddings refresh
+    only at day boundaries, so new jobs wait up to 24 h (Table 10 control)."""
+
+    def __init__(self, nearline: NearlineInference, *, period_s: float = 86_400.0):
+        self.inner = nearline
+        self.period = period_s
+        self.last_run = 0.0
+
+    def maybe_run(self, now: float) -> int:
+        ran = 0
+        while self.last_run + self.period <= now:
+            self.last_run += self.period
+            ran += self.inner.process(upto_time=self.last_run, clock=self.last_run)
+        return ran

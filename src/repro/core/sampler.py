@@ -1,0 +1,184 @@
+"""Multi-hop fixed-fanout neighborhood sampler (the DeepGNN role, §4.1/§4.3).
+
+TPU adaptation (see DESIGN.md §3): instead of ragged gather/scatter compute
+graphs, every batch of query nodes becomes a *fixed-shape padded tile*:
+
+    hop0   q_feat  [B, d]          q_type  [B]
+    hop1   n1_feat [B, F1, d]      n1_type [B, F1]      n1_mask [B, F1]
+    hop2   n2_feat [B, F1, F2, d]  n2_type [B, F1, F2]  n2_mask [B, F1, F2]
+
+Neighbors are sampled uniformly (or degree-weighted) *across all outgoing
+edge types* of a node; heterogeneity is preserved by carrying the neighbor's
+node-type id, which selects the per-type feature transform in the encoder.
+A merged adjacency (one CSR per node type whose entries are (dst_type,
+dst_id) pairs) is precomputed so sampling is vectorized numpy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.graph import NODE_TYPES, NODE_TYPE_ID, HeteroGraph
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    fanouts: tuple = (10, 5)          # (hop1, hop2)
+    strategy: str = "uniform"         # uniform | degree_weighted
+    seed: int = 0
+
+
+class ComputeGraphBatch(NamedTuple):
+    """Padded 2-hop tile; arrays are numpy on the host, moved to device whole."""
+    q_feat: np.ndarray
+    q_type: np.ndarray
+    n1_feat: np.ndarray
+    n1_type: np.ndarray
+    n1_mask: np.ndarray
+    n2_feat: np.ndarray
+    n2_type: np.ndarray
+    n2_mask: np.ndarray
+
+
+class MergedAdjacency:
+    """Per-node-type merged CSR over all outgoing edge types."""
+
+    def __init__(self, graph: HeteroGraph):
+        self.graph = graph
+        self.merged = {}
+        for ntype in NODE_TYPES:
+            rels = graph.relations_from(ntype)
+            n = graph.num_nodes[ntype]
+            if not rels:
+                self.merged[ntype] = None
+                continue
+            per_rel = [graph.adj[r] for r in rels]
+            counts = np.zeros(n, np.int64)
+            for csr in per_rel:
+                counts += np.diff(csr.indptr)
+            indptr = np.zeros(n + 1, np.int64)
+            np.cumsum(counts, out=indptr[1:])
+            total = int(indptr[-1])
+            dst_id = np.empty(total, np.int32)
+            dst_ty = np.empty(total, np.int8)
+            cursor = indptr[:-1].copy()
+            for (s, d), csr in zip(rels, per_rel):
+                deg = np.diff(csr.indptr)
+                tid = NODE_TYPE_ID[d]
+                for node in np.nonzero(deg)[0]:
+                    a, b = csr.indptr[node], csr.indptr[node + 1]
+                    c = cursor[node]
+                    dst_id[c:c + (b - a)] = csr.indices[a:b]
+                    dst_ty[c:c + (b - a)] = tid
+                    cursor[node] += b - a
+            self.merged[ntype] = (indptr, dst_id, dst_ty)
+
+    def degrees(self, ntype: str) -> np.ndarray:
+        m = self.merged[ntype]
+        if m is None:
+            return np.zeros(self.graph.num_nodes[ntype], np.int64)
+        return np.diff(m[0])
+
+
+class NeighborSampler:
+    """Vectorized fixed-fanout sampler over a MergedAdjacency."""
+
+    def __init__(self, graph: HeteroGraph, cfg: SamplerConfig | None = None):
+        self.graph = graph
+        self.cfg = cfg or SamplerConfig()
+        self.madj = MergedAdjacency(graph)
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self._feat = [graph.features[t] for t in NODE_TYPES]
+        self._dim = graph.feat_dim
+
+    # -- one hop: (types[N], ids[N]) -> (types[N,F], ids[N,F], mask[N,F])
+    def _sample_hop(self, types: np.ndarray, ids: np.ndarray, fanout: int):
+        n = ids.shape[0]
+        out_id = np.zeros((n, fanout), np.int32)
+        out_ty = np.zeros((n, fanout), np.int8)
+        out_mask = np.zeros((n, fanout), bool)
+        for tid, tname in enumerate(NODE_TYPES):
+            sel = np.nonzero(types == tid)[0]
+            if sel.size == 0:
+                continue
+            m = self.madj.merged[tname]
+            if m is None:
+                continue
+            indptr, dst_id, dst_ty = m
+            node_ids = ids[sel]
+            deg = (indptr[node_ids + 1] - indptr[node_ids]).astype(np.int64)
+            has = deg > 0
+            if not has.any():
+                continue
+            rows = sel[has]
+            base = indptr[node_ids[has]]
+            d = deg[has]
+            if self.cfg.strategy == "degree_weighted":
+                # DeepGNN-style weighted sampling: bias neighbor choice by
+                # the *neighbor's* own degree (well-connected nodes carry
+                # more information; §4.1 lists weighted sampling support)
+                offs = np.empty((rows.size, fanout), np.int64)
+                for r in range(rows.size):
+                    cand = dst_id[base[r]:base[r] + d[r]]
+                    cty = dst_ty[base[r]:base[r] + d[r]]
+                    w = np.array([self._degree_of(cty[i], cand[i])
+                                  for i in range(len(cand))], np.float64) + 1.0
+                    w /= w.sum()
+                    offs[r] = self.rng.choice(d[r], size=fanout, p=w)
+            else:
+                # uniform with replacement: offsets in [0, deg)
+                offs = (self.rng.random((rows.size, fanout)) * d[:, None]).astype(np.int64)
+            flat = base[:, None] + offs
+            out_id[rows] = dst_id[flat]
+            out_ty[rows] = dst_ty[flat]
+            out_mask[rows] = True
+        return out_ty, out_id, out_mask
+
+    def _degree_of(self, tid: int, nid: int) -> int:
+        m = self.madj.merged[NODE_TYPES[tid]]
+        if m is None:
+            return 0
+        indptr = m[0]
+        return int(indptr[nid + 1] - indptr[nid])
+
+    def _gather_feats(self, types: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        flat_t = types.reshape(-1)
+        flat_i = ids.reshape(-1)
+        out = np.zeros((flat_t.shape[0], self._dim), np.float32)
+        for tid in range(len(NODE_TYPES)):
+            sel = np.nonzero(flat_t == tid)[0]
+            if sel.size:
+                out[sel] = self._feat[tid][flat_i[sel]]
+        return out.reshape(*types.shape, self._dim)
+
+    def sample_batch(self, node_type: str, node_ids: np.ndarray) -> ComputeGraphBatch:
+        """Build the padded 2-hop compute-graph tile for a batch of queries."""
+        f1, f2 = self.cfg.fanouts
+        b = node_ids.shape[0]
+        q_type = np.full(b, NODE_TYPE_ID[node_type], np.int8)
+        q_ids = node_ids.astype(np.int32)
+
+        n1_ty, n1_id, n1_mask = self._sample_hop(q_type, q_ids, f1)
+        n2_ty, n2_id, n2_mask_flat = self._sample_hop(
+            n1_ty.reshape(-1), n1_id.reshape(-1), f2)
+        n2_ty = n2_ty.reshape(b, f1, f2)
+        n2_id = n2_id.reshape(b, f1, f2)
+        n2_mask = n2_mask_flat.reshape(b, f1, f2) & n1_mask[:, :, None]
+
+        return ComputeGraphBatch(
+            q_feat=self._gather_feats(q_type, q_ids),
+            q_type=q_type.astype(np.int32),
+            n1_feat=self._gather_feats(n1_ty, n1_id) * n1_mask[..., None],
+            n1_type=n1_ty.astype(np.int32),
+            n1_mask=n1_mask.astype(np.float32),
+            n2_feat=self._gather_feats(n2_ty, n2_id) * n2_mask[..., None],
+            n2_type=n2_ty.astype(np.int32),
+            n2_mask=n2_mask.astype(np.float32),
+        )
+
+    def sample_pair_batch(self, member_ids: np.ndarray, job_ids: np.ndarray):
+        """(member tile, job tile) for link-prediction batches."""
+        return (self.sample_batch("member", member_ids),
+                self.sample_batch("job", job_ids))

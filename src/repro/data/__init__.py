@@ -1,0 +1,9 @@
+from repro.data.synthetic_graph import GraphGenConfig, generate_job_marketplace_graph
+from repro.data.lm_data import synthetic_lm_batch, SyntheticTokenStream
+
+__all__ = [
+    "GraphGenConfig",
+    "generate_job_marketplace_graph",
+    "synthetic_lm_batch",
+    "SyntheticTokenStream",
+]

@@ -1,0 +1,40 @@
+"""Synthetic token pipeline for the assigned LM architectures.
+
+A Zipfian n-gram-ish stream gives the loss a learnable structure (bigram
+statistics) so a few hundred training steps show a clearly decreasing loss —
+enough to validate the end-to-end driver without real corpora.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SyntheticTokenStream:
+    def __init__(self, vocab_size: int, *, seed: int = 0, order: int = 2,
+                 branching: int = 8):
+        self.vocab = vocab_size
+        rng = np.random.default_rng(seed)
+        # sparse bigram transition table: each token can be followed by
+        # `branching` likely successors
+        self.next_tokens = rng.integers(0, vocab_size, size=(vocab_size, branching))
+        self.rng = rng
+
+    def sample(self, batch: int, seq_len: int) -> np.ndarray:
+        out = np.empty((batch, seq_len + 1), np.int32)
+        cur = self.rng.integers(0, self.vocab, size=batch)
+        out[:, 0] = cur
+        for t in range(1, seq_len + 1):
+            explore = self.rng.random(batch) < 0.1
+            choice = self.rng.integers(0, self.next_tokens.shape[1], size=batch)
+            nxt = self.next_tokens[cur, choice]
+            rand = self.rng.integers(0, self.vocab, size=batch)
+            cur = np.where(explore, rand, nxt)
+            out[:, t] = cur
+        return out
+
+
+def synthetic_lm_batch(vocab_size: int, batch: int, seq_len: int, *, seed: int = 0):
+    """One (tokens, labels) pair: labels are next-token shifted inputs."""
+    stream = SyntheticTokenStream(vocab_size, seed=seed)
+    toks = stream.sample(batch, seq_len)
+    return toks[:, :-1], toks[:, 1:]

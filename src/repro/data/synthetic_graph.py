@@ -1,0 +1,199 @@
+"""Synthetic job-marketplace graph generator.
+
+Produces a scaled-down graph whose *ratios* mimic the paper's Tables 1–2:
+members ≫ jobs ≫ positions ≫ companies ≫ skills ≈ titles; members average
+~1.2 top skills, jobs ~0.67; engagement edges dominate the edge census.
+
+Ground truth: every member/job has a latent "competency" vector z ∈ R^k.
+Attribute assignment and engagement both derive from z, so a model that
+propagates information across the graph can recover match quality — this
+gives the offline proxy benchmarks (recall@k / AUC) real signal, including a
+cold-start segment of members with very few engagement edges (paper §7.2's
+"members lacking predictive data").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.graph import HeteroGraph, NODE_TYPES
+
+
+@dataclass(frozen=True)
+class GraphGenConfig:
+    num_members: int = 2000
+    num_jobs: int = 500
+    num_skills: int = 120
+    num_titles: int = 40
+    num_companies: int = 80
+    num_positions: int = 160
+    latent_dim: int = 16
+    feat_dim: int = 64
+    # engagement density: expected positive engagements per member
+    engagements_per_member: float = 3.0
+    recruiter_edges_per_job: float = 0.5
+    top_skills_per_member: float = 1.2   # Table 2: avg top-skill degree
+    top_skills_per_job: float = 0.67
+    # fraction of members in the sparse "cold-start" segment (few engagements)
+    cold_start_frac: float = 0.3
+    feature_noise: float = 0.3
+    seed: int = 0
+
+
+def _latent_cluster_assign(rng, z, num_attrs, temperature=1.0):
+    """Assign each row of z to one attribute id via soft latent clustering."""
+    centers = rng.normal(size=(num_attrs, z.shape[1]))
+    logits = z @ centers.T / temperature
+    logits += rng.gumbel(size=logits.shape)
+    return logits.argmax(axis=1).astype(np.int32), centers
+
+
+def generate_job_marketplace_graph(cfg: GraphGenConfig):
+    """Returns (graph, truth) where truth holds latent vectors + label edges."""
+    rng = np.random.default_rng(cfg.seed)
+    k = cfg.latent_dim
+
+    z_member = rng.normal(size=(cfg.num_members, k))
+    z_job = rng.normal(size=(cfg.num_jobs, k))
+
+    # --- attribute assignment from latent space --------------------------
+    member_title, title_centers = _latent_cluster_assign(rng, z_member, cfg.num_titles)
+    job_title, _ = _latent_cluster_assign(rng, z_job @ np.eye(k), cfg.num_titles)
+    # jobs share the member title centers so titles genuinely bridge them
+    job_title = (z_job @ title_centers.T + rng.gumbel(size=(cfg.num_jobs, cfg.num_titles))).argmax(1).astype(np.int32)
+
+    member_company = rng.integers(0, cfg.num_companies, cfg.num_members).astype(np.int32)
+    job_company = rng.integers(0, cfg.num_companies, cfg.num_jobs).astype(np.int32)
+
+    # position = <company, title> tuple; build a joint id table
+    pos_table = {}
+    def position_id(company, title):
+        key = (int(company), int(title))
+        if key not in pos_table and len(pos_table) < cfg.num_positions:
+            pos_table[key] = len(pos_table)
+        return pos_table.get(key, hash(key) % cfg.num_positions)
+
+    member_position = np.array([position_id(c, t) for c, t in zip(member_company, member_title)], np.int32)
+    job_position = np.array([position_id(c, t) for c, t in zip(job_company, job_title)], np.int32)
+
+    # --- top-skill edges (sparse by design, §3) ---------------------------
+    skill_centers = rng.normal(size=(cfg.num_skills, k))
+
+    def top_skill_edges(z, avg_per_node):
+        n = z.shape[0]
+        # Bernoulli on the best-matching skill, binomial extras
+        affinity = z @ skill_centers.T
+        best = affinity.argmax(1)
+        keep = rng.random(n) < min(avg_per_node, 1.0)
+        src = np.nonzero(keep)[0]
+        dst = best[keep]
+        extra = max(avg_per_node - 1.0, 0.0)
+        if extra > 0:
+            second = np.argsort(-affinity, axis=1)[:, 1]
+            keep2 = rng.random(n) < extra
+            src = np.concatenate([src, np.nonzero(keep2)[0]])
+            dst = np.concatenate([dst, second[keep2]])
+        return src.astype(np.int32), dst.astype(np.int32)
+
+    m_skill_src, m_skill_dst = top_skill_edges(z_member, cfg.top_skills_per_member)
+    j_skill_src, j_skill_dst = top_skill_edges(z_job, cfg.top_skills_per_job)
+
+    # --- engagement edges (ground-truth match function) -------------------
+    # score(m, j) combines latent similarity with attribute agreement
+    def match_logit(mi, ji):
+        sim = (z_member[mi] * z_job[ji]).sum(-1) / np.sqrt(k)
+        bonus = 0.75 * (member_title[mi] == job_title[ji]) + 0.5 * (member_company[mi] == job_company[ji])
+        return sim + bonus
+
+    num_cold = int(cfg.num_members * cfg.cold_start_frac)
+    cold_members = rng.permutation(cfg.num_members)[:num_cold]
+    is_cold = np.zeros(cfg.num_members, bool)
+    is_cold[cold_members] = True
+
+    eng_src, eng_dst = [], []
+    jobs_all = np.arange(cfg.num_jobs)
+    for m in range(cfg.num_members):
+        lam = cfg.engagements_per_member * (0.15 if is_cold[m] else 1.0)
+        n_eng = rng.poisson(lam)
+        if n_eng == 0:
+            continue
+        cand = rng.choice(jobs_all, size=min(64, cfg.num_jobs), replace=False)
+        logit = match_logit(np.full(cand.shape, m), cand)
+        top = cand[np.argsort(-logit)[:n_eng]]
+        eng_src.extend([m] * len(top))
+        eng_dst.extend(top.tolist())
+    eng_src = np.array(eng_src, np.int32)
+    eng_dst = np.array(eng_dst, np.int32)
+
+    # recruiter interactions job→member (sparser, Table 2: 26M vs 2.7B)
+    rec_src, rec_dst = [], []
+    for j in range(cfg.num_jobs):
+        n_rec = rng.poisson(cfg.recruiter_edges_per_job)
+        if n_rec == 0:
+            continue
+        cand = rng.choice(cfg.num_members, size=min(64, cfg.num_members), replace=False)
+        logit = match_logit(cand, np.full(cand.shape, j))
+        top = cand[np.argsort(-logit)[:n_rec]]
+        rec_src.extend([j] * len(top))
+        rec_dst.extend(top.tolist())
+    rec_src = np.array(rec_src, np.int32)
+    rec_dst = np.array(rec_dst, np.int32)
+
+    # --- node input features ----------------------------------------------
+    d = cfg.feat_dim
+    proj_m = rng.normal(size=(k, d)) / np.sqrt(k)
+    proj_j = rng.normal(size=(k, d)) / np.sqrt(k)
+
+    def feats(z, proj):
+        x = z @ proj + cfg.feature_noise * rng.normal(size=(z.shape[0], d))
+        return x.astype(np.float32)
+
+    features = {
+        "member": feats(z_member, proj_m),
+        "job": feats(z_job, proj_j),
+        "skill": feats(skill_centers, proj_m),
+        "title": feats(title_centers, proj_m),
+        "company": cfg.feature_noise * rng.normal(size=(cfg.num_companies, d)).astype(np.float32),
+        "position": cfg.feature_noise * rng.normal(size=(cfg.num_positions, d)).astype(np.float32),
+    }
+
+    graph = HeteroGraph(
+        num_nodes={
+            "member": cfg.num_members, "job": cfg.num_jobs, "skill": cfg.num_skills,
+            "title": cfg.num_titles, "company": cfg.num_companies, "position": cfg.num_positions,
+        },
+        features=features,
+    )
+    mem_ids = np.arange(cfg.num_members, dtype=np.int32)
+    job_ids = np.arange(cfg.num_jobs, dtype=np.int32)
+    graph.add_edges("member", "title", mem_ids, member_title, reciprocal=True)
+    graph.add_edges("member", "company", mem_ids, member_company, reciprocal=True)
+    graph.add_edges("member", "position", mem_ids, member_position, reciprocal=True)
+    graph.add_edges("member", "skill", m_skill_src, m_skill_dst, reciprocal=True)
+    graph.add_edges("job", "title", job_ids, job_title, reciprocal=True)
+    graph.add_edges("job", "company", job_ids, job_company, reciprocal=True)
+    graph.add_edges("job", "position", job_ids, job_position, reciprocal=True)
+    graph.add_edges("job", "skill", j_skill_src, j_skill_dst, reciprocal=True)
+    graph.add_edges("member", "job", eng_src, eng_dst)
+    graph.add_edges("job", "member", rec_src, rec_dst)
+
+    truth = {
+        "z_member": z_member,
+        "z_job": z_job,
+        "member_title": member_title,
+        "job_title": job_title,
+        "member_company": member_company,
+        "job_company": job_company,
+        "is_cold": is_cold,
+        "engagements": (eng_src, eng_dst),
+        "match_logit": match_logit,
+    }
+    return graph, truth
+
+
+def strip_skill_nodes(graph: HeteroGraph) -> HeteroGraph:
+    """Ablation graph for the §3 skill-node study: drop all skill edges."""
+    g = HeteroGraph(num_nodes=dict(graph.num_nodes), features=dict(graph.features))
+    g.adj = {k: v for k, v in graph.adj.items() if "skill" not in k}
+    return g

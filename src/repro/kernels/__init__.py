@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Kernels (each: <name>.py with pl.pallas_call + BlockSpec, oracle in ref.py,
+dispatching wrapper in ops.py):
+
+  * neighbor_agg     — masked GraphSAGE mean aggregation (GNN hot loop)
+  * sage_attention   — masked single-query neighbor attention (paper §4.2)
+  * flash_attention  — flash MHA w/ GQA + sliding window, prefill + decode
+  * ssd_scan         — chunked Mamba-2 SSD scan (hybrid/ssm archs)
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,213 @@
+"""Pallas TPU kernels: flash attention (prefill) and decode attention.
+
+Prefill: online-softmax flash attention with GQA and optional sliding
+window.  Grid (B, Hq, Sq/bq, Sk/bk) with the key axis innermost; running
+(m, l, acc) live in VMEM scratch and persist across the sequential key
+iterations.  Causal/window-irrelevant key blocks are skipped via pl.when so
+the sliding-window variant does O(S·window) work, which is what makes
+long_500k tractable for the dense architectures.
+
+Decode: one query token per (batch, head) against a KV cache.  Grid
+(B, S/bk) with all query heads resident in the block — each key block loaded
+once is shared by all heads of its GQA group (the cache read, not FLOPs, is
+the decode bottleneck).
+
+MXU alignment: bq/bk default 512/512 with head_dim 128 — all matmul dims are
+multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, causal: bool, window: int, scale: float,
+                  num_k_blocks: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    iq = pl.program_id(2)
+    q_start = iq * bq
+    k_start = ik * bk
+    # block relevance: causal → k_start <= q_end; window → k covers > q_start-window
+    relevant = jnp.asarray(True)
+    if causal:
+        relevant &= k_start <= q_start + bq - 1
+    if window:
+        relevant &= (k_start + bk - 1) > (q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, dh]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [bq, bk]
+
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        ki = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), bool)
+        if causal:
+            ok &= ki <= qi
+        if window:
+            ok &= ki > qi - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                           # [bq]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(ok, p, 0.0)
+        l_new = alpha * l_ref[:, 0] + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """q [B, Hq, Sq, Dh], k/v [B, Hkv, Sk, Dh] -> [B, Hq, Sq, Dh]."""
+    b, hq, sq, dh = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    nkb = sk // bk
+    scale = 1.0 / (dh ** 0.5)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, causal=causal, window=window,
+        scale=scale, num_k_blocks=nkb)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, sq // bq, nkb),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ------------------------------------------------------------------ decode
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                   bk: int, group: int, window: int, scale: float,
+                   num_k_blocks: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lens_ref[0, 0]
+    k_start = ik * bk
+    relevant = k_start < length
+    if window:
+        relevant &= (k_start + bk) > (length - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)               # [Hq, dh]
+        k = k_ref[0].astype(jnp.float32)               # [Hkv, bk, dh]
+        v = v_ref[0].astype(jnp.float32)
+        hq, dh = q.shape
+        hkv = k.shape[0]
+        qg = q.reshape(hkv, group, dh)
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (0,)))) * scale  # [Hkv, g, bk]
+        s = s.reshape(hq, bk)
+
+        ki = k_start + jax.lax.broadcasted_iota(jnp.int32, (hq, bk), 1)
+        ok = ki < length
+        if window:
+            ok &= ki >= length - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(ok, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[...] = jnp.broadcast_to(
+            (alpha * l_ref[:, 0] + jnp.sum(p, axis=-1))[:, None], l_ref.shape)
+        pg = p.reshape(hkv, group, bk)
+        pv = jax.lax.dot_general(pg, v, (((2,), (1,)), ((0,), (0,))))  # [Hkv, g, dh]
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv.reshape(hq, dh)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array, *, window: int = 0,
+                     block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """q [B, Hq, Dh], caches [B, Hkv, S, Dh], cache_len [B] -> [B, Hq, Dh]."""
+    b, hq, dh = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    bk = min(block_k, s)
+    assert s % bk == 0
+    nkb = s // bk
+    scale = 1.0 / (dh ** 0.5)
+    lens = cache_len.reshape(b, 1).astype(jnp.int32)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    kernel = functools.partial(
+        _decode_kernel, bk=bk, group=group, window=window, scale=scale,
+        num_k_blocks=nkb)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nkb),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ib, ik: (ib, 0)),
+            pl.BlockSpec((1, hq, dh), lambda ib, ik: (ib, 0, 0)),
+            pl.BlockSpec((1, hkv, bk, dh), lambda ib, ik: (ib, 0, ik, 0)),
+            pl.BlockSpec((1, hkv, bk, dh), lambda ib, ik: (ib, 0, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hq, dh), lambda ib, ik: (ib, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hq, dh), jnp.float32),
+            pltpu.VMEM((hq, 128), jnp.float32),
+            pltpu.VMEM((hq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, q, k_cache, v_cache)

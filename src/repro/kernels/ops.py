@@ -1,0 +1,151 @@
+"""Dispatching wrappers around the Pallas kernels.
+
+Every op has three implementations:
+  * ``ref``       — pure jnp/XLA (:mod:`repro.kernels.ref`), the oracle and
+                    the CPU / dry-run execution path;
+  * ``pallas``    — the real TPU kernel (pl.pallas_call, compiled);
+  * ``interpret`` — the same kernel body run by the Pallas interpreter on
+                    CPU; used by the correctness tests.
+
+``set_impl`` / ``impl=`` override the default, which is ``pallas`` on TPU
+and ``ref`` elsewhere.  Wrappers also normalize leading batch dims so callers
+can pass [..., F, D] tiles of any rank.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _flash
+from repro.kernels import neighbor_agg as _nagg
+from repro.kernels import ref
+from repro.kernels import sage_attention as _sattn
+from repro.kernels import ssd_scan as _ssd
+
+_IMPL = None  # resolved lazily
+
+# Roofline mode: unroll internal scans so HloCostAnalysis counts every
+# iteration (a while-loop body is only counted once), and use larger q
+# chunks to bound the unroll factor.  Set by the dry-run only.
+ROOFLINE_MODE = False
+
+
+def set_roofline_mode(on: bool) -> None:
+    global ROOFLINE_MODE
+    ROOFLINE_MODE = on
+
+
+def default_impl() -> str:
+    global _IMPL
+    if _IMPL is None:
+        _IMPL = "pallas" if jax.default_backend() == "tpu" else "ref"
+    return _IMPL
+
+
+def set_impl(impl: str) -> None:
+    """impl in {'ref', 'pallas', 'interpret'} (None resets to default)."""
+    global _IMPL
+    assert impl in (None, "ref", "pallas", "interpret"), impl
+    _IMPL = impl
+
+
+def _resolve(impl):
+    return impl if impl is not None else default_impl()
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+# ------------------------------------------------------------ neighbor ops
+
+
+def neighbor_mean(feats: jax.Array, mask: jax.Array, *, impl=None) -> jax.Array:
+    """feats [..., F, D], mask [..., F] -> [..., D]."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.neighbor_mean(feats, mask)
+    lead = feats.shape[:-2]
+    f, d = feats.shape[-2:]
+    x = feats.reshape(-1, f, d)
+    m = mask.reshape(-1, f).astype(jnp.float32)
+    x, n0 = _pad_to(x, 0, 128)
+    m, _ = _pad_to(m, 0, 128)
+    xp, d0 = _pad_to(x, 2, 128)
+    out = _nagg.neighbor_mean(xp, m, block_n=128, block_d=min(512, xp.shape[2]),
+                              interpret=(impl == "interpret"))
+    return out[:n0, :d0].reshape(*lead, d)
+
+
+def neighbor_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                       mask: jax.Array, *, impl=None) -> jax.Array:
+    """q [..., D], k/v [..., F, D], mask [..., F] -> [..., D]."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.neighbor_attention(q, k, v, mask)
+    lead = k.shape[:-2]
+    f, d = k.shape[-2:]
+    qq = q.reshape(-1, d)
+    kk = k.reshape(-1, f, d)
+    vv = v.reshape(-1, f, d)
+    mm = mask.reshape(-1, f).astype(jnp.float32)
+    qq, n0 = _pad_to(qq, 0, 128)
+    kk, _ = _pad_to(kk, 0, 128)
+    vv, _ = _pad_to(vv, 0, 128)
+    mm, _ = _pad_to(mm, 0, 128)
+    out = _sattn.sage_attention(qq, kk, vv, mm, block_n=128,
+                                interpret=(impl == "interpret"))
+    return out[:n0].reshape(*lead, d)
+
+
+# ------------------------------------------------------------ attention
+
+
+def mha(q, k, v, *, causal=True, window=0, impl=None,
+        block_q=512, block_k=512):
+    """q [B,Hq,S,Dh], k/v [B,Hkv,S,Dh] -> [B,Hq,S,Dh]."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        q_chunk = min(2048 if ROOFLINE_MODE else 512, q.shape[2])
+        return ref.mha(q, k, v, causal=causal, window=window,
+                       q_chunk=q_chunk, unroll=ROOFLINE_MODE)
+    return _flash.flash_attention(q, k, v, causal=causal, window=window,
+                                  block_q=min(block_q, q.shape[2]),
+                                  block_k=min(block_k, k.shape[2]),
+                                  interpret=(impl == "interpret"))
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0, impl=None,
+                     block_k=512):
+    """q [B,Hq,Dh], caches [B,Hkv,S,Dh], cache_len [B] -> [B,Hq,Dh]."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.decode_attention(q, k_cache, v_cache, cache_len, window=window)
+    return _flash.decode_attention(q, k_cache, v_cache, cache_len, window=window,
+                                   block_k=min(block_k, k_cache.shape[2]),
+                                   interpret=(impl == "interpret"))
+
+
+# ------------------------------------------------------------ SSD
+
+
+def ssd(x, dt, A, B, C, *, chunk=128, impl=None, initial_state=None):
+    """Chunked SSD scan; see ref.ssd_scan for shapes."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.ssd_scan_chunked(x, dt, A, B, C, chunk=min(chunk, x.shape[1]),
+                                    initial_state=initial_state)
+    assert initial_state is None, "kernel path starts from zero state"
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk=min(chunk, x.shape[1]),
+                         interpret=(impl == "interpret"))
+
+
+def ssd_decode(S, x_t, dt_t, A, B_t, C_t):
+    """Single-token SSD decode (always XLA — trivially small)."""
+    return ref.ssd_decode_step(S, x_t, dt_t, A, B_t, C_t)

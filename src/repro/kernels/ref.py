@@ -1,0 +1,233 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for kernel tests (assert_allclose against the
+interpret-mode kernels) AND the XLA execution path used on CPU and in the
+multi-pod dry-run (Pallas lowers to TPU custom-calls only on real TPUs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------ neighbor agg
+
+
+def neighbor_mean(feats: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked mean over the fanout axis.
+
+    feats [..., F, D], mask [..., F] (0/1) -> [..., D].
+    Zero-degree nodes (all-masked) return zeros, matching the paper's
+    convention that isolated nodes fall back to their self path.
+    """
+    m = mask.astype(feats.dtype)[..., None]
+    s = jnp.sum(feats * m, axis=-2)
+    cnt = jnp.sum(m, axis=-2)
+    return s / jnp.maximum(cnt, 1.0)
+
+
+def neighbor_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                       mask: jax.Array) -> jax.Array:
+    """Masked single-query attention over neighbors (paper's α(i,n) agg).
+
+    q [..., D], k [..., F, D], v [..., F, D], mask [..., F] -> [..., D].
+    All-masked rows return zeros.
+    """
+    d = q.shape[-1]
+    logits = jnp.einsum("...d,...fd->...f", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    logits = jnp.where(mask > 0, logits, jnp.asarray(-1e30, logits.dtype))
+    w = jax.nn.softmax(logits, axis=-1)
+    w = w * (mask > 0)  # all-masked rows: softmax is uniform garbage -> zero it
+    return jnp.einsum("...f,...fd->...d", w, v)
+
+
+# ------------------------------------------------------------ attention
+
+
+def _window_mask(sq: int, sk: int, *, causal: bool, window: int, q_offset: int):
+    """[sq, sk] boolean validity mask.  window=0 means unlimited."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= ki <= qi
+    if window:
+        ok &= ki > qi - window
+    return ok
+
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+        window: int = 0, q_offset: int = 0, q_chunk: int = 0,
+        unroll: bool = False) -> jax.Array:
+    """Multi-head attention with GQA + optional sliding window.
+
+    q [B, Hq, Sq, Dh], k/v [B, Hkv, Sk, Dh] -> [B, Hq, Sq, Dh].
+    ``q_offset`` positions the query block inside the kv sequence (decode:
+    Sq=1, q_offset=cache_len-1).  ``q_chunk`` > 0 processes queries in chunks
+    via lax.scan so the Sq×Sk score matrix is never fully materialized (the
+    XLA stand-in for the Pallas flash kernel).
+    """
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    def block(qc, off):
+        # grouped GQA einsum — never materializes repeated K/V
+        qg = qc.reshape(b, hkv, group, qc.shape[2], dh)
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        m = _window_mask(qc.shape[2], k.shape[2], causal=causal, window=window,
+                         q_offset=off)
+        logits = jnp.where(m[None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+        return o.reshape(b, hq, qc.shape[2], dh).astype(q.dtype)
+
+    if q_chunk and sq > q_chunk and sq % q_chunk == 0:
+        nchunk = sq // q_chunk
+        qs = q.reshape(b, hq, nchunk, q_chunk, dh).transpose(2, 0, 1, 3, 4)
+
+        def body(_, qc_i):
+            qc, i = qc_i
+            return None, block(qc, q_offset + i * q_chunk)
+
+        _, out = jax.lax.scan(body, None, (qs, jnp.arange(nchunk)),
+                              unroll=nchunk if unroll else 1)
+        return out.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq, dh)
+    return block(q, q_offset)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len, *, window: int = 0) -> jax.Array:
+    """Single-token decode: q [B, Hq, Dh], caches [B, Hkv, S, Dh] -> [B, Hq, Dh].
+
+    ``cache_len`` (scalar or [B]) marks the number of valid cache slots; the
+    new token attends to slots [max(0, L-window), L).
+    """
+    b, hq, dh = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qg = q.reshape(b, hkv, group, dh)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    ki = jnp.arange(s)[None, None, None, :]
+    L = jnp.asarray(cache_len).reshape(-1, 1, 1, 1).astype(jnp.int32)
+    ok = ki < L
+    if window:
+        ok &= ki >= L - window
+    logits = jnp.where(ok, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(b, hq, dh).astype(q.dtype)
+
+
+# ------------------------------------------------------------ mamba2 SSD
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, *, initial_state: jax.Array | None = None):
+    """Naive sequential SSD recurrence (the oracle for the chunked kernel).
+
+    Shapes (single SSM head group, G folded into N):
+      x  [b, L, H, P]   token inputs per head
+      dt [b, L, H]      softplus-ed timestep
+      A  [H]            negative decay rate per head (A < 0)
+      B  [b, L, N]      input projection  (shared across heads)
+      C  [b, L, N]      output projection (shared across heads)
+    Returns (y [b, L, H, P], final_state [b, H, N, P]).
+
+    Recurrence per head:  S_t = exp(dt_t·A_h)·S_{t-1} + dt_t·(B_t ⊗ x_t)
+                          y_t = C_tᵀ S_t
+    """
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+    S0 = (jnp.zeros((b, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(S, inputs):
+        xt, dtt, Bt, Ct = inputs                     # [b,H,P], [b,H], [b,N], [b,N]
+        decay = jnp.exp(dtt * A[None, :])            # [b,H]
+        inject = dtt[..., None, None] * (Bt[:, None, :, None] * xt[:, :, None, :])
+        S = decay[..., None, None] * S + inject      # [b,H,N,P]
+        y = jnp.einsum("bn,bhnp->bhp", Ct, S)
+        return S, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    S_final, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), S_final
+
+
+def ssd_scan_chunked(x, dt, A, B, C, *, chunk: int = 64,
+                     initial_state=None):
+    """Chunked SSD (state-space duality, arXiv:2405.21060 §6) in pure jnp.
+
+    Mathematically identical to :func:`ssd_scan`; restructured as
+    intra-chunk "attention" + inter-chunk state recurrence.  This is both a
+    second oracle (validates the algebra) and the XLA path for long
+    sequences (O(L·chunk) memory instead of O(L) sequential steps).
+    """
+    b, L, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, L)
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    xc = x.reshape(b, nc, chunk, H, P).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, H).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, N).astype(jnp.float32)
+
+    # per-position log decay within chunk: a_t = dt_t * A_h
+    la = dtc * A[None, None, None, :]                      # [b,nc,Q,H]
+    cum = jnp.cumsum(la, axis=2)                           # inclusive cumsum
+
+    # intra-chunk: y_intra[t] = Σ_{s<=t} exp(cum[t]-cum[s]) dt_s (C_t·B_s) x_s
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # [b,nc,Q,Q,H]
+    qi = jnp.arange(chunk)
+    causal = (qi[:, None] >= qi[None, :])[None, None, :, :, None]
+    # clamp BEFORE exp: non-causal rel is large-positive; exp would overflow
+    # to inf and poison the backward pass through the where (inf·0 = NaN)
+    G = jnp.where(causal, jnp.exp(jnp.where(causal, rel, 0.0)), 0.0)
+    CB = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)             # [b,nc,Q,Q]
+    W = CB[..., None] * G * dtc[:, :, None, :, :]          # weight[t,s,h]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", W, xc)
+
+    # chunk summaries: state contribution of each chunk
+    dec_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # exp(Σ_{s<t<=Q} a)
+    chunk_state = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                             Bc, dtc * dec_to_end, xc)     # [b,nc,H,N,P]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # [b,nc,H]
+
+    # inter-chunk recurrence over chunk states
+    S0 = (jnp.zeros((b, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(S, inp):
+        st, dec = inp                                      # [b,H,N,P], [b,H]
+        S_in = S                                           # state entering the chunk
+        S = dec[..., None, None] * S + st
+        return S, S_in
+
+    S_final, S_enter = jax.lax.scan(
+        step, S0, (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    S_enter = S_enter.transpose(1, 0, 2, 3, 4)             # [b,nc,H,N,P]
+
+    # inter-chunk output: y_inter[t] = C_t^T (exp(cum[t]) S_enter)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cc, jnp.exp(cum), S_enter)
+
+    y = (y_intra + y_inter).reshape(b, L, H, P).astype(x.dtype)
+    return y, S_final
+
+
+def ssd_decode_step(S, x_t, dt_t, A, B_t, C_t):
+    """One-token SSD decode: state [b,H,N,P] -> (y [b,H,P], new state)."""
+    decay = jnp.exp(dt_t.astype(jnp.float32) * A[None, :])
+    inject = dt_t[..., None, None].astype(jnp.float32) * (
+        B_t[:, None, :, None].astype(jnp.float32) * x_t[:, :, None, :].astype(jnp.float32))
+    S_new = decay[..., None, None] * S + inject
+    y = jnp.einsum("bn,bhnp->bhp", C_t.astype(jnp.float32), S_new)
+    return y.astype(x_t.dtype), S_new

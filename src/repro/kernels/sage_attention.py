@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: masked single-query neighbor attention (paper §4.2).
+
+Computes the attention aggregation  M_i = Σ_n α(i,n) f(features(n)) where
+α(i,·) = softmax over the (masked) fanout of ⟨W_q h_i, W_k h_n⟩/√d.  The
+projections are applied outside (plain matmuls XLA already fuses well); the
+kernel fuses score → masked softmax → weighted sum so the [N, F] score
+matrix never leaves VMEM.
+
+Tiling: grid (N/bn,); the full feature dim D stays resident (GNN hidden dims
+are 128–512).  Brick: q [bn, D], k/v [bn, F, D], mask [bn, F].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sage_attention_kernel(q_ref, k_ref, v_ref, mask_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)          # [bn, D]
+    k = k_ref[...].astype(jnp.float32)          # [bn, F, D]
+    v = v_ref[...].astype(jnp.float32)
+    mask = mask_ref[...]                        # [bn, F]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = jnp.sum(q[:, None, :] * k, axis=-1) * scale          # [bn, F]
+    logits = jnp.where(mask > 0, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m) * (mask > 0)
+    denom = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    w = e / denom                                                  # [bn, F]
+    out_ref[...] = jnp.einsum("nf,nfd->nd", w, v).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def sage_attention(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+                   *, block_n: int = 128, interpret: bool = False) -> jax.Array:
+    """q [N, D], k/v [N, F, D], mask [N, F] -> [N, D]."""
+    n, f, d = k.shape
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _sage_attention_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bn, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bn, f), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), v.dtype),
+        interpret=interpret,
+    )(q, k, v, mask)

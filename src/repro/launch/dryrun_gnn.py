@@ -1,0 +1,125 @@
+"""Production-scale dry-run for the LinkSAGE GNN itself (beyond the assigned
+arch matrix): lowers the encoder batch-inference step (the nearline hot path)
+and the link-prediction train step on the production mesh.
+
+  python -m repro.launch.dryrun_gnn [--multi-pod]
+
+Tile sizes mirror production: nearline macro-batches of 65 536 query nodes
+(the paper's >5K QPS × seconds of batching window), 2-hop fanout (10, 5),
+64-d input features.  Embedding tables are NOT model state (LinkSAGE is
+inductive) — the 1B-member scale lives in the stores, not in params, so the
+GNN's device footprint is tiny and the step is batch-parallel.
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.linksage import CONFIG
+from repro.core.encoder import encoder_apply, encoder_init
+from repro.core.linksage import linksage_init, loss_fn
+from repro.core.sampler import ComputeGraphBatch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import collective_bytes
+
+
+def tile_specs(cfg, batch: int):
+    f1, f2 = cfg.fanouts
+    d = cfg.feat_dim
+    f32, i32 = jnp.float32, jnp.int32
+    return ComputeGraphBatch(
+        q_feat=jax.ShapeDtypeStruct((batch, d), f32),
+        q_type=jax.ShapeDtypeStruct((batch,), i32),
+        n1_feat=jax.ShapeDtypeStruct((batch, f1, d), f32),
+        n1_type=jax.ShapeDtypeStruct((batch, f1), i32),
+        n1_mask=jax.ShapeDtypeStruct((batch, f1), f32),
+        n2_feat=jax.ShapeDtypeStruct((batch, f1, f2, d), f32),
+        n2_type=jax.ShapeDtypeStruct((batch, f1, f2), i32),
+        n2_mask=jax.ShapeDtypeStruct((batch, f1, f2), f32),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--infer-batch", type=int, default=65536)
+    ap.add_argument("--train-batch", type=int, default=8192)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    batch_axes = ("pod", "data", "model") if args.multi_pod else ("data", "model")
+    cfg = CONFIG
+
+    params = jax.eval_shape(lambda: linksage_init(jax.random.PRNGKey(0), cfg))
+    pshard = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
+
+    def tile_shardings(batch):
+        def spec(x):
+            return NamedSharding(mesh, P(batch_axes, *([None] * (len(x.shape) - 1))))
+        return jax.tree.map(spec, tile_specs(cfg, batch))
+
+    results = {}
+
+    # --- nearline batch inference (the serving hot path) -------------------
+    def encode_step(p, tile):
+        return encoder_apply(p["encoder"], cfg, tile)
+
+    tile = tile_specs(cfg, args.infer_batch)
+    t0 = time.time()
+    lowered = jax.jit(encode_step,
+                      in_shardings=(pshard, tile_shardings(args.infer_batch)),
+                      ).lower(params, tile)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    results["encode"] = {
+        "batch": args.infer_batch, "mesh": mesh_name,
+        "compile_s": time.time() - t0,
+        "flops_per_dev": float(cost.get("flops", 0)),
+        "bytes_per_dev": float(cost.get("bytes accessed", 0)),
+        "collectives": collective_bytes(compiled.as_text()),
+        "memory": str(compiled.memory_analysis()),
+    }
+    print("encode:", json.dumps(results["encode"], indent=1, default=str))
+
+    # --- link-prediction train step ----------------------------------------
+    def train_loss(p, m_tile, j_tile):
+        return loss_fn(p, cfg, m_tile, j_tile)
+
+    grad_step = jax.value_and_grad(train_loss)
+    m_tile = tile_specs(cfg, args.train_batch)
+    t0 = time.time()
+    lowered = jax.jit(grad_step,
+                      in_shardings=(pshard, tile_shardings(args.train_batch),
+                                    tile_shardings(args.train_batch)),
+                      ).lower(params, m_tile, m_tile)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    results["train"] = {
+        "batch": args.train_batch, "mesh": mesh_name,
+        "compile_s": time.time() - t0,
+        "flops_per_dev": float(cost.get("flops", 0)),
+        "bytes_per_dev": float(cost.get("bytes accessed", 0)),
+        "collectives": collective_bytes(compiled.as_text()),
+    }
+    print("train:", json.dumps(results["train"], indent=1, default=str))
+
+    out = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun", f"linksage__gnn__{mesh_name}.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"arch": "linksage-gnn", "mesh": mesh_name,
+                   "status": "compiled", **results}, f, indent=1, default=str)
+    print("saved", out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Perf-iteration driver (§Perf hillclimbing):
+
+  python -m repro.launch.perf --arch llama3-8b --shape train_4k \
+      --set seq_shard=True --tag seq_shard
+
+Runs the full dry-run (scan + unrolled passes) with ArchConfig overrides and
+writes ``experiments/perf/<arch>__<shape>__<tag>.json`` for before/after
+comparison against the baseline in experiments/dryrun/.
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import ast
+import json
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        try:
+            out[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig override key=value (repeatable)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import canonical_arch_id
+    from repro.launch.dryrun import dryrun_one
+
+    overrides = parse_overrides(args.set)
+    res = dryrun_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                     cfg_overrides=overrides)
+    res["tag"] = args.tag
+    res["cfg_overrides"] = overrides
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "perf")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir,
+                        f"{canonical_arch_id(args.arch)}__{args.shape}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1, default=str)
+    print("saved", path)
+
+
+if __name__ == "__main__":
+    main()

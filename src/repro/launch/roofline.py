@@ -1,0 +1,186 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per chip, seconds) for TPU v5e:
+
+  compute    = HLO_FLOPs_per_device / 197e12
+  memory     = HLO_bytes_per_device / 819e9
+  collective = collective_bytes_per_device / 50e9
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the compiled module IS
+the per-device program after SPMD partitioning).  Collective bytes are not
+in cost_analysis: we parse the partitioned HLO text and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighting all-reduce 2× (reduce-scatter + all-gather
+phases).  The (n-1)/n ring factor is dropped (n≥16 here, <7% error).
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) measures how much of the
+compiled compute is "useful" — the ratio catches remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+_COLLECTIVES = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,          # reduce-scatter + all-gather phases
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes per collective kind from partitioned HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+)$", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        opm = re.search(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                        r"collective-permute)(?:-start)?\(", rhs)
+        if not opm:
+            continue
+        kind = opm.group(1)
+        # operand shapes: everything inside the call parens
+        args = rhs[opm.end():]
+        shapes = _SHAPE_RE.findall(args.split("),")[0] + ")")
+        if not shapes:  # fall back to result shape
+            shapes = _SHAPE_RE.findall(rhs[:opm.start()])
+        total = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[kind] += total
+        counts[kind] += 1
+    out["counts"] = counts
+    return out
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    """6·N_active·D (forward+backward); decode uses D = new tokens = batch."""
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens          # forward only
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token per sequence
+
+
+def total_params(cfg: ArchConfig) -> float:
+    d, f, L, v = cfg.d_model, cfg.d_ff, cfg.num_layers, cfg.vocab_size
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    per_layer = 0.0
+    for i in range(L):
+        if cfg.is_attn_layer(i) and hq:
+            per_layer += d * dh * (hq + 2 * hkv) + hq * dh * d
+        if not cfg.is_attn_layer(i) or cfg.family == "ssm":
+            di = cfg.ssm_expand * d
+            n = cfg.ssm_state
+            heads = di // cfg.ssm_head_dim if cfg.ssm_head_dim else 0
+            per_layer += d * (2 * di + 2 * n + heads) + di * d
+        if cfg.num_experts and cfg.is_moe_layer(i):
+            per_layer += cfg.num_experts * 3 * d * f + d * cfg.num_experts
+            if cfg.moe_dense_residual:
+                per_layer += 3 * d * cfg.d_ff_dense
+        elif f:
+            per_layer += 3 * d * f
+    embed = v * d * (1 if cfg.tie_embeddings else 2)
+    return per_layer + embed
+
+
+def active_params(cfg: ArchConfig) -> float:
+    d, f, L, v = cfg.d_model, cfg.d_ff, cfg.num_layers, cfg.vocab_size
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    per_layer = 0.0
+    for i in range(L):
+        if cfg.is_attn_layer(i) and hq:
+            per_layer += d * dh * (hq + 2 * hkv) + hq * dh * d
+        if not cfg.is_attn_layer(i) or cfg.family == "ssm":
+            di = cfg.ssm_expand * d
+            n = cfg.ssm_state
+            heads = di // cfg.ssm_head_dim if cfg.ssm_head_dim else 0
+            per_layer += d * (2 * di + 2 * n + heads) + di * d
+        if cfg.num_experts and cfg.is_moe_layer(i):
+            per_layer += cfg.experts_per_token * 3 * d * f + d * cfg.num_experts
+            if cfg.moe_dense_residual:
+                per_layer += 3 * d * cfg.d_ff_dense
+        elif f:
+            per_layer += 3 * d * f
+    embed = v * d * (1 if cfg.tie_embeddings else 2)
+    return per_layer + embed
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_detail: dict
+    model_flops_total: float
+    mem_per_dev_bytes: float = 0.0
+    compile_seconds: float = 0.0
+
+    @property
+    def t_compute(self):
+        return self.hlo_flops_per_dev / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self):
+        return self.hlo_bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self):
+        hlo_total = self.hlo_flops_per_dev * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "hlo_flops_per_dev": self.hlo_flops_per_dev,
+            "hlo_bytes_per_dev": self.hlo_bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "coll_detail": self.coll_detail,
+            "model_flops_total": self.model_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mem_per_dev_bytes": self.mem_per_dev_bytes,
+            "compile_seconds": self.compile_seconds,
+        }

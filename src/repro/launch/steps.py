@@ -1,0 +1,132 @@
+"""Jitted step builders: train_step / prefill_step / serve_step per arch.
+
+These are the functions the launcher pjit-compiles; the dry-run lowers them
+against ShapeDtypeStruct inputs for every (arch × input-shape × mesh)
+combination.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import transformer as T
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm
+
+# long_500k policy (DESIGN.md §4): sub-quadratic attention required.
+LONG_CONTEXT_WINDOW = 8192
+
+
+def effective_config(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Apply per-shape overrides (sliding window for long-context dense)."""
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm", "audio"):
+        return cfg.with_sliding_window(LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+# -------------------------------------------------------------- input specs
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    cfg = effective_config(cfg, shape)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        s_text = s - cfg.num_prefix_embeddings if cfg.modality != "text" else s
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.modality != "text":
+            specs["prefix_emb"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_prefix_embeddings, cfg.d_model), cfg.adtype)
+        if cfg.gnn_conditioning:
+            specs["gnn_emb"] = jax.ShapeDtypeStruct((b, 2 * cfg.gnn_embed_dim), cfg.adtype)
+        return specs
+    # decode: one new token against a cache of seq_len
+    token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    state = jax.eval_shape(
+        functools.partial(T.init_decode_state, cfg, b, s, dtype=cfg.adtype))
+    return {"token": token, "state": state}
+
+
+def params_spec(cfg: ArchConfig):
+    return jax.eval_shape(functools.partial(T.model_init, jax.random.PRNGKey(0), cfg))
+
+
+def opt_spec(params_like):
+    return jax.eval_shape(adamw_init, params_like)
+
+
+# -------------------------------------------------------------------- steps
+
+
+def make_train_step(cfg: ArchConfig, *, mesh=None, lr: float = 3e-4,
+                    aux_weight: float = 0.01, max_norm: float = 1.0):
+    def train_step(params, opt, batch):
+        def lf(p):
+            hidden, aux = T.forward_train(
+                p, cfg, batch["tokens"],
+                prefix_emb=batch.get("prefix_emb"),
+                gnn_emb=batch.get("gnn_emb"),
+                mesh=mesh)
+            loss = T.lm_loss(p, cfg, hidden, batch["labels"])
+            return loss + aux_weight * aux, (loss, aux)
+
+        (_, (loss, aux)), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, max_norm)
+        params, opt = adamw_update(params, grads, opt, lr=lr)
+        return params, opt, {"loss": loss, "aux": aux, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, mesh=None, max_seq: int | None = None):
+    def prefill_step(params, batch):
+        logits, state = T.prefill(params, cfg, batch["tokens"],
+                                  prefix_emb=batch.get("prefix_emb"),
+                                  gnn_emb=batch.get("gnn_emb"),
+                                  max_seq=max_seq, mesh=mesh)
+        return logits, state
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, *, mesh=None, greedy: bool = True):
+    def serve_step(params, state, token):
+        logits, state = T.decode_step(params, cfg, token, state, mesh=mesh)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, logits, state
+
+    return serve_step
+
+
+# ----------------------------------------------------- synthetic host batch
+
+
+def synthetic_batch(cfg: ArchConfig, shape_or_bs, seq: int | None = None, *,
+                    seed: int = 0):
+    """Materialized random batch matching input_specs (CPU examples/tests)."""
+    if isinstance(shape_or_bs, InputShape):
+        b, s = shape_or_bs.global_batch, shape_or_bs.seq_len
+    else:
+        b, s = shape_or_bs, seq
+    rng = np.random.default_rng(seed)
+    s_text = s - cfg.num_prefix_embeddings if cfg.modality != "text" else s
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s_text)), jnp.int32),
+    }
+    labels = rng.integers(0, cfg.vocab_size, (b, s))
+    if cfg.modality != "text":
+        labels[:, :cfg.num_prefix_embeddings] = -1
+        batch["prefix_emb"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_prefix_embeddings, cfg.d_model)), cfg.adtype)
+    if cfg.gnn_conditioning:
+        batch["gnn_emb"] = jnp.asarray(rng.normal(size=(b, 2 * cfg.gnn_embed_dim)),
+                                       cfg.adtype)
+    batch["labels"] = jnp.asarray(labels, jnp.int32)
+    return batch

@@ -1,0 +1,84 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+On real hardware this builds the production mesh and pjits the train step
+with the sharding rules in repro.parallel; on CPU (this container) use
+--smoke for the reduced config on a 1×1 mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import parallel as par
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config, get_smoke_config
+from repro.data.lm_data import SyntheticTokenStream
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.steps import make_train_step, synthetic_batch
+from repro.models import model_init
+from repro.nn import param_count
+from repro.optim import adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = get_smoke_config(args.arch)
+        mesh = make_local_mesh()
+    else:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    params = model_init(jax.random.PRNGKey(0), cfg)
+    print(f"arch={cfg.name} params={param_count(params):,} "
+          f"mesh={dict(mesh.shape)}")
+    opt = adamw_init(params)
+
+    pspecs = par.param_pspecs(cfg, params, mesh)
+    pshard = par.shardings_of(pspecs, mesh)
+    oshard = par.shardings_of(par.opt_pspecs(pspecs, opt), mesh)
+    use_mesh = mesh if (cfg.num_experts and mesh.shape.get("data", 1) > 1
+                        and cfg.num_experts % mesh.shape["data"] == 0) else None
+    step = jax.jit(make_train_step(cfg, mesh=use_mesh, lr=args.lr),
+                   in_shardings=(pshard, oshard, None),
+                   out_shardings=(pshard, oshard, None))
+
+    stream = SyntheticTokenStream(cfg.vocab_size, seed=0)
+    t0 = time.time()
+    for i in range(args.steps):
+        toks = stream.sample(args.batch, args.seq)
+        batch = {"tokens": jnp.asarray(toks[:, :-1]),
+                 "labels": jnp.asarray(toks[:, 1:])}
+        if cfg.modality != "text":
+            rng = np.random.default_rng(i)
+            batch["prefix_emb"] = jnp.asarray(
+                rng.normal(size=(args.batch, cfg.num_prefix_embeddings,
+                                 cfg.d_model)), cfg.adtype)
+            batch["labels"] = jnp.concatenate(
+                [jnp.full((args.batch, cfg.num_prefix_embeddings), -1, jnp.int32),
+                 batch["labels"]], axis=1)
+        params, opt, m = step(params, opt, batch)
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {float(m['loss']):.4f} "
+                  f"({time.time() - t0:.0f}s)")
+    if args.checkpoint_dir:
+        save_checkpoint(args.checkpoint_dir, args.steps, params)
+        print("checkpoint saved")
+
+
+if __name__ == "__main__":
+    main()

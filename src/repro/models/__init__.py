@@ -1,0 +1,17 @@
+"""Model zoo: every assigned architecture family as a composable JAX module.
+
+  layers      — RoPE, GQA attention (+ sliding window, KV cache), norms
+  moe         — top-k router, ragged-dot local path, shard_map EP path
+  ssm         — Mamba-2 block (SSD scan + causal conv + gating)
+  transformer — config-driven assembly (dense/moe/ssm/hybrid/vlm/audio),
+                train forward, prefill, single-token decode
+"""
+from repro.models.transformer import (
+    model_init,
+    forward_train,
+    lm_loss,
+    init_decode_state,
+    decode_step,
+)
+
+__all__ = ["model_init", "forward_train", "lm_loss", "init_decode_state", "decode_step"]

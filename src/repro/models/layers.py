@@ -1,0 +1,139 @@
+"""Attention + positional layers shared by every transformer family.
+
+KV cache semantics
+------------------
+``KVCache`` holds [B, Hkv, S, Dh] tensors plus a scalar-per-batch length.
+Full-attention archs allocate S = max_seq; sliding-window archs allocate
+S = window and write new entries into a ring buffer — the O(window) cache is
+what makes long_500k feasible for dense families (DESIGN.md §4).  RoPE is
+applied *before* caching, so ring order never matters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+
+
+# ------------------------------------------------------------------- RoPE
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [B, H, S, Dh], positions [B, S] -> rotated x."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # [B,1,S,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([
+        x1 * cos - x2 * sin,
+        x2 * cos + x1 * sin,
+    ], axis=-1).astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, Hkv, S_alloc, Dh]
+    v: jax.Array
+    length: jax.Array     # [B] int32 — total tokens seen (may exceed window)
+
+
+def attention_init(key, cfg: ArchConfig, dtype):
+    hq, hkv, dh, d = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": nn.dense_init(ks[0], d, hq * dh, use_bias=cfg.qkv_bias, dtype=dtype),
+        "wk": nn.dense_init(ks[1], d, hkv * dh, use_bias=cfg.qkv_bias, dtype=dtype),
+        "wv": nn.dense_init(ks[2], d, hkv * dh, use_bias=cfg.qkv_bias, dtype=dtype),
+        "wo": nn.dense_init(ks[3], hq * dh, d, dtype=dtype),
+    }
+
+
+def _split_heads(x, num_heads, head_dim):
+    b, s, _ = x.shape
+    return x.reshape(b, s, num_heads, head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def attention_apply(params, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+                    *, window: int = 0, return_kv: bool = False):
+    """Causal self-attention over a full sequence (train / prefill)."""
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _split_heads(nn.dense_apply(params["wq"], x), hq, dh)
+    k = _split_heads(nn.dense_apply(params["wk"], x), hkv, dh)
+    v = _split_heads(nn.dense_apply(params["wv"], x), hkv, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = kops.mha(q, k, v, causal=True, window=window)
+    out = nn.dense_apply(params["wo"], _merge_heads(o))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int, *, window: int = 0,
+                  dtype=jnp.bfloat16) -> KVCache:
+    s_alloc = min(window, max_seq) if window else max_seq
+    shape = (batch, cfg.num_kv_heads, s_alloc, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((batch,), jnp.int32))
+
+
+def cache_from_prefill(cfg: ArchConfig, k: jax.Array, v: jax.Array, seq_len: int,
+                       *, s_alloc: int, window: int = 0) -> KVCache:
+    """Build a cache from prefill K/V (keeping only the window tail if set)."""
+    b = k.shape[0]
+    if window and seq_len > s_alloc:
+        # ring layout: entry for absolute position p lives at slot p % window
+        start = seq_len - s_alloc
+        tail_k, tail_v = k[:, :, -s_alloc:], v[:, :, -s_alloc:]
+        # tail index i holds absolute position start+i; ring wants it at slot
+        # (start+i) % s_alloc, i.e. a roll by +start
+        roll = start % s_alloc
+        tail_k = jnp.roll(tail_k, roll, axis=2)
+        tail_v = jnp.roll(tail_v, roll, axis=2)
+    else:
+        pad = s_alloc - seq_len
+        tail_k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        tail_v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return KVCache(k=tail_k, v=tail_v,
+                   length=jnp.full((b,), seq_len, jnp.int32))
+
+
+def attention_decode(params, cfg: ArchConfig, x_t: jax.Array, cache: KVCache,
+                     *, window: int = 0):
+    """One-token decode.  x_t [B, d] -> ([B, d], new cache)."""
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b = x_t.shape[0]
+    pos = cache.length                                        # [B] current position
+    q = nn.dense_apply(params["wq"], x_t).reshape(b, hq, 1, dh)
+    k = nn.dense_apply(params["wk"], x_t).reshape(b, hkv, 1, dh)
+    v = nn.dense_apply(params["wv"], x_t).reshape(b, hkv, 1, dh)
+    posb = pos[:, None]
+    q = rope(q, posb, cfg.rope_theta)
+    k = rope(k, posb, cfg.rope_theta)
+
+    s_alloc = cache.k.shape[2]
+    slot = pos % s_alloc   # ring for windowed caches; in-range for full caches
+    # per-batch single-slot scatter (NOT a full-cache rewrite)
+    bidx = jnp.arange(b)
+    k_new = cache.k.at[bidx, :, slot, :].set(k[:, :, 0, :].astype(cache.k.dtype))
+    v_new = cache.v.at[bidx, :, slot, :].set(v[:, :, 0, :].astype(cache.v.dtype))
+    new_len = pos + 1
+    eff_len = jnp.minimum(new_len, s_alloc)
+    o = kops.decode_attention(q.reshape(b, hq, dh), k_new, v_new, eff_len,
+                              window=0)  # ring cache: every stored slot is valid
+    out = nn.dense_apply(params["wo"], o.reshape(b, hq * dh))
+    return out, KVCache(k=k_new, v=v_new, length=new_len)

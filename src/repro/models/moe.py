@@ -1,0 +1,194 @@
+"""Mixture-of-Experts FFN: top-k router + two execution paths.
+
+* ``local`` — sort-based dispatch + ``jax.lax.ragged_dot`` grouped matmul.
+  Used on a single device (smoke tests, CPU examples) and under pure GSPMD
+  when no expert-parallel axis is configured.
+* ``ep`` (shard_map) — GShard-style expert parallelism over the ``data``
+  mesh axis: capacity-bounded dispatch buffers, all_to_all to the expert
+  owners, per-expert dense matmuls with the FFN dim sharded over ``model``,
+  all_to_all back, weighted combine.  This is the collective pattern the
+  roofline's all-to-all term measures for the MoE architectures.
+
+Router: softmax over expert logits, top-k (k=2 for every assigned arch),
+renormalized gates, Switch-style load-balance auxiliary loss.
+Arctic's parallel dense residual FFN (``moe_dense_residual``) is handled in
+the transformer block, not here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ArchConfig
+
+
+def moe_init(key, cfg: ArchConfig, dtype):
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    scale_in = 1.0 / jnp.sqrt(d)
+    scale_out = 1.0 / jnp.sqrt(f)
+    return {
+        "router": nn.dense_init(ks[0], d, e, dtype=jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * scale_out).astype(dtype),
+    }
+
+
+def route(params, cfg: ArchConfig, x2d: jax.Array):
+    """x2d [T, d] -> (weights [T, k], experts [T, k], aux_loss scalar)."""
+    logits = x2d.astype(jnp.float32) @ params["router"]["w"]         # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, experts = jax.lax.top_k(probs, cfg.experts_per_token)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # Switch load-balance loss: E * Σ_e f_e · p_e
+    e = cfg.num_experts
+    assign = jax.nn.one_hot(experts[:, 0], e, dtype=jnp.float32)     # primary expert
+    f_e = jnp.mean(assign, axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+    return weights.astype(x2d.dtype), experts, aux
+
+
+# ---------------------------------------------------------------- local
+
+
+def moe_ffn_local(params, cfg: ArchConfig, x2d: jax.Array):
+    """Sort-based dispatch + ragged grouped matmul.  x2d [T, d] -> [T, d]."""
+    t, d = x2d.shape
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    weights, experts, aux = route(params, cfg, x2d)
+
+    flat_e = experts.reshape(-1)                                     # [T*k]
+    order = jnp.argsort(flat_e)
+    token_of = order // k                                            # source token
+    xs = x2d[token_of]                                               # [T*k, d] sorted by expert
+    group_sizes = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+
+    gate = jax.lax.ragged_dot(xs, params["w_gate"].astype(xs.dtype), group_sizes)
+    up = jax.lax.ragged_dot(xs, params["w_up"].astype(xs.dtype), group_sizes)
+    h = jax.nn.silu(gate) * up
+    ys = jax.lax.ragged_dot(h, params["w_down"].astype(xs.dtype), group_sizes)
+
+    w_sorted = weights.reshape(-1)[order][:, None].astype(ys.dtype)
+    out = jnp.zeros((t, d), ys.dtype).at[token_of].add(ys * w_sorted)
+    return out, aux
+
+
+# ------------------------------------------------------------- shard_map EP
+
+
+def _capacity(cfg: ArchConfig, tokens_local: int, factor: float = 1.25) -> int:
+    c = int(tokens_local * cfg.experts_per_token * factor / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_ffn_ep(params, cfg: ArchConfig, x2d: jax.Array, *, mesh, data_axis="data",
+               model_axis="model", batch_axes=("data",), capacity_factor: float = 1.25):
+    """Expert-parallel MoE via shard_map.  x2d [T, d] sharded over batch_axes.
+
+    Expert weights are sharded (E over ``data_axis``, FFN dim over
+    ``model_axis``).  Dispatch volume per device ≈ T_local·k·d — the real
+    all-to-all bytes the roofline's collective term counts.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    e = cfg.num_experts
+    k = cfg.experts_per_token
+    data_size = mesh.shape[data_axis]
+    e_local = e // data_size
+
+    def body(x_loc, router_w, wg, wu, wd):
+        # x_loc [T_loc, d]; wg/wu [E_loc, d, f_loc]; wd [E_loc, f_loc, d]
+        t_loc, d = x_loc.shape
+        cap = _capacity(cfg, t_loc, capacity_factor)
+        logits = x_loc.astype(jnp.float32) @ router_w                # [T_loc, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        weights, experts = jax.lax.top_k(probs, k)
+        weights = (weights / jnp.sum(weights, axis=-1, keepdims=True)).astype(x_loc.dtype)
+
+        assign1 = jax.nn.one_hot(experts[:, 0], e, dtype=jnp.float32)
+        aux = e * jnp.sum(jnp.mean(assign1, axis=0) * jnp.mean(probs, axis=0))
+        aux = jax.lax.pmean(aux, axis_name=data_axis)
+
+        # ---- capacity-bounded dispatch buffers ------------------------
+        flat_e = experts.reshape(-1)                                 # [T_loc*k]
+        flat_w = weights.reshape(-1)
+        token_of = jnp.arange(t_loc * k) // k
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        seg_start = jnp.cumsum(jnp.bincount(flat_e, length=e)) - jnp.bincount(flat_e, length=e)
+        pos_in_e = jnp.arange(t_loc * k) - seg_start[sorted_e]
+        keep = pos_in_e < cap
+        buf = jnp.zeros((e, cap, d), x_loc.dtype)
+        comb_w = jnp.zeros((e, cap), x_loc.dtype)
+        src_tok = jnp.full((e, cap), -1, jnp.int32)
+        be = jnp.where(keep, sorted_e, e - 1)
+        bp = jnp.where(keep, pos_in_e, cap - 1)
+        tok = token_of[order]
+        buf = buf.at[be, bp].set(jnp.where(keep[:, None], x_loc[tok], buf[be, bp]))
+        comb_w = comb_w.at[be, bp].set(jnp.where(keep, flat_w[order], comb_w[be, bp]))
+        src_tok = src_tok.at[be, bp].set(jnp.where(keep, tok, src_tok[be, bp]))
+
+        # ---- to expert owners: [E, cap, d] -> [E_loc, cap*data, d] ----
+        # tiled all_to_all keeps a well-defined transpose (the reverse
+        # exchange), which the reshape+tiled=False form does not under VJP.
+        recv = jax.lax.all_to_all(buf, data_axis, split_axis=0, concat_axis=1,
+                                  tiled=True)                 # [E_loc, data*cap, d]
+
+        # ---- expert compute (f sharded over model axis) ---------------
+        g = jnp.einsum("ecd,edf->ecf", recv, wg.astype(recv.dtype))
+        u = jnp.einsum("ecd,edf->ecf", recv, wu.astype(recv.dtype))
+        h = jax.nn.silu(g) * u
+        y = jnp.einsum("ecf,efd->ecd", h, wd.astype(recv.dtype))
+        y = jax.lax.psum(y, axis_name=model_axis)                    # row-shard reduce
+
+        # ---- back to token owners -------------------------------------
+        back = jax.lax.all_to_all(y, data_axis, split_axis=1, concat_axis=0,
+                                  tiled=True)                 # [E, cap, d]
+
+        # ---- weighted combine ------------------------------------------
+        valid = (src_tok >= 0)
+        contrib = back * comb_w[..., None] * valid[..., None].astype(back.dtype)
+        out = jnp.zeros((t_loc, d), back.dtype).at[
+            jnp.where(valid, src_tok, 0).reshape(-1)].add(
+            contrib.reshape(-1, d) * valid.reshape(-1, 1).astype(back.dtype))
+        return out, aux
+
+    t_spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0], None)
+    out, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(t_spec, P(None, None), P(data_axis, None, model_axis),
+                  P(data_axis, None, model_axis), P(data_axis, model_axis, None)),
+        out_specs=(t_spec, P()),
+        check_rep=False,
+    )(x2d, params["router"]["w"], params["w_gate"], params["w_up"], params["w_down"])
+    return out, aux
+
+
+def moe_ffn(params, cfg: ArchConfig, x: jax.Array, *, mesh=None, **ep_kwargs):
+    """x [B, S, d] -> ([B, S, d], aux loss).  Chooses local vs EP path.
+
+    The EP path needs tokens divisible by the data axis (shard_map); small
+    decode batches are zero-padded up to the axis size — padded rows route
+    like real tokens but their outputs are sliced away.
+    """
+    b, s, d = x.shape
+    x2d = x.reshape(-1, d)
+    t = x2d.shape[0]
+    if mesh is None or cfg.num_experts % mesh.shape.get("data", 1) != 0 \
+            or mesh.shape.get("data", 1) == 1:
+        out, aux = moe_ffn_local(params, cfg, x2d)
+        return out.reshape(b, s, d), aux
+    shard = mesh.shape["data"]
+    for ax in ep_kwargs.get("batch_axes", ("data",)):
+        if ax != "data":
+            shard *= mesh.shape[ax]
+    pad = (-t) % shard
+    if pad:
+        x2d = jnp.concatenate([x2d, jnp.zeros((pad, d), x2d.dtype)], axis=0)
+    out, aux = moe_ffn_ep(params, cfg, x2d, mesh=mesh, **ep_kwargs)
+    return out[:t].reshape(b, s, d), aux

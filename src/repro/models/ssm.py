@@ -1,0 +1,160 @@
+"""Mamba-2 block (arXiv:2405.21060): SSD scan + causal conv + gating.
+
+Layout per block (single B/C group), with SEPARATE projections per semantic
+piece — a fused in_proj would shard its flat output dim across z/x/B/C/dt
+boundaries and force re-layout collectives every layer (iteration-0 dry-run
+finding).  Split projections shard cleanly: z/x over "model" (d_inner),
+dt over "model" (heads), B/C replicated (small, shared across heads).
+
+  z   = W_z x                     gate path        [B, L, d_inner]
+  xs  = conv*(W_x x)              SSD input        [B, L, d_inner]
+  Bm  = conv*(W_B x)              input proj       [B, L, N]
+  Cm  = conv*(W_C x)              output proj      [B, L, N]
+  dt  = softplus(W_dt x + bias)   timestep         [B, L, H]
+  SSD:   y_t = C_tᵀ S_t,  S_t = exp(dt_t A) S_{t-1} + dt_t B_t ⊗ x_t
+  out = W_o RMSNorm(y * silu(z))
+
+Decode state = (per-piece conv rings, ssd state [B, H, N, P]) — the
+O(1)-per-token state that makes long_500k native for ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+
+
+class SSMState(NamedTuple):
+    conv_x: jax.Array   # [B, W-1, d_inner]
+    conv_B: jax.Array   # [B, W-1, N]
+    conv_C: jax.Array   # [B, W-1, N]
+    ssd: jax.Array      # [B, H, N, P] float32
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    return d_inner, heads, n
+
+
+def _conv_init(key, width: int, channels: int, dtype):
+    return {
+        "w": (jax.random.normal(key, (width, channels), jnp.float32)
+              / jnp.sqrt(width)).astype(dtype),
+        "b": jnp.zeros((channels,), dtype),
+    }
+
+
+def ssm_init(key, cfg: ArchConfig, dtype):
+    d_inner, heads, n = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 9)
+    return {
+        "z_proj": nn.dense_init(ks[0], d, d_inner, dtype=dtype),
+        "x_proj": nn.dense_init(ks[1], d, d_inner, dtype=dtype),
+        "B_proj": nn.dense_init(ks[2], d, n, dtype=dtype),
+        "C_proj": nn.dense_init(ks[3], d, n, dtype=dtype),
+        "dt_proj": nn.dense_init(ks[4], d, heads, dtype=dtype),
+        "conv_x": _conv_init(ks[5], cfg.ssm_conv, d_inner, dtype),
+        "conv_B": _conv_init(ks[6], cfg.ssm_conv, n, dtype),
+        "conv_C": _conv_init(ks[7], cfg.ssm_conv, n, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, float(heads), heads, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "D": jnp.ones((heads,), jnp.float32),      # skip connection per head
+        "norm": nn.rmsnorm_init(d_inner, dtype=dtype),
+        "out_proj": nn.dense_init(ks[8], d_inner, d, dtype=dtype),
+    }
+
+
+def _causal_conv(p, x, conv_state=None):
+    """Depthwise causal conv + SiLU.  x [B, L, C] -> (same, new ring)."""
+    w, b = p["w"], p["b"]
+    width = w.shape[0]
+    if conv_state is not None:
+        x_ext = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    else:
+        x_ext = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(x_ext[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+              for i in range(width))
+    out = jax.nn.silu(out + b[None, None, :].astype(out.dtype))
+    new_state = x_ext[:, -(width - 1):, :] if width > 1 else None
+    return out, new_state
+
+
+def _conv_step(p, x_t, ring):
+    """One-token conv.  x_t [B, C], ring [B, W-1, C] -> (out, new ring)."""
+    window = jnp.concatenate([ring.astype(x_t.dtype), x_t[:, None, :]], axis=1)
+    out = jnp.sum(window * p["w"][None, :, :].astype(window.dtype), axis=1)
+    out = jax.nn.silu(out + p["b"][None, :].astype(out.dtype))
+    return out, window[:, 1:, :]
+
+
+def ssm_apply(params, cfg: ArchConfig, x: jax.Array, *, return_state: bool = False,
+              initial_state: SSMState | None = None):
+    """Full-sequence SSD block.  x [B, L, d] -> [B, L, d]."""
+    d_inner, heads, n = _dims(cfg)
+    b, L, _ = x.shape
+    z = nn.dense_apply(params["z_proj"], x)
+    ist = initial_state
+    xs, ring_x = _causal_conv(params["conv_x"], nn.dense_apply(params["x_proj"], x),
+                              ist.conv_x if ist is not None else None)
+    Bm, ring_B = _causal_conv(params["conv_B"], nn.dense_apply(params["B_proj"], x),
+                              ist.conv_B if ist is not None else None)
+    Cm, ring_C = _causal_conv(params["conv_C"], nn.dense_apply(params["C_proj"], x),
+                              ist.conv_C if ist is not None else None)
+
+    dt = jax.nn.softplus(nn.dense_apply(params["dt_proj"], x).astype(jnp.float32)
+                         + params["dt_bias"])                       # [B, L, H]
+    A = -jnp.exp(params["A_log"])                                   # [H]
+    xh = xs.reshape(b, L, heads, cfg.ssm_head_dim)
+    y, final = kops.ssd(xh, dt, A, Bm, Cm,
+                        initial_state=(ist.ssd if ist is not None
+                                       and kops.default_impl() == "ref" else None))
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xh   # skip
+    y = y.reshape(b, L, d_inner)
+    y = nn.rmsnorm_apply(params["norm"], y * jax.nn.silu(z))
+    out = nn.dense_apply(params["out_proj"], y)
+    if return_state:
+        return out, SSMState(conv_x=ring_x, conv_B=ring_B, conv_C=ring_C, ssd=final)
+    return out
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> SSMState:
+    d_inner, heads, n = _dims(cfg)
+    w1 = cfg.ssm_conv - 1
+    return SSMState(
+        conv_x=jnp.zeros((batch, w1, d_inner), dtype),
+        conv_B=jnp.zeros((batch, w1, n), dtype),
+        conv_C=jnp.zeros((batch, w1, n), dtype),
+        ssd=jnp.zeros((batch, heads, n, cfg.ssm_head_dim), jnp.float32),
+    )
+
+
+def ssm_decode(params, cfg: ArchConfig, x_t: jax.Array, state: SSMState):
+    """One-token decode.  x_t [B, d] -> ([B, d], new state)."""
+    d_inner, heads, n = _dims(cfg)
+    b = x_t.shape[0]
+    z = nn.dense_apply(params["z_proj"], x_t)
+    xs, ring_x = _conv_step(params["conv_x"], nn.dense_apply(params["x_proj"], x_t),
+                            state.conv_x)
+    Bm, ring_B = _conv_step(params["conv_B"], nn.dense_apply(params["B_proj"], x_t),
+                            state.conv_B)
+    Cm, ring_C = _conv_step(params["conv_C"], nn.dense_apply(params["C_proj"], x_t),
+                            state.conv_C)
+
+    dt = jax.nn.softplus(nn.dense_apply(params["dt_proj"], x_t).astype(jnp.float32)
+                         + params["dt_bias"])                       # [B, H]
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(b, heads, cfg.ssm_head_dim)
+    y, new_ssd = kops.ssd_decode(state.ssd, xh, dt, A, Bm, Cm)
+    y = y + params["D"][None, :, None].astype(y.dtype) * xh
+    y = y.reshape(b, d_inner)
+    y = nn.rmsnorm_apply(params["norm"], y * jax.nn.silu(z))
+    out = nn.dense_apply(params["out_proj"], y)
+    return out, SSMState(conv_x=ring_x, conv_B=ring_B, conv_C=ring_C, ssd=new_ssd)

@@ -1,0 +1,364 @@
+"""Config-driven decoder assembly for every assigned architecture family.
+
+A model is a stack of ``num_layers`` sublayers grouped into *period blocks*
+(period = lcm of the attention-interleave and MoE periods, e.g. 8 for
+jamba's 1:7 mamba:attn + MoE-every-2).  Blocks are structurally identical,
+so parameters are stacked along a leading axis and the forward pass is a
+single ``lax.scan`` — compile time and HLO size stay O(period), not
+O(num_layers), which matters at 72-layer/400B dry-run scale.  ``remat=
+"block"`` wraps the scan body in jax.checkpoint.
+
+Sublayer kinds per in-block index (static, from the config):
+  mixer: attention (RoPE GQA, optional sliding window) | mamba2 SSD
+  ffn:   SwiGLU dense | top-k MoE (+ arctic parallel dense residual) | none
+
+Modality frontends (vlm/audio) are stubs per the assignment carve-out:
+``prefix_emb`` [B, P, d] arrives precomputed and is concatenated before the
+token embeddings.  GNN conditioning (LinkSAGE part B) projects the frozen
+member/job embeddings into d_model and adds them as a soft prompt bias.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import nn
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+# ----------------------------------------------------------------- pattern
+
+
+def block_period(cfg: ArchConfig) -> int:
+    p = 1
+    if cfg.attn_layer_period:
+        p = math.lcm(p, cfg.attn_layer_period)
+    if cfg.num_experts:
+        p = math.lcm(p, cfg.moe_every)
+    return p
+
+
+def sublayer_kinds(cfg: ArchConfig):
+    """[(mixer_kind, ffn_kind)] for one period block (same for all blocks)."""
+    kinds = []
+    for j in range(block_period(cfg)):
+        mixer = "attn" if cfg.is_attn_layer(j) else "ssm"
+        if cfg.family == "ssm" or (cfg.family == "hybrid" and mixer == "ssm" and cfg.d_ff == 0):
+            ffn = "none" if cfg.d_ff == 0 else ("moe" if cfg.is_moe_layer(j) else "dense")
+        else:
+            ffn = "moe" if cfg.is_moe_layer(j) else "dense"
+        kinds.append((mixer, ffn))
+    return kinds
+
+
+def _norm_init(cfg: ArchConfig, dtype):
+    return (nn.layernorm_init(cfg.d_model, dtype=dtype) if cfg.norm == "layernorm"
+            else nn.rmsnorm_init(cfg.d_model, dtype=dtype))
+
+
+def _norm_apply(cfg: ArchConfig, p, x):
+    return (nn.layernorm_apply(p, x) if cfg.norm == "layernorm"
+            else nn.rmsnorm_apply(p, x))
+
+
+# -------------------------------------------------------------------- init
+
+
+def _sublayer_init(key, cfg: ArchConfig, mixer: str, ffn: str, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"mixer_norm": _norm_init(cfg, dtype)}
+    if mixer == "attn":
+        p["attn"] = L.attention_init(k1, cfg, dtype)
+    else:
+        p["ssm"] = S.ssm_init(k1, cfg, dtype)
+    if ffn != "none":
+        p["ffn_norm"] = _norm_init(cfg, dtype)
+    if ffn == "dense":
+        p["mlp"] = nn.glu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype=dtype)
+    elif ffn == "moe":
+        p["moe"] = M.moe_init(k3, cfg, dtype)
+        if cfg.moe_dense_residual:
+            p["mlp"] = nn.glu_mlp_init(k4, cfg.d_model, cfg.d_ff_dense, dtype=dtype)
+    return p
+
+
+def model_init(key, cfg: ArchConfig):
+    dtype = cfg.pdtype
+    kinds = sublayer_kinds(cfg)
+    period = len(kinds)
+    nblocks = cfg.num_layers // period
+    assert cfg.num_layers % period == 0, (cfg.num_layers, period)
+
+    k_embed, k_blocks, k_head, k_gnn = jax.random.split(key, 4)
+
+    def init_block(bkey):
+        ks = jax.random.split(bkey, period)
+        return {"layers": [_sublayer_init(ks[j], cfg, *kinds[j], dtype)
+                           for j in range(period)]}
+
+    block_keys = jax.random.split(k_blocks, nblocks)
+    blocks = jax.vmap(init_block)(block_keys)          # stacked along axis 0
+
+    params = {
+        "embed": nn.embedding_init(k_embed, cfg.vocab_size, cfg.d_model, dtype=dtype),
+        "blocks": blocks,
+        "final_norm": _norm_init(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nn.dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype=dtype)
+    if cfg.gnn_conditioning:
+        params["gnn_proj"] = nn.dense_init(k_gnn, 2 * cfg.gnn_embed_dim, cfg.d_model,
+                                           use_bias=True, dtype=dtype)
+    return params
+
+
+# ----------------------------------------------------------------- forward
+
+
+def _sublayer_apply(lp, cfg: ArchConfig, kind, x, positions, window, mesh):
+    mixer, ffn = kind
+    h = _norm_apply(cfg, lp["mixer_norm"], x)
+    if mixer == "attn":
+        x = x + L.attention_apply(lp["attn"], cfg, h, positions, window=window)
+    else:
+        x = x + S.ssm_apply(lp["ssm"], cfg, h)
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "none":
+        return x, aux
+    h = _norm_apply(cfg, lp["ffn_norm"], x)
+    if ffn == "dense":
+        x = x + nn.glu_mlp_apply(lp["mlp"], h)
+    else:
+        y, aux = M.moe_ffn(lp["moe"], cfg, h, mesh=mesh)
+        if cfg.moe_dense_residual:
+            y = y + nn.glu_mlp_apply(lp["mlp"], h)
+        x = x + y
+    return x, aux
+
+
+def embed_inputs(params, cfg: ArchConfig, tokens, prefix_emb=None, gnn_emb=None):
+    """tokens [B, S_text] (+ prefix [B, P, d]) -> (x [B, S, d], positions)."""
+    x = nn.embedding_lookup(params["embed"], tokens).astype(cfg.adtype)
+    if prefix_emb is not None:
+        x = jnp.concatenate([prefix_emb.astype(cfg.adtype), x], axis=1)
+    if gnn_emb is not None:
+        bias = nn.dense_apply(params["gnn_proj"], gnn_emb.astype(cfg.adtype))
+        x = x + bias[:, None, :]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return x, positions
+
+
+def forward_train(params, cfg: ArchConfig, tokens, *, prefix_emb=None,
+                  gnn_emb=None, window: int | None = None, mesh=None):
+    """Full-sequence forward.  Returns (hidden [B, S, d], aux_loss)."""
+    window = cfg.sliding_window if window is None else window
+    kinds = sublayer_kinds(cfg)
+    x, positions = embed_inputs(params, cfg, tokens, prefix_emb, gnn_emb)
+
+    def body(carry, block):
+        x = carry
+        aux = jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(kinds):
+            x, a = _sublayer_apply(block["layers"][j], cfg, kind, x, positions,
+                                   window, mesh)
+            aux = aux + a
+        if cfg.seq_shard and mesh is not None:
+            # sequence-parallel residual stream: block boundaries (= the
+            # remat-saved activations) shard their seq dim over "model"
+            from jax.sharding import NamedSharding, PartitionSpec as _P
+            x = jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, _P(None, "model", None)))
+        return x, aux
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, auxs = jax.lax.scan(body, x, params["blocks"],
+                           unroll=max(1, min(cfg.scan_unroll,
+                                             cfg.num_layers // len(kinds))))
+    x = _norm_apply(cfg, params["final_norm"], x)
+    return x, jnp.sum(auxs)
+
+
+def lm_head_weight(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def lm_loss(params, cfg: ArchConfig, hidden, labels, *, chunk: int = 512):
+    """Chunked softmax cross-entropy — never materializes [B, S, V].
+
+    hidden [B, S, d], labels [B, S] (-1 = ignore) -> scalar mean nll.
+    """
+    w = lm_head_weight(params, cfg)
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    assert s % c == 0
+    hc = hidden.reshape(b, s // c, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, s // c, c).transpose(1, 0, 2)
+
+    def chunk_loss(h, y):
+        logits = (h @ w.astype(h.dtype)).astype(jnp.float32)       # [b, c, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(y, 0)[..., None],
+                                   axis=-1)[..., 0]
+        valid = (y >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * valid), jnp.sum(valid)
+
+    def body(acc, xs):
+        h, y = xs
+        nll, n = jax.checkpoint(chunk_loss)(h, y)
+        return (acc[0] + nll, acc[1] + n), None
+
+    # in roofline mode the CE scan must be FULLY unrolled (it sits outside
+    # the layer loop, so the two-point extrapolation needs it exact)
+    ce_unroll = (s // c) if kops.ROOFLINE_MODE else max(1, min(cfg.scan_unroll, s // c))
+    (nll, n), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),) * 2, (hc, lc),
+                               unroll=ce_unroll)
+    return nll / jnp.maximum(n, 1.0)
+
+
+def logits_for(params, cfg: ArchConfig, hidden):
+    """hidden [..., d] -> logits [..., V] (decode path; no chunking needed)."""
+    w = lm_head_weight(params, cfg)
+    return (hidden @ w.astype(hidden.dtype)).astype(jnp.float32)
+
+
+# ------------------------------------------------------------------ decode
+
+
+class DecodeState(NamedTuple):
+    layer_state: Any      # stacked-over-blocks pytree of per-sublayer states
+    step: jax.Array       # scalar int32
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int, *,
+                      window: int | None = None, dtype=None) -> DecodeState:
+    window = cfg.sliding_window if window is None else window
+    dtype = dtype or cfg.adtype
+    kinds = sublayer_kinds(cfg)
+    nblocks = cfg.num_layers // len(kinds)
+
+    def one_block():
+        states = []
+        for mixer, _ in kinds:
+            if mixer == "attn":
+                states.append(L.init_kv_cache(cfg, batch, max_seq, window=window,
+                                              dtype=dtype))
+            else:
+                states.append(S.init_ssm_state(cfg, batch, dtype=dtype))
+        return states
+
+    block = one_block()
+    stacked = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (nblocks,) + x.shape),
+                           block)
+    return DecodeState(layer_state=stacked, step=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, cfg: ArchConfig, token, state: DecodeState, *,
+                gnn_emb=None, window: int | None = None, mesh=None):
+    """One decode step.  token [B] int32 -> (logits [B, V], new state)."""
+    window = cfg.sliding_window if window is None else window
+    kinds = sublayer_kinds(cfg)
+    x = nn.embedding_lookup(params["embed"], token).astype(cfg.adtype)  # [B, d]
+    if gnn_emb is not None:
+        x = x + nn.dense_apply(params["gnn_proj"], gnn_emb.astype(cfg.adtype))
+
+    def body(x, block_and_state):
+        block, states = block_and_state
+        new_states = []
+        for j, (mixer, ffn) in enumerate(kinds):
+            lp = block["layers"][j]
+            h = _norm_apply(cfg, lp["mixer_norm"], x)
+            if mixer == "attn":
+                dx, ns = L.attention_decode(lp["attn"], cfg, h, states[j],
+                                            window=window)
+            else:
+                dx, ns = S.ssm_decode(lp["ssm"], cfg, h, states[j])
+            x = x + dx
+            new_states.append(ns)
+            if ffn == "none":
+                continue
+            h = _norm_apply(cfg, lp["ffn_norm"], x)
+            if ffn == "dense":
+                x = x + nn.glu_mlp_apply(lp["mlp"], h)
+            else:
+                y, _ = M.moe_ffn(lp["moe"], cfg, h[:, None, :], mesh=mesh)
+                y = y[:, 0, :]
+                if cfg.moe_dense_residual:
+                    y = y + nn.glu_mlp_apply(lp["mlp"], h)
+                x = x + y
+        return x, new_states
+
+    nblocks = cfg.num_layers // len(kinds)
+    x, new_layer_state = jax.lax.scan(body, x, (params["blocks"], state.layer_state),
+                                      unroll=max(1, min(cfg.scan_unroll, nblocks)))
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = logits_for(params, cfg, x)
+    return logits, DecodeState(layer_state=new_layer_state, step=state.step + 1)
+
+
+# ----------------------------------------------------------------- prefill
+
+
+def prefill(params, cfg: ArchConfig, tokens, *, prefix_emb=None, gnn_emb=None,
+            window: int | None = None, max_seq: int | None = None, mesh=None):
+    """Run the prompt and build a DecodeState.  Returns (last_logits, state).
+
+    Simplicity over speed: runs forward_train for hidden states, then one
+    full-sequence pass per layer to collect K/V (SSM states come from the
+    chunked scan's final state).  Serving-path tests cross-check against
+    repeated decode_step.
+    """
+    window = cfg.sliding_window if window is None else window
+    kinds = sublayer_kinds(cfg)
+    b, s_text = tokens.shape
+    x, positions = embed_inputs(params, cfg, tokens, prefix_emb, gnn_emb)
+    s = x.shape[1]
+    max_seq = max_seq or (s + 64)   # headroom for generated tokens
+    s_alloc = min(window, max_seq) if window else max_seq
+
+    def body(x, block):
+        new_states = []
+        for j, (mixer, ffn) in enumerate(kinds):
+            lp = block["layers"][j]
+            h = _norm_apply(cfg, lp["mixer_norm"], x)
+            if mixer == "attn":
+                dx, (k, v) = L.attention_apply(lp["attn"], cfg, h, positions,
+                                               window=window, return_kv=True)
+                cache = L.cache_from_prefill(cfg, k.astype(cfg.adtype),
+                                             v.astype(cfg.adtype), s,
+                                             s_alloc=s_alloc, window=window)
+                new_states.append(cache)
+            else:
+                dx, st = S.ssm_apply(lp["ssm"], cfg, h, return_state=True)
+                new_states.append(st)
+            x = x + dx
+            if ffn == "none":
+                continue
+            h = _norm_apply(cfg, lp["ffn_norm"], x)
+            if ffn == "dense":
+                x = x + nn.glu_mlp_apply(lp["mlp"], h)
+            else:
+                y, _ = M.moe_ffn(lp["moe"], cfg, h, mesh=mesh)
+                if cfg.moe_dense_residual:
+                    y = y + nn.glu_mlp_apply(lp["mlp"], h)
+                x = x + y
+        return x, new_states
+
+    nblocks = cfg.num_layers // len(kinds)
+    x, layer_state = jax.lax.scan(body, x, params["blocks"],
+                                  unroll=max(1, min(cfg.scan_unroll, nblocks)))
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = logits_for(params, cfg, x[:, -1, :])
+    return logits, DecodeState(layer_state=layer_state,
+                               step=jnp.asarray(s, jnp.int32))

@@ -1,0 +1,43 @@
+"""Minimal pure-functional NN substrate (no flax dependency).
+
+Parameters are plain nested-dict pytrees.  Every module is an
+``init(rng, ...) -> params`` / ``apply(params, ...) -> out`` pair of pure
+functions.  RNG handling uses explicit jax.random key splitting.
+"""
+from repro.nn.core import (
+    Initializer,
+    dense_init,
+    dense_apply,
+    embedding_init,
+    embedding_lookup,
+    rmsnorm_init,
+    rmsnorm_apply,
+    layernorm_init,
+    layernorm_apply,
+    mlp_init,
+    mlp_apply,
+    glu_mlp_init,
+    glu_mlp_apply,
+    param_count,
+    param_bytes,
+    tree_cast,
+)
+
+__all__ = [
+    "Initializer",
+    "dense_init",
+    "dense_apply",
+    "embedding_init",
+    "embedding_lookup",
+    "rmsnorm_init",
+    "rmsnorm_apply",
+    "layernorm_init",
+    "layernorm_apply",
+    "mlp_init",
+    "mlp_apply",
+    "glu_mlp_init",
+    "glu_mlp_apply",
+    "param_count",
+    "param_bytes",
+    "tree_cast",
+]

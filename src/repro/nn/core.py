@@ -1,0 +1,135 @@
+"""Core functional layers: dense, embedding, norms, MLPs.
+
+Conventions
+-----------
+* ``init`` functions take an explicit PRNG key and static shape info and
+  return a params pytree (nested dicts of jnp arrays).
+* ``apply`` functions are pure; the params pytree is the first argument.
+* ``dtype`` on init controls the *stored* parameter dtype; compute dtype is
+  the dtype of the activations flowing in (we upcast norms internally).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Initializer = Callable[[jax.Array, tuple, jnp.dtype], jax.Array]
+
+
+def _fan_in_init(key: jax.Array, shape: tuple, dtype) -> jax.Array:
+    """Truncated-normal fan-in init (std = 1/sqrt(fan_in))."""
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def _normal_init(std: float) -> Initializer:
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+    return init
+
+
+# ---------------------------------------------------------------- dense
+
+
+def dense_init(key, d_in: int, d_out: int, *, use_bias: bool = False,
+               dtype=jnp.float32, initializer: Initializer = _fan_in_init):
+    p = {"w": initializer(key, (d_in, d_out), dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- embedding
+
+
+def embedding_init(key, vocab: int, d: int, *, dtype=jnp.float32, std: float = 0.02):
+    return {"table": _normal_init(std)(key, (vocab, d), dtype)}
+
+
+def embedding_lookup(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+# ---------------------------------------------------------------- norms
+
+
+def rmsnorm_init(d: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p, x, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, *, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p, x, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLPs
+
+
+def mlp_init(key, d_in: int, d_hidden: int, d_out: int, *, use_bias: bool = True,
+             dtype=jnp.float32):
+    """Plain 2-layer MLP with GELU (used by GNN transforms / ranker heads)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "in": dense_init(k1, d_in, d_hidden, use_bias=use_bias, dtype=dtype),
+        "out": dense_init(k2, d_hidden, d_out, use_bias=use_bias, dtype=dtype),
+    }
+
+
+def mlp_apply(p, x):
+    return dense_apply(p["out"], jax.nn.gelu(dense_apply(p["in"], x)))
+
+
+def glu_mlp_init(key, d_model: int, d_ff: int, *, dtype=jnp.float32):
+    """SwiGLU MLP (llama-family FFN)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype=dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def glu_mlp_apply(p, x):
+    return dense_apply(p["down"], jax.nn.silu(dense_apply(p["gate"], x)) * dense_apply(p["up"], x))
+
+
+# ---------------------------------------------------------------- utils
+
+
+def param_count(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)

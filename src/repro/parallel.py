@@ -1,0 +1,239 @@
+"""Sharding rules: parameter/activation/state PartitionSpecs per architecture.
+
+Mesh axes: ``("data", "model")`` single-pod 16×16, ``("pod", "data",
+"model")`` multi-pod 2×16×16.  Policy (DESIGN.md §5):
+
+  * batch dims         → ("pod", "data") jointly (replicated when indivisible)
+  * attention heads    → "model" (weights column/row-sharded)
+  * FFN hidden         → "model"
+  * vocab              → "model" (embedding rows + lm_head cols)
+  * MoE expert dim     → "data"  (expert parallelism; shard_map all_to_all)
+  * SSM inner channels → "model"
+  * KV-cache heads     → "model" when divisible, else replicated (the GQA
+    kv<model case — a known memory lever, see EXPERIMENTS.md §Perf)
+  * long_500k KV seq   → "data" (batch=1 cannot use the data axis otherwise)
+
+Specs are derived from parameter *paths*, so they survive the stacked-block
+layout (a leading num_blocks axis maps to spec prefix None).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+
+
+# ------------------------------------------------------------- param rules
+
+# path-regex -> spec builder (specs WITHOUT the stacked-block leading axis).
+# 2D "FSDP + TP" sharding: the contraction/input dim of every large matrix is
+# sharded over "data" (ZeRO-3 style — weights are all-gathered per block
+# inside the scan) and the output/hidden dim over "model" (tensor parallel).
+_RULES = [
+    (r"embed/table$",            lambda cfg: P("model", "data")),
+    (r"lm_head/w$",              lambda cfg: P("data", "model")),
+    (r"gnn_proj/w$",             lambda cfg: P(None, None)),
+    (r"gnn_proj/b$",             lambda cfg: P(None)),
+    (r"attn/w[qkv]/w$",          lambda cfg: P("data", "model")),
+    (r"attn/w[qkv]/b$",          lambda cfg: P("model")),
+    (r"attn/wo/w$",              lambda cfg: P("model", "data")),
+    (r"attn/wo/b$",              lambda cfg: P(None)),
+    (r"mlp/(gate|up|in)/w$",     lambda cfg: P("data", "model")),
+    (r"mlp/(gate|up|in)/b$",     lambda cfg: P("model")),
+    (r"mlp/(down|out)/w$",       lambda cfg: P("model", "data")),
+    (r"mlp/(down|out)/b$",       lambda cfg: P(None)),
+    (r"moe/router/w$",           lambda cfg: P(None, None)),
+    (r"moe/w_(gate|up)$",        lambda cfg: P("data", None, "model")),
+    (r"moe/w_down$",             lambda cfg: P("data", "model", None)),
+    (r"ssm/(z_proj|x_proj|dt_proj)/w$", lambda cfg: P("data", "model")),
+    (r"ssm/(z_proj|x_proj|dt_proj)/b$", lambda cfg: P("model")),
+    (r"ssm/(B_proj|C_proj)/w$",  lambda cfg: P("data", None)),   # small, head-shared
+    (r"ssm/(B_proj|C_proj)/b$",  lambda cfg: P(None)),
+    (r"ssm/out_proj/w$",         lambda cfg: P("model", "data")),
+    (r"ssm/out_proj/b$",         lambda cfg: P(None)),
+    (r"ssm/conv_x/w$",           lambda cfg: P(None, "model")),
+    (r"ssm/conv_x/b$",           lambda cfg: P("model")),
+    (r"ssm/conv_[BC]/(w|b)$",    lambda cfg: P(None)),
+    (r"ssm/(A_log|dt_bias|D)$",  lambda cfg: P("model")),
+    (r"ssm/norm/scale$",         lambda cfg: P("model")),
+    (r"norm/(scale|bias)$",      lambda cfg: P(None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):        # NamedTuple fields (GetAttrKey)
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _spec_for(cfg: ArchConfig, path_str: str, ndim: int, shape, mesh: Mesh) -> P:
+    # strip the stacked-block container prefix "blocks/<...>/layers/<j>/"
+    core = re.sub(r"^blocks/", "", path_str)
+    stacked = core != path_str
+    core = re.sub(r"^layers/\d+/", "", core)
+    # wk/wv override: sharding the flat (hkv·dh) output dim when hkv does
+    # not divide the model axis would split head_dim across devices, forcing
+    # attention-logit all-reduces every layer (iteration-0 dry-run finding).
+    # Replicate the small K/V projection columns instead; q stays sharded.
+    if re.search(r"attn/w[kv]/", core) and cfg.num_heads:
+        if cfg.num_kv_heads % mesh.shape["model"] != 0:
+            spec = P("data", None) if core.endswith("/w") else P(None)
+            if stacked:
+                spec = P(None, *spec)
+            return _drop_indivisible(spec, shape, mesh)
+    # same trap for wq/wo when q heads don't divide the model axis (MHA
+    # with 24/40 heads): GSPMD would split head_dim instead → per-layer
+    # attention-logit all-reduces (§Perf iteration 2 finding)
+    if re.search(r"attn/w[qo]/", core) and cfg.num_heads:
+        if cfg.num_heads % mesh.shape["model"] != 0:
+            spec = P("data", None) if core.endswith("/w") else P(None)
+            if stacked:
+                spec = P(None, *spec)
+            return _drop_indivisible(spec, shape, mesh)
+    for pat, make in _RULES:
+        if re.search(pat, core):
+            spec = make(cfg)
+            if not cfg.fsdp and "moe/" not in core:
+                # serving / small-model mode: weights resident, no ZeRO
+                # all-gathers — drop the "data" factor from weight specs
+                # (MoE expert sharding over "data" is EP, not FSDP: keep it)
+                spec = P(*[None if ax == "data" else ax for ax in spec])
+            if not cfg.tp and "moe/" not in core:
+                spec = P(*[None if ax == "model" else ax for ax in spec])
+            if stacked:
+                spec = P(None, *spec)
+            spec = _drop_indivisible(spec, shape, mesh)
+            return spec
+    return P(*([None] * ndim))
+
+
+def _drop_indivisible(spec: P, shape, mesh: Mesh) -> P:
+    """Replace axis assignments that do not divide the dim (GQA kv<model etc.)."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(ax if dim % size == 0 else None)
+    return P(*out)
+
+
+def param_pspecs(cfg: ArchConfig, params, mesh: Mesh):
+    """Pytree of PartitionSpecs matching ``params``."""
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat[0]:
+        ps = _path_str(path)
+        specs.append(_spec_for(cfg, ps, np.ndim(leaf), np.shape(leaf), mesh))
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def param_shardings(cfg: ArchConfig, params, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(cfg, params, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------- batch / state
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _batch_axis_for(global_batch: int, mesh: Mesh):
+    axes = batch_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if global_batch % size == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if global_batch % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def data_pspecs(cfg: ArchConfig, shape: InputShape, mesh: Mesh):
+    """PartitionSpecs for the train/prefill batch dict."""
+    ba = _batch_axis_for(shape.global_batch, mesh)
+    specs = {"tokens": P(ba, None), "labels": P(ba, None)}
+    if cfg.modality != "text":
+        specs["prefix_emb"] = P(ba, None, None)
+    if cfg.gnn_conditioning:
+        specs["gnn_emb"] = P(ba, None)
+    return specs
+
+
+def decode_state_pspecs(cfg: ArchConfig, state, shape: InputShape, mesh: Mesh):
+    """Specs for DecodeState: caches/SSM states stacked over blocks."""
+    from repro.models.layers import KVCache
+    from repro.models.ssm import SSMState
+
+    ba = _batch_axis_for(shape.global_batch, mesh)
+    long_seq = shape.global_batch == 1          # long_500k: shard cache seq
+
+    def kv_spec(x):
+        # [nblocks, B, Hkv, S, dh].  Heads shard over "model" when they
+        # divide; otherwise the cache *seq* dim takes the model axis (a
+        # replicated multi-GB cache costs an all-gather per step — seen in
+        # the baseline llama decode_32k dry-run).  long_500k (batch=1)
+        # additionally puts the idle data axis on seq.
+        hkv, s = x.shape[2], x.shape[3]
+        head_ax = "model" if hkv % mesh.shape["model"] == 0 else None
+        seq_axes = []
+        if long_seq and s % mesh.shape["data"] == 0:
+            seq_axes.append("data")
+        if head_ax is None and s % mesh.shape["model"] == 0:
+            seq_axes.append("model")
+        seq_ax = tuple(seq_axes) if len(seq_axes) > 1 else (seq_axes[0] if seq_axes else None)
+        return P(None, ba, head_ax, seq_ax, None)
+
+    def leaf_spec(path, x):
+        ps = _path_str(path)
+        nd = np.ndim(x)
+        if nd == 0:
+            return P()
+        if ps.endswith("/k") or ps.endswith("/v"):
+            return kv_spec(x)
+        if ps.endswith("/length"):
+            return P(None, ba)
+        if ps.endswith("/conv_x"):                # [nb, B, W-1, d_inner]
+            ax = "model" if x.shape[3] % mesh.shape["model"] == 0 else None
+            return P(None, ba, None, ax)
+        if ps.endswith("/conv_B") or ps.endswith("/conv_C"):
+            return P(None, ba, None, None)
+        if ps.endswith("/ssd"):                   # [nb, B, H, N, P]
+            ax = "model" if x.shape[2] % mesh.shape["model"] == 0 else None
+            return P(None, ba, ax, None, None)
+        return P(*([None] * nd))
+
+    flat = jax.tree_util.tree_flatten_with_path(state)
+    specs = [leaf_spec(p, l) for p, l in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def opt_pspecs(param_specs, opt_state):
+    """AdamW m/v mirror the param specs; step is replicated."""
+    from repro.optim import AdamWState
+    return AdamWState(step=P(), m=param_specs, v=param_specs)
+
+
+def shardings_of(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,167 @@
+"""Per-kernel correctness: interpret-mode Pallas vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((RNG.normal(size=shape) * scale).astype(dtype))
+
+
+# ------------------------------------------------------------ neighbor mean
+
+
+@pytest.mark.parametrize("n,f,d", [(8, 4, 32), (128, 10, 128), (300, 7, 96),
+                                   (64, 25, 200)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_neighbor_mean_matches_ref(n, f, d, dtype):
+    feats = _arr((n, f, d), np.float32).astype(dtype)
+    mask = jnp.asarray((RNG.random((n, f)) < 0.7).astype(np.float32))
+    got = ops.neighbor_mean(feats, mask, impl="interpret")
+    want = ops.neighbor_mean(feats, mask, impl="ref")
+    tol = 1e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_neighbor_mean_all_masked_rows_are_zero():
+    feats = _arr((16, 5, 64))
+    mask = jnp.zeros((16, 5))
+    out = ops.neighbor_mean(feats, mask, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_neighbor_mean_leading_dims():
+    feats = _arr((4, 6, 5, 32))
+    mask = jnp.asarray((RNG.random((4, 6, 5)) < 0.5).astype(np.float32))
+    got = ops.neighbor_mean(feats, mask, impl="interpret")
+    want = ref.neighbor_mean(feats, mask)
+    assert got.shape == (4, 6, 32)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------- sage attention
+
+
+@pytest.mark.parametrize("n,f,d", [(16, 4, 32), (128, 10, 128), (200, 25, 64)])
+def test_sage_attention_matches_ref(n, f, d):
+    q = _arr((n, d))
+    k = _arr((n, f, d))
+    v = _arr((n, f, d))
+    mask = jnp.asarray((RNG.random((n, f)) < 0.8).astype(np.float32))
+    got = ops.neighbor_attention(q, k, v, mask, impl="interpret")
+    want = ops.neighbor_attention(q, k, v, mask, impl="ref")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sage_attention_weights_sum_to_one_effect():
+    # with identical v vectors, output must equal v regardless of mask pattern
+    n, f, d = 32, 6, 16
+    q = _arr((n, d))
+    k = _arr((n, f, d))
+    v = jnp.broadcast_to(_arr((n, 1, d)), (n, f, d))
+    mask = jnp.ones((n, f))
+    out = ops.neighbor_attention(q, k, v, mask, impl="interpret")
+    np.testing.assert_allclose(out, v[:, 0], rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ flash attention
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,dh", [
+    (2, 4, 2, 256, 64), (1, 8, 1, 128, 128), (2, 2, 2, 512, 64)])
+@pytest.mark.parametrize("window", [0, 64])
+def test_flash_attention_matches_ref(b, hq, hkv, s, dh, window):
+    q, k, v = _arr((b, hq, s, dh)), _arr((b, hkv, s, dh)), _arr((b, hkv, s, dh))
+    got = ops.mha(q, k, v, causal=True, window=window, impl="interpret",
+                  block_q=128, block_k=128)
+    want = ops.mha(q, k, v, causal=True, window=window, impl="ref")
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    b, hq, hkv, s, dh = 2, 4, 2, 256, 64
+    q = _arr((b, hq, s, dh)).astype(jnp.bfloat16)
+    k = _arr((b, hkv, s, dh)).astype(jnp.bfloat16)
+    v = _arr((b, hkv, s, dh)).astype(jnp.bfloat16)
+    got = ops.mha(q, k, v, impl="interpret", block_q=128, block_k=128)
+    want = ops.mha(q, k, v, impl="ref")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("window", [0, 64])
+def test_decode_attention_matches_ref(window):
+    b, hq, hkv, s, dh = 3, 8, 2, 256, 64
+    q = _arr((b, hq, dh))
+    k, v = _arr((b, hkv, s, dh)), _arr((b, hkv, s, dh))
+    lens = jnp.asarray([100, 256, 17], jnp.int32)
+    got = ops.decode_attention(q, k, v, lens, window=window, impl="interpret",
+                               block_k=128)
+    want = ops.decode_attention(q, k, v, lens, window=window, impl="ref")
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_single_valid_slot():
+    # cache_len=1: output must equal v[:, :, 0] (per GQA group)
+    b, hq, hkv, s, dh = 2, 4, 2, 128, 32
+    q = _arr((b, hq, dh))
+    k, v = _arr((b, hkv, s, dh)), _arr((b, hkv, s, dh))
+    lens = jnp.ones((b,), jnp.int32)
+    out = ops.decode_attention(q, k, v, lens, impl="interpret", block_k=128)
+    want = jnp.repeat(v[:, :, 0, :], hq // hkv, axis=1)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- SSD
+
+
+@pytest.mark.parametrize("b,L,H,P,N,chunk", [
+    (2, 128, 3, 16, 24, 32), (1, 256, 2, 64, 128, 64), (2, 64, 4, 32, 16, 64)])
+def test_ssd_chunked_ref_matches_sequential(b, L, H, P, N, chunk):
+    x = _arr((b, L, H, P))
+    dt = jnp.asarray(RNG.random((b, L, H)).astype(np.float32) * 0.1)
+    A = jnp.asarray(-RNG.random(H).astype(np.float32))
+    B = _arr((b, L, N))
+    C = _arr((b, L, N))
+    y0, s0 = ref.ssd_scan(x, dt, A, B, C)
+    y1, s1 = ref.ssd_scan_chunked(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s0, s1, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,L,H,P,N,chunk", [
+    (2, 128, 3, 16, 24, 32), (1, 128, 2, 64, 128, 64)])
+def test_ssd_kernel_matches_ref(b, L, H, P, N, chunk):
+    x = _arr((b, L, H, P))
+    dt = jnp.asarray(RNG.random((b, L, H)).astype(np.float32) * 0.1)
+    A = jnp.asarray(-RNG.random(H).astype(np.float32))
+    B = _arr((b, L, N))
+    C = _arr((b, L, N))
+    y0, s0 = ref.ssd_scan(x, dt, A, B, C)
+    y1, s1 = ops.ssd(x, dt, A, B, C, chunk=chunk, impl="interpret")
+    np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s0, s1, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decode_consistent_with_scan():
+    b, L, H, P, N = 2, 16, 3, 8, 12
+    x = _arr((b, L, H, P))
+    dt = jnp.asarray(RNG.random((b, L, H)).astype(np.float32) * 0.1)
+    A = jnp.asarray(-RNG.random(H).astype(np.float32))
+    B = _arr((b, L, N))
+    C = _arr((b, L, N))
+    y_scan, s_final = ref.ssd_scan(x, dt, A, B, C)
+    S = jnp.zeros((b, H, N, P), jnp.float32)
+    ys = []
+    for t in range(L):
+        y, S = ref.ssd_decode_step(S, x[:, t], dt[:, t], A, B[:, t], C[:, t])
+        ys.append(y)
+    np.testing.assert_allclose(jnp.stack(ys, 1), y_scan, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(S, s_final, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,181 @@
+"""LinkSAGE core behaviour: graph construction, sampling, encoder/decoders,
+end-to-end training signal."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from dataclasses import replace
+
+from repro.configs.linksage import CONFIG as GNN_CONFIG, smoke as gnn_smoke
+from repro.core import decoder as dec
+from repro.core import encoder as enc
+from repro.core.eval import auc, recall_at_k, retrieval_eval
+from repro.core.graph import EDGE_TYPES, NODE_TYPES, HeteroGraph
+from repro.core.linksage import LinkSAGETrainer, _to_jnp, linksage_init
+from repro.core.sampler import NeighborSampler, SamplerConfig
+from repro.data import GraphGenConfig, generate_job_marketplace_graph
+from repro.data.synthetic_graph import strip_skill_nodes
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    cfg = GraphGenConfig(num_members=300, num_jobs=100, seed=7)
+    return generate_job_marketplace_graph(cfg)
+
+
+def test_graph_has_paper_node_and_edge_types(small_graph):
+    g, _ = small_graph
+    assert set(g.num_nodes) == set(NODE_TYPES)
+    census = g.census()
+    # paper Table 2: engagement edges dominate recruiter edges
+    assert census["edges"]["member->job"] > census["edges"]["job->member"]
+    # reciprocal attribute edges exist (§4.3 bidirectionality)
+    for a in ("skill", "title", "company", "position"):
+        assert census["edges"][f"member->{a}"] > 0
+        assert census["edges"][f"{a}->member"] > 0
+
+
+def test_skill_ablation_strips_only_skill_edges(small_graph):
+    g, _ = small_graph
+    g2 = strip_skill_nodes(g)
+    assert all("skill" not in k for k in g2.adj)
+    assert g2.edge_count("member", "job") == g.edge_count("member", "job")
+
+
+def test_sampler_shapes_and_masks(small_graph):
+    g, _ = small_graph
+    s = NeighborSampler(g, SamplerConfig(fanouts=(5, 3), seed=0))
+    ids = np.arange(32)
+    tile = s.sample_batch("member", ids)
+    assert tile.q_feat.shape == (32, g.feat_dim)
+    assert tile.n1_feat.shape == (32, 5, g.feat_dim)
+    assert tile.n2_feat.shape == (32, 5, 3, g.feat_dim)
+    # masked hop-2 entries must be zero-featured
+    masked = tile.n2_mask == 0
+    assert np.all(tile.n2_feat[masked] == 0)
+    # a member always has attribute edges -> hop-1 fully valid
+    assert tile.n1_mask.mean() > 0.9
+
+
+def test_sampler_respects_edge_direction(small_graph):
+    g, _ = small_graph
+    s = NeighborSampler(g, SamplerConfig(fanouts=(64, 1), seed=0))
+    tile = s.sample_batch("member", np.arange(20))
+    # neighbors of members are attrs or jobs, never other members
+    member_tid = NODE_TYPES.index("member")
+    valid = tile.n1_mask > 0
+    assert not np.any(tile.n1_type[valid] == member_tid)
+
+
+@pytest.mark.parametrize("aggregator", ["mean", "attention"])
+def test_encoder_shapes_and_finiteness(small_graph, aggregator):
+    g, _ = small_graph
+    cfg = replace(gnn_smoke(), aggregator=aggregator, feat_dim=g.feat_dim)
+    s = NeighborSampler(g, SamplerConfig(fanouts=cfg.fanouts, seed=0))
+    params = linksage_init(jax.random.PRNGKey(0), cfg)
+    tile = _to_jnp(s.sample_batch("member", np.arange(16)))
+    emb = enc.encoder_apply(params["encoder"], cfg, tile)
+    assert emb.shape == (16, cfg.embed_dim)
+    assert bool(jnp.all(jnp.isfinite(emb)))
+
+
+def test_encoder_uses_neighbor_information(small_graph):
+    """Zeroing hop-1 masks must change the embedding (the GNN actually
+    aggregates; paper §3 information-propagation claim)."""
+    g, _ = small_graph
+    cfg = replace(gnn_smoke(), feat_dim=g.feat_dim)
+    s = NeighborSampler(g, SamplerConfig(fanouts=cfg.fanouts, seed=0))
+    params = linksage_init(jax.random.PRNGKey(0), cfg)
+    tile = s.sample_batch("member", np.arange(8))
+    emb = enc.encoder_apply(params["encoder"], cfg, _to_jnp(tile))
+    blinded = tile._replace(n1_mask=np.zeros_like(tile.n1_mask),
+                            n2_mask=np.zeros_like(tile.n2_mask))
+    emb2 = enc.encoder_apply(params["encoder"], cfg, _to_jnp(blinded))
+    assert float(jnp.max(jnp.abs(emb - emb2))) > 1e-4
+
+
+@pytest.mark.parametrize("decoder", ["inbatch", "mlp", "cosine"])
+def test_decoders(decoder):
+    cfg = replace(gnn_smoke(), decoder=decoder)
+    key = jax.random.PRNGKey(0)
+    m = jax.random.normal(key, (8, cfg.embed_dim))
+    j = jax.random.normal(jax.random.PRNGKey(1), (8, cfg.embed_dim))
+    params = dec.decoder_init(key, cfg)
+    if decoder == "inbatch":
+        loss = dec.inbatch_loss(cfg, m, j)
+    else:
+        loss = dec.pairwise_loss(params, cfg, m, j, jnp.ones(8))
+    assert np.isfinite(float(loss))
+
+
+def test_sigmoid_ce_matches_naive():
+    logits = jnp.asarray([-5.0, -0.1, 0.0, 2.0, 10.0])
+    labels = jnp.asarray([0.0, 1.0, 1.0, 0.0, 1.0])
+    naive = -(labels * jnp.log(jax.nn.sigmoid(logits))
+              + (1 - labels) * jnp.log(1 - jax.nn.sigmoid(logits) + 1e-12))
+    np.testing.assert_allclose(dec.sigmoid_ce(logits, labels), naive,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_training_beats_random_retrieval(small_graph):
+    g, truth = small_graph
+    cfg = replace(GNN_CONFIG, hidden_dim=64, embed_dim=64, fanouts=(6, 3))
+    tr = LinkSAGETrainer(cfg, g, seed=0)
+    hist = tr.train(120, batch_size=64)
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.5
+    m_emb = tr.embed_nodes("member", np.arange(300))
+    j_emb = tr.embed_nodes("job", np.arange(100))
+    src, dst = truth["engagements"]
+    r = retrieval_eval(m_emb, j_emb, src, dst, k=10)["recall"]
+    rng = np.random.default_rng(0)
+    r_rand = retrieval_eval(rng.normal(size=m_emb.shape),
+                            rng.normal(size=j_emb.shape), src, dst, k=10)["recall"]
+    assert r > 3 * r_rand, (r, r_rand)
+
+
+# ------------------------------------------------------------- eval utils
+
+
+def test_auc_known_values():
+    labels = np.array([1, 1, 0, 0])
+    assert auc(labels, np.array([0.9, 0.8, 0.2, 0.1])) == 1.0
+    assert auc(labels, np.array([0.1, 0.2, 0.8, 0.9])) == 0.0
+    assert abs(auc(labels, np.array([0.5, 0.5, 0.5, 0.5])) - 0.5) < 1e-9
+
+
+def test_recall_at_k_perfect_and_zero():
+    scores = np.eye(4) + 0.01
+    positives = [{0}, {1}, {2}, {3}]
+    assert recall_at_k(scores, positives, k=1) == 1.0
+    positives_wrong = [{3}, {2}, {1}, {0}]
+    assert recall_at_k(scores, positives_wrong, k=1) == 0.0
+
+
+def test_degree_weighted_sampling(small_graph):
+    """DeepGNN-style weighted sampling (§4.1): high-degree neighbors are
+    over-represented relative to uniform sampling."""
+    g, _ = small_graph
+    uni = NeighborSampler(g, SamplerConfig(fanouts=(32, 1), strategy="uniform", seed=0))
+    wei = NeighborSampler(g, SamplerConfig(fanouts=(32, 1), strategy="degree_weighted", seed=0))
+    ids = np.arange(64)
+    t_u = uni.sample_batch("member", ids)
+    t_w = wei.sample_batch("member", ids)
+
+    # structural check: same shapes/masks, sampling remains valid
+    assert t_w.n1_feat.shape == t_u.n1_feat.shape
+    assert t_w.n1_mask.sum() == t_u.n1_mask.sum()
+    # distributional check: weighted sampling raises the mean degree of the
+    # sampled hop-1 neighborhood (hubs over-represented)
+    feat_norm_w = np.linalg.norm(t_w.n1_feat[t_w.n1_mask > 0], axis=-1)
+    feat_norm_u = np.linalg.norm(t_u.n1_feat[t_u.n1_mask > 0], axis=-1)
+    assert feat_norm_w.size == feat_norm_u.size  # same valid count
+    # degree itself via the sampler's merged adjacency proxy: resample ids
+    # through a direct hop and compare mean neighbor degree
+    def mean_deg(sampler):
+        ty, ids, mask = sampler._sample_hop(
+            np.zeros(64, np.int8), np.arange(64, dtype=np.int32), 32)
+        degs = [sampler._degree_of(int(t), int(i))
+                for t, i, m in zip(ty.ravel(), ids.ravel(), mask.ravel()) if m]
+        return np.mean(degs)
+
+    assert mean_deg(wei) > mean_deg(uni)

@@ -1,0 +1,126 @@
+"""Hypothesis property-based tests on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decoder as dec
+from repro.core.eval import auc
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(n=st.integers(2, 40), f=st.integers(1, 12), d=st.integers(1, 48),
+       seed=st.integers(0, 2**16))
+def test_neighbor_mean_bounded_by_extremes(n, f, d, seed):
+    """Masked mean stays inside [min, max] of the valid neighbors."""
+    rng = np.random.default_rng(seed)
+    feats = jnp.asarray(rng.normal(size=(n, f, d)).astype(np.float32))
+    mask = jnp.asarray((rng.random((n, f)) < 0.6).astype(np.float32))
+    out = np.asarray(ref.neighbor_mean(feats, mask))
+    fa = np.asarray(feats)
+    ma = np.asarray(mask) > 0
+    for i in range(n):
+        if not ma[i].any():
+            assert np.all(out[i] == 0)
+            continue
+        vals = fa[i][ma[i]]
+        assert np.all(out[i] <= vals.max(0) + 1e-5)
+        assert np.all(out[i] >= vals.min(0) - 1e-5)
+
+
+@given(n=st.integers(1, 20), f=st.integers(1, 8), d=st.integers(1, 32),
+       seed=st.integers(0, 2**16))
+def test_neighbor_attention_is_convex_combination(n, f, d, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(n, f, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(n, f, d)).astype(np.float32))
+    mask = jnp.asarray((rng.random((n, f)) < 0.7).astype(np.float32))
+    out = np.asarray(ref.neighbor_attention(q, k, v, mask))
+    va, ma = np.asarray(v), np.asarray(mask) > 0
+    for i in range(n):
+        if not ma[i].any():
+            assert np.all(out[i] == 0)
+            continue
+        vals = va[i][ma[i]]
+        assert np.all(out[i] <= vals.max(0) + 1e-4)
+        assert np.all(out[i] >= vals.min(0) - 1e-4)
+
+
+@given(s=st.integers(2, 24), window=st.integers(1, 24), seed=st.integers(0, 999))
+def test_attention_causality(s, window, seed):
+    """Perturbing future tokens never changes past outputs (any window)."""
+    rng = np.random.default_rng(seed)
+    b, h, dh = 1, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, h, s, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, h, s, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, h, s, dh)).astype(np.float32))
+    t = s // 2
+    out1 = np.asarray(ref.mha(q, k, v, causal=True, window=window))
+    k2 = k.at[:, :, t:, :].add(10.0)
+    v2 = v.at[:, :, t:, :].add(-5.0)
+    out2 = np.asarray(ref.mha(q, k2, v2, causal=True, window=window))
+    np.testing.assert_allclose(out1[:, :, :t], out2[:, :, :t], rtol=1e-5,
+                               atol=1e-5)
+
+
+@given(L=st.sampled_from([16, 32, 64]), chunk=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 2**16))
+def test_ssd_chunk_invariance(L, chunk, seed):
+    """Chunked SSD must be exactly chunk-size invariant (linear recurrence)."""
+    rng = np.random.default_rng(seed)
+    b, H, P, N = 1, 2, 8, 12
+    x = jnp.asarray(rng.normal(size=(b, L, H, P)).astype(np.float32))
+    dt = jnp.asarray((rng.random((b, L, H)) * 0.2).astype(np.float32))
+    A = jnp.asarray((-rng.random(H)).astype(np.float32))
+    B = jnp.asarray(rng.normal(size=(b, L, N)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(b, L, N)).astype(np.float32))
+    y1, s1 = ref.ssd_scan_chunked(x, dt, A, B, C, chunk=chunk)
+    y2, s2 = ref.ssd_scan(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4,
+                               atol=2e-4)
+
+
+@given(seed=st.integers(0, 2**16), b=st.integers(2, 16))
+def test_inbatch_loss_positive_and_permutation_consistent(seed, b):
+    """Permuting members AND jobs consistently leaves the in-batch loss
+    unchanged (the objective depends only on the pairing)."""
+    from repro.configs.linksage import CONFIG
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.normal(size=(b, 16)).astype(np.float32))
+    j = jnp.asarray(rng.normal(size=(b, 16)).astype(np.float32))
+    loss = float(dec.inbatch_loss(CONFIG, m, j))
+    assert loss > 0
+    perm = rng.permutation(b)
+    loss_p = float(dec.inbatch_loss(CONFIG, m[perm], j[perm]))
+    np.testing.assert_allclose(loss, loss_p, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**16), n=st.integers(4, 64))
+def test_auc_is_shift_and_scale_invariant(seed, n):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 2, n)
+    if labels.min() == labels.max():
+        labels[0] = 1 - labels[0]
+    scores = rng.normal(size=n)
+    a1 = auc(labels, scores)
+    a2 = auc(labels, scores * 3.7 + 11.0)
+    np.testing.assert_allclose(a1, a2, atol=1e-12)
+
+
+@given(seed=st.integers(0, 2**16))
+def test_sigmoid_ce_nonnegative_and_zero_at_perfect(seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=16).astype(np.float32) * 5)
+    labels = jnp.asarray((rng.random(16) < 0.5).astype(np.float32))
+    ce = np.asarray(dec.sigmoid_ce(logits, labels))
+    assert np.all(ce >= 0)
+    big = jnp.asarray([100.0, -100.0])
+    lab = jnp.asarray([1.0, 0.0])
+    np.testing.assert_allclose(np.asarray(dec.sigmoid_ce(big, lab)), 0.0,
+                               atol=1e-6)

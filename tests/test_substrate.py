@@ -1,0 +1,87 @@
+"""Substrate layers: optimizer, schedules, checkpointing, nn primitives."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import nn
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         cosine_schedule, global_norm, linear_warmup_cosine)
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    target = jnp.asarray([1.0, 2.0])
+
+    @jax.jit
+    def step(params, opt):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return adamw_update(params, g, opt, lr=0.1, weight_decay=0.0)
+
+    for _ in range(300):
+        params, opt = step(params, opt)
+    np.testing.assert_allclose(params["w"], target, atol=1e-2)
+
+
+def test_adamw_moments_in_fp32_for_bf16_params():
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    opt = adamw_init(params)
+    assert opt.m["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    p2, opt2 = adamw_update(params, g, opt, lr=1e-2)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert opt2.v["w"].dtype == jnp.float32
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    np.testing.assert_allclose(float(norm), np.sqrt(90 + 160), rtol=1e-5)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-4)
+
+
+def test_schedules():
+    lr = cosine_schedule(1.0, 100, final_frac=0.1)
+    assert abs(float(lr(jnp.asarray(0))) - 1.0) < 1e-6
+    assert abs(float(lr(jnp.asarray(100))) - 0.1) < 1e-6
+    wlr = linear_warmup_cosine(1.0, 10, 110)
+    assert float(wlr(jnp.asarray(5))) == pytest.approx(0.5, rel=1e-5)
+    assert float(wlr(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layer": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                      "b": jnp.ones(3)},
+            "step": jnp.asarray(7)}
+    d = str(tmp_path)
+    save_checkpoint(d, 100, tree)
+    assert latest_step(d) == 100
+    template = jax.tree.map(jnp.zeros_like, tree)
+    restored = load_checkpoint(d, 100, template)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="structure mismatch"):
+        load_checkpoint(d, 1, {"b": jnp.zeros(2)})
+
+
+def test_rmsnorm_unit_scale_property():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 64)) * 10)
+    p = nn.rmsnorm_init(64)
+    y = nn.rmsnorm_apply(p, x)
+    rms = jnp.sqrt(jnp.mean(y.astype(jnp.float32) ** 2, axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+
+def test_param_count_and_bytes():
+    tree = {"w": jnp.zeros((3, 4), jnp.bfloat16), "b": jnp.zeros(4, jnp.float32)}
+    assert nn.param_count(tree) == 16
+    assert nn.param_bytes(tree) == 12 * 2 + 4 * 4
