@@ -40,6 +40,21 @@ def bench_sage_attention():
          f"gb_per_s={k.nbytes * 2 / (us / 1e6) / 1e9:.2f}")
 
 
+def bench_sage_layer():
+    n, f, d = 4096, 10, 128
+    h_self = jnp.asarray(RNG.normal(size=(n, d)).astype(np.float32))
+    h_neigh = jnp.asarray(RNG.normal(size=(n, f, d)).astype(np.float32))
+    mask = jnp.asarray((RNG.random((n, f)) < 0.8).astype(np.float32))
+    w = jnp.asarray((RNG.normal(size=(d, d)) * 0.1).astype(np.float32))
+    b = jnp.zeros((d,), jnp.float32)
+    fn = jax.jit(lambda hs, hn, m: ops.sage_layer(hs, hn, m, w, b, w, b,
+                                                  impl="ref"))
+    out, us = timed(lambda: jax.block_until_ready(fn(h_self, h_neigh, mask)))
+    flops = 2 * 2 * n * d * d + n * f * d          # dual matmul + masked mean
+    emit("kernel_sage_layer_4096x10x128", us,
+         f"gflops_per_s={flops / (us / 1e6) / 1e9:.1f}")
+
+
 def bench_flash_attention_ref():
     b, hq, hkv, s, dh = 1, 8, 2, 2048, 64
     q = jnp.asarray(RNG.normal(size=(b, hq, s, dh)).astype(np.float32))
@@ -88,6 +103,7 @@ def bench_roofline():
 ALL_KERNELS = [
     bench_neighbor_mean,
     bench_sage_attention,
+    bench_sage_layer,
     bench_flash_attention_ref,
     bench_ssd_scan_ref,
     bench_roofline,

@@ -1,5 +1,6 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 import argparse
+import json
 import sys
 import traceback
 
@@ -7,17 +8,23 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter on benchmark name")
+    ap.add_argument("--quick", action="store_true",
+                    help="graph census + kernel + nearline benchmarks only "
+                         "(skips the slow GNN-training tables; CI mode)")
     ap.add_argument("--skip-slow", action="store_true",
-                    help="skip the GNN-training benchmarks (tables 3-10)")
+                    help="deprecated alias of --quick")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted rows as JSON to PATH")
     args = ap.parse_args()
 
     from benchmarks.kernels_bench import ALL_KERNELS
+    from benchmarks.nearline_bench import ALL_NEARLINE
     from benchmarks.tables import ALL_TABLES
 
-    benches = list(ALL_TABLES) + list(ALL_KERNELS)
-    if args.skip_slow:
+    benches = list(ALL_TABLES) + list(ALL_KERNELS) + list(ALL_NEARLINE)
+    if args.skip_slow or args.quick:
         benches = [b for b in benches if b.__name__ == "bench_graph_construction"]
-        benches += list(ALL_KERNELS)
+        benches += list(ALL_KERNELS) + list(ALL_NEARLINE)
     if args.only:
         benches = [b for b in benches if args.only in b.__name__]
 
@@ -30,6 +37,11 @@ def main() -> None:
             failures += 1
             traceback.print_exc()
             print(f"{bench.__name__},nan,FAILED")
+    if args.json:
+        from benchmarks.common import ROWS
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us_per_call": us, "derived": d}
+                       for (n, us, d) in ROWS], f, indent=2)
     if failures:
         sys.exit(1)
 

@@ -48,13 +48,33 @@ def encoder_init(key, cfg: GNNConfig):
     return params
 
 
+# Crossover for _type_transform: the weight gather moves O(d·h) bytes per
+# element while the masked select spends O(T·d·h) FLOPs per element; dense
+# hardware (MXU / AVX) trades ~100 matmul FLOPs per byte of gather traffic,
+# so per-element weights only win once there are many node types.
+_GATHER_MIN_TYPES = 16
+
+
 def _type_transform(p, x, types):
-    """Per-type linear: x [..., d_in], types [...] int -> [..., h]."""
-    onehot = jax.nn.one_hot(types, p["w"].shape[0], dtype=x.dtype)      # [..., T]
-    # project with every type's W, then select — T is tiny (6)
-    proj = jnp.einsum("...d,tdh->...th", x, p["w"].astype(x.dtype))
-    proj = proj + p["b"].astype(x.dtype)
-    return jnp.einsum("...th,...t->...h", proj, onehot)
+    """Per-type linear: x [..., d_in], types [...] int -> [..., h].
+
+    Many types: gather each element's own W_t/b_t (take along the type axis)
+    and do one batched contraction — FLOPs are O(N·d·h) independent of the
+    number of node types.  Few types (the 6-type marketplace graph): a fused
+    masked accumulation that, unlike the old compute-all-T-projections-then-
+    select, never materializes the [..., T, h] projection tensor.
+    """
+    T = p["w"].shape[0]
+    w = p["w"].astype(x.dtype)
+    b = p["b"].astype(x.dtype)
+    if T >= _GATHER_MIN_TYPES:
+        ws = jnp.take(w, types, axis=0)                    # [..., d, h]
+        return jnp.einsum("...d,...dh->...h", x, ws) + jnp.take(b, types, axis=0)
+    out = jnp.take(b, types, axis=0)
+    for t in range(T):
+        sel = (types == t)[..., None].astype(x.dtype)
+        out = out + sel * (x @ w[t])
+    return out
 
 
 def _aggregate(layer, cfg: GNNConfig, h_query, h_neigh, mask):
@@ -67,6 +87,11 @@ def _aggregate(layer, cfg: GNNConfig, h_query, h_neigh, mask):
 
 
 def _sage_layer(layer, cfg: GNNConfig, h_self, h_neigh, mask):
+    if cfg.aggregator == "mean":
+        # fused kernel: masked mean + dual matmul + ReLU in one VMEM pass
+        return kops.sage_layer(h_self, h_neigh, mask,
+                               layer["self"]["w"], layer["self"]["b"],
+                               layer["neigh"]["w"], layer["neigh"]["b"])
     agg = _aggregate(layer, cfg, h_self, h_neigh, mask)
     out = nn.dense_apply(layer["self"], h_self) + nn.dense_apply(layer["neigh"], agg)
     return jax.nn.relu(out)

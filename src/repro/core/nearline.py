@@ -4,9 +4,10 @@ Faithfully reproduces the production dataflow without the JVM/Kafka stack:
 
   Kafka topics            → :class:`Topic` (append log + consumer offsets)
   NoSQL feature stores    → :class:`NoSQLStore` (keyed store with I/O counters)
-  neighbor stores/type    → :class:`NeighborStore` (bounded per-node lists)
+  neighbor stores/type    → :class:`NeighborStore` (bounded per-node rings)
   sequential join         → :meth:`NearlineInference._sequential_join`
-  nearline GNN inference  → batched jitted encoder on the joined tiles
+                            (batched multi_get joins; see DESIGN.md §5)
+  nearline GNN inference  → shape-bucketed jitted encoder on the joined tiles
   online feature store    → :class:`EmbeddingStore` (embedding + timestamp)
 
 Triggers (paper): (1) a recruiter creates a job posting; (2) new neighbors
@@ -89,6 +90,12 @@ class NoSQLStore:
         self.reads += 1
         return self._d.get(key, default)
 
+    def put_many(self, items) -> None:
+        """Bulk write (one RPC in the real store): items is (key, value)s."""
+        items = list(items)
+        self._d.update(items)
+        self.writes += len(items)
+
     def multi_get(self, keys):
         self.reads += len(keys)
         return [self._d.get(k) for k in keys]
@@ -100,8 +107,81 @@ class NoSQLStore:
         return len(self._d)
 
 
+class RingBuffer:
+    """Array-backed bounded neighbor lists for one (src_type, dst_type) edge
+    type: a [capacity, K] int32 ring per source node with a write cursor.
+
+    Replaces the old list-copy-append NoSQLStore values: ``add`` is an O(1)
+    in-place write, bulk bootstrap is a vectorized fill, and batched
+    sampling reads the backing arrays directly (no per-key dict gets).
+    Neighbor *order* inside a row is not meaningful once the ring wraps —
+    sampling is uniform over the resident set, so only membership matters.
+    """
+
+    def __init__(self, name: str, max_neighbors: int, capacity: int = 1024):
+        self.name = name
+        self.K = max_neighbors
+        self.buf = np.zeros((capacity, max_neighbors), np.int32)
+        self.count = np.zeros(capacity, np.int32)
+        self.head = np.zeros(capacity, np.int32)
+        self.reads = 0
+        self.writes = 0
+
+    @property
+    def capacity(self) -> int:
+        return self.buf.shape[0]
+
+    def _ensure(self, n: int) -> None:
+        cap = self.capacity
+        if n <= cap:
+            return
+        new_cap = max(cap * 2, n)
+        self.buf = np.concatenate(
+            [self.buf, np.zeros((new_cap - cap, self.K), np.int32)])
+        self.count = np.concatenate([self.count, np.zeros(new_cap - cap, np.int32)])
+        self.head = np.concatenate([self.head, np.zeros(new_cap - cap, np.int32)])
+
+    def add(self, src_id: int, dst_id: int) -> None:
+        self._ensure(src_id + 1)
+        self.buf[src_id, self.head[src_id]] = dst_id
+        self.head[src_id] = (self.head[src_id] + 1) % self.K
+        self.count[src_id] = min(self.count[src_id] + 1, self.K)
+        self.writes += 1
+
+    def bulk_load(self, indptr: np.ndarray, indices: np.ndarray) -> None:
+        """Vectorized bootstrap from a CSR: keep the last K neighbors/node."""
+        n = len(indptr) - 1
+        self._ensure(n)
+        deg = np.diff(indptr)
+        cnt = np.minimum(deg, self.K).astype(np.int64)
+        total = int(cnt.sum())
+        rows = np.repeat(np.arange(n), cnt)
+        offs = np.zeros(n + 1, np.int64)
+        np.cumsum(cnt, out=offs[1:])
+        pos = np.arange(total) - np.repeat(offs[:-1], cnt)
+        src_idx = np.repeat(indptr[1:] - cnt, cnt) + pos
+        self.buf[rows, pos] = indices[src_idx]
+        self.count[:n] = cnt
+        self.head[:n] = cnt % self.K
+        self.writes += total
+
+    def counts(self, ids: np.ndarray) -> np.ndarray:
+        """Vectorized degree lookup; ids beyond capacity have degree 0."""
+        self.reads += len(ids)
+        out = np.zeros(len(ids), np.int64)
+        ok = ids < self.capacity
+        out[ok] = self.count[ids[ok]]
+        return out
+
+    def row(self, src_id: int) -> np.ndarray:
+        self.reads += 1
+        if src_id >= self.capacity:
+            return self.buf[:0, 0]
+        return self.buf[src_id, :self.count[src_id]]
+
+
 class NeighborStore:
-    """Per-edge-type bounded neighbor lists keyed by (node_type, id).
+    """Per-edge-type bounded neighbor rings keyed by (node_type, id).
 
     One store monitors job neighbors per node type (paper: "multiple feature
     stores that monitor job neighbors per node type").
@@ -111,29 +191,77 @@ class NeighborStore:
         self.stores: dict = {}
         self.max_neighbors = max_neighbors
 
-    def _store(self, src_type: str, dst_type: str) -> NoSQLStore:
+    def _store(self, src_type: str, dst_type: str) -> RingBuffer:
         key = (src_type, dst_type)
         if key not in self.stores:
-            self.stores[key] = NoSQLStore(f"neigh:{src_type}->{dst_type}")
+            self.stores[key] = RingBuffer(f"neigh:{src_type}->{dst_type}",
+                                          self.max_neighbors)
         return self.stores[key]
 
     def add(self, src_type: str, src_id: int, dst_type: str, dst_id: int) -> None:
-        st = self._store(src_type, dst_type)
-        cur = st.get(src_id) or []
-        cur = (cur + [dst_id])[-self.max_neighbors:]
-        st.put(src_id, cur)
+        self._store(src_type, dst_type).add(src_id, dst_id)
+
+    def bulk_load(self, src_type: str, dst_type: str, indptr, indices) -> None:
+        self._store(src_type, dst_type).bulk_load(indptr, indices)
+
+    def _relations(self, node_type: str):
+        return [(NODE_TYPE_ID[d], st) for (s, d), st in self.stores.items()
+                if s == node_type]
 
     def neighbors(self, node_type: str, node_id: int):
-        """Merged (dst_type_id, dst_id) neighbor list across edge types."""
+        """Merged (dst_type_id, dst_id) neighbor list across edge types.
+
+        Entry order — relation insertion order, then ring column order — is
+        the contract shared with :meth:`sample_batched`: offset ``j`` into
+        this list and offset ``j`` of the batched path address the same
+        neighbor, which is what makes the scalar and batched joins
+        bit-identical on the same uniform stream.
+        """
         out = []
-        for (s, d), st in self.stores.items():
-            if s != node_type:
-                continue
-            ids = st.get(node_id)
-            if ids:
-                tid = NODE_TYPE_ID[d]
-                out.extend((tid, i) for i in ids)
+        for tid, st in self._relations(node_type):
+            out.extend((tid, int(i)) for i in st.row(node_id))
         return out
+
+    def sample_batched(self, types: np.ndarray, ids: np.ndarray, fanout: int,
+                       uniforms: np.ndarray):
+        """Vectorized fixed-fanout sampling for a batch of (type, id) nodes.
+
+        types [n] int, ids [n] int, uniforms [n, fanout] in [0, 1) ->
+        (dst_ty [n, F] int32, dst_id [n, F] int32, mask [n, F] float32).
+        Draw j = floor(u · deg) indexes the merged neighbor list (see
+        :meth:`neighbors`) without ever materializing it.
+        """
+        n = len(ids)
+        out_ty = np.zeros((n, fanout), np.int32)
+        out_id = np.zeros((n, fanout), np.int32)
+        out_mask = np.zeros((n, fanout), np.float32)
+        for tid, tname in enumerate(NODE_TYPES):
+            rows = np.nonzero(types == tid)[0]
+            if rows.size == 0:
+                continue
+            rels = self._relations(tname)
+            if not rels:
+                continue
+            nid = ids[rows]
+            cnts = np.stack([st.counts(nid) for _, st in rels], axis=1)  # [m, R]
+            total = cnts.sum(axis=1)
+            has = total > 0
+            if not has.any():
+                continue
+            rows, nid, cnts, total = rows[has], nid[has], cnts[has], total[has]
+            j = (uniforms[rows] * total[:, None]).astype(np.int64)       # [m, F]
+            cum = np.cumsum(cnts, axis=1)
+            rel_idx = (j[:, :, None] >= cum[:, None, :]).sum(axis=-1)    # [m, F]
+            start = cum - cnts
+            slot = j - np.take_along_axis(start, rel_idx, axis=1)        # [m, F]
+            for r, (dtid, st) in enumerate(rels):
+                rr, ff = np.nonzero(rel_idx == r)
+                if rr.size == 0:
+                    continue
+                out_id[rows[rr], ff] = st.buf[nid[rr], slot[rr, ff]]
+                out_ty[rows[rr], ff] = dtid
+            out_mask[rows] = 1.0
+        return out_ty, out_id, out_mask
 
 
 class EmbeddingStore(NoSQLStore):
@@ -147,6 +275,17 @@ class EmbeddingStore(NoSQLStore):
         return self.get((node_type, int(node_id)))
 
 
+def _pad_tile(tile: ComputeGraphBatch, to: int) -> ComputeGraphBatch:
+    """Zero-pad every array of the tile along the batch axis to ``to`` rows
+    (all-masked padding rows encode to garbage that is sliced off)."""
+    b = tile.q_feat.shape[0]
+    pad = to - b
+    if pad <= 0:
+        return tile
+    return ComputeGraphBatch(*(
+        np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)]) for x in tile))
+
+
 # -------------------------------------------------------------- inference
 
 
@@ -156,6 +295,8 @@ class NearlineMetrics:
     batches: int = 0
     nodes_refreshed: int = 0
     encoder_seconds: float = 0.0
+    join_seconds: float = 0.0
+    encoder_traces: int = 0                         # jit retrace count
     staleness: list = field(default_factory=list)   # event.time -> refresh time deltas
     join_reads: int = 0
 
@@ -166,6 +307,8 @@ class NearlineMetrics:
             "batches": self.batches,
             "nodes_refreshed": self.nodes_refreshed,
             "encoder_ms_per_batch": 1e3 * self.encoder_seconds / max(self.batches, 1),
+            "join_ms_per_batch": 1e3 * self.join_seconds / max(self.batches, 1),
+            "encoder_traces": self.encoder_traces,
             "staleness_p50_s": float(np.percentile(st, 50)),
             "staleness_p99_s": float(np.percentile(st, 99)),
             "join_reads": self.join_reads,
@@ -177,29 +320,51 @@ class NearlineInference:
     → push embeddings (Figure 4)."""
 
     def __init__(self, cfg: GNNConfig, encoder_params, *, fanouts=None,
-                 micro_batch: int = 64, max_neighbors: int = 64, seed: int = 0):
+                 micro_batch: int = 64, max_neighbors: int = 64, seed: int = 0,
+                 join_impl: str = "batched", jit_encoder: bool = True):
+        assert join_impl in ("batched", "scalar"), join_impl
         self.cfg = cfg
         self.params = encoder_params
         self.fanouts = fanouts or cfg.fanouts
         self.micro_batch = micro_batch
+        self.join_impl = join_impl
+        self.jit_encoder = jit_encoder
         self.topic = Topic("job-marketplace-events")
         self.neighbor_store = NeighborStore(max_neighbors)
         self.feature_store = NoSQLStore("node-features")      # input features per node
         self.embedding_store = EmbeddingStore("gnn-embeddings")
         self.metrics = NearlineMetrics()
         self.rng = np.random.default_rng(seed)
-        self._encode = None  # jitted lazily (needs tile shapes)
+        self._encode = self._make_encode()  # shape-bucketed jitted encoder
+
+    # ---- bucketed jitted encoder ----------------------------------------
+    def _make_encode(self):
+        from repro.core import encoder as enc
+        cfg = self.cfg
+
+        def fn(params, tile):
+            # trace-time side effect: counts (re)compilations per bucket
+            self.metrics.encoder_traces += 1
+            return enc.encoder_apply(params, cfg, tile)
+
+        return jax.jit(fn)
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Pad batch sizes to power-of-two buckets (min 8) so jit compiles
+        one executable per bucket and steady-state batches never retrace."""
+        return max(8, 1 << max(n - 1, 1).bit_length())
 
     # ---- store bootstrap (initial graph snapshot load) -------------------
     def bootstrap_from_graph(self, graph) -> None:
+        items = []
         for ntype in NODE_TYPES:
             feats = graph.features[ntype]
-            for i in range(feats.shape[0]):
-                self.feature_store.put((NODE_TYPE_ID[ntype], i), feats[i])
+            tid = NODE_TYPE_ID[ntype]
+            items.extend(((tid, i), feats[i]) for i in range(feats.shape[0]))
+        self.feature_store.put_many(items)
         for (s, d), csr in graph.adj.items():
-            for src in range(len(csr.indptr) - 1):
-                for dst in csr.neighbors(src):
-                    self.neighbor_store.add(s, src, d, int(dst))
+            self.neighbor_store.bulk_load(s, d, csr.indptr, csr.indices)
 
     # ---- event application ----------------------------------------------
     def _apply_event(self, ev: Event):
@@ -225,6 +390,16 @@ class NearlineInference:
         return touched
 
     # ---- sequential join: node -> neighbors -> neighbor features ---------
+    #
+    # Both implementations consume the SAME uniform stream in the same order
+    # (one rng.random(f1 + f1*f2) slab per query node, row-major) and share
+    # the merged-neighbor-list offset contract of NeighborStore.neighbors /
+    # sample_batched, so they produce bit-identical tiles from the same seed.
+    # ``batched`` is the production path (~6 vectorized gathers + deduped
+    # multi_gets per micro-batch); ``scalar`` is the pre-optimization
+    # O(B·F1·F2) per-key baseline kept for benchmarking and as a correctness
+    # oracle.
+
     def _fetch_feats(self, tid: int, nid: int) -> np.ndarray:
         f = self.feature_store.get((tid, nid))
         self.metrics.join_reads += 1
@@ -232,19 +407,73 @@ class NearlineInference:
             f = np.zeros(self.cfg.feat_dim, np.float32)
         return f
 
-    def _sample_neighbors(self, tid: int, nid: int, fanout: int):
-        merged = self.neighbor_store.neighbors(NODE_TYPES[tid], nid)
-        ty = np.zeros(fanout, np.int32)
-        ids = np.zeros(fanout, np.int32)
-        mask = np.zeros(fanout, np.float32)
-        if merged:
-            picks = self.rng.integers(0, len(merged), fanout)
-            for slot, pk in enumerate(picks):
-                t, i = merged[pk]
-                ty[slot], ids[slot], mask[slot] = t, i, 1.0
-        return ty, ids, mask
+    def _multi_fetch_feats(self, tids: np.ndarray, nids: np.ndarray) -> np.ndarray:
+        """Deduped batched feature lookup: flat (tid, nid) pairs -> [n, d].
+
+        One multi_get over the unique keys per hop instead of one get per
+        (node, neighbor, neighbor-of-neighbor) feature; missing keys are
+        zero-filled.
+        """
+        d = self.cfg.feat_dim
+        if tids.size == 0:
+            return np.zeros((0, d), np.float32)
+        packed = tids.astype(np.int64) << 40 | nids.astype(np.int64)
+        uniq, inv = np.unique(packed, return_inverse=True)
+        keys = [(int(p >> 40), int(p & ((1 << 40) - 1))) for p in uniq]
+        vals = self.feature_store.multi_get(keys)
+        self.metrics.join_reads += len(keys)
+        mat = np.zeros((len(keys), d), np.float32)
+        for i, v in enumerate(vals):
+            if v is not None:
+                mat[i] = v
+        return mat[inv]
 
     def _sequential_join(self, nodes) -> ComputeGraphBatch:
+        if self.join_impl == "scalar":
+            return self._sequential_join_scalar(nodes)
+        return self._sequential_join_batched(nodes)
+
+    def _sequential_join_batched(self, nodes) -> ComputeGraphBatch:
+        f1, f2 = self.fanouts
+        b = len(nodes)
+        d = self.cfg.feat_dim
+        q_type = np.array([NODE_TYPE_ID[t] for t, _ in nodes], np.int64)
+        q_id = np.array([i for _, i in nodes], np.int64)
+        u = self.rng.random((b, f1 + f1 * f2))
+        u1, u2 = u[:, :f1], u[:, f1:].reshape(b, f1, f2)
+
+        # hop 0+1: one batched sample over all query nodes
+        n1_type, n1_id, n1_mask = self.neighbor_store.sample_batched(
+            q_type, q_id, f1, u1)
+        q_feat = self._multi_fetch_feats(q_type, q_id)
+
+        m1 = n1_mask.reshape(-1) > 0
+        n1_feat = np.zeros((b * f1, d), np.float32)
+        n1_feat[m1] = self._multi_fetch_feats(n1_type.reshape(-1)[m1],
+                                              n1_id.reshape(-1)[m1])
+
+        # hop 2: batched sample over all valid hop-1 neighbors
+        n2_type = np.zeros((b * f1, f2), np.int32)
+        n2_id = np.zeros((b * f1, f2), np.int32)
+        n2_mask = np.zeros((b * f1, f2), np.float32)
+        if m1.any():
+            t2, i2, mk2 = self.neighbor_store.sample_batched(
+                n1_type.reshape(-1)[m1].astype(np.int64),
+                n1_id.reshape(-1)[m1].astype(np.int64),
+                f2, u2.reshape(b * f1, f2)[m1])
+            n2_type[m1], n2_id[m1], n2_mask[m1] = t2, i2, mk2
+        m2 = n2_mask.reshape(-1) > 0
+        n2_feat = np.zeros((b * f1 * f2, d), np.float32)
+        n2_feat[m2] = self._multi_fetch_feats(n2_type.reshape(-1)[m2],
+                                              n2_id.reshape(-1)[m2])
+
+        return ComputeGraphBatch(
+            q_feat, q_type.astype(np.int32),
+            n1_feat.reshape(b, f1, d), n1_type, n1_mask,
+            n2_feat.reshape(b, f1, f2, d), n2_type.reshape(b, f1, f2),
+            n2_mask.reshape(b, f1, f2))
+
+    def _sequential_join_scalar(self, nodes) -> ComputeGraphBatch:
         f1, f2 = self.fanouts
         b = len(nodes)
         d = self.cfg.feat_dim
@@ -257,20 +486,25 @@ class NearlineInference:
         n2_type = np.zeros((b, f1, f2), np.int32)
         n2_mask = np.zeros((b, f1, f2), np.float32)
         for r, (ntype, nid) in enumerate(nodes):
+            u = self.rng.random(f1 + f1 * f2)
+            u1, u2 = u[:f1], u[f1:].reshape(f1, f2)
             tid = NODE_TYPE_ID[ntype]
             q_type[r] = tid
             q_feat[r] = self._fetch_feats(tid, nid)
-            ty, ids, m = self._sample_neighbors(tid, nid, f1)
-            n1_type[r], n1_mask[r] = ty, m
+            merged = self.neighbor_store.neighbors(ntype, nid)
             for s in range(f1):
-                if m[s] == 0:
-                    continue
-                n1_feat[r, s] = self._fetch_feats(ty[s], ids[s])
-                ty2, ids2, m2 = self._sample_neighbors(ty[s], ids[s], f2)
-                n2_type[r, s], n2_mask[r, s] = ty2, m2
-                for u in range(f2):
-                    if m2[u]:
-                        n2_feat[r, s, u] = self._fetch_feats(ty2[u], ids2[u])
+                if not merged:
+                    break
+                t1, i1 = merged[int(u1[s] * len(merged))]
+                n1_type[r, s], n1_mask[r, s] = t1, 1.0
+                n1_feat[r, s] = self._fetch_feats(t1, i1)
+                merged2 = self.neighbor_store.neighbors(NODE_TYPES[t1], i1)
+                for v in range(f2):
+                    if not merged2:
+                        break
+                    t2, i2 = merged2[int(u2[s, v] * len(merged2))]
+                    n2_type[r, s, v], n2_mask[r, s, v] = t2, 1.0
+                    n2_feat[r, s, v] = self._fetch_feats(t2, i2)
         return ComputeGraphBatch(q_feat, q_type, n1_feat, n1_type, n1_mask,
                                  n2_feat, n2_type, n2_mask)
 
@@ -296,10 +530,20 @@ class NearlineInference:
                 for (ntype, nid, t) in self._apply_event(ev):
                     touched[(ntype, nid)] = t   # newest trigger wins
             nodes = list(touched.keys())
-            pad = (-len(nodes)) % 8 if len(nodes) % 8 else 0
-            tile = self._sequential_join(nodes + nodes[:1] * pad)
             t0 = _time.perf_counter()
-            emb = np.asarray(enc.encoder_apply(self.params, self.cfg, _to_jnp(tile)))
+            tile = self._sequential_join(nodes)
+            self.metrics.join_seconds += _time.perf_counter() - t0
+            t0 = _time.perf_counter()
+            if self.jit_encoder:
+                # pad the tile to its power-of-two bucket: one compiled
+                # executable per bucket, reused across batches — steady-state
+                # nearline batches never retrace
+                tile = _pad_tile(tile, self._bucket(len(nodes)))
+                emb = np.asarray(self._encode(self.params, _to_jnp(tile)))
+            else:
+                tile = _pad_tile(tile, len(nodes) + (-len(nodes)) % 8)
+                emb = np.asarray(enc.encoder_apply(self.params, self.cfg,
+                                                   _to_jnp(tile)))
             self.metrics.encoder_seconds += _time.perf_counter() - t0
             refresh_time = (clock if clock is not None
                             else max(ev.time for ev in events) + 2.0)

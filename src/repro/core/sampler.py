@@ -43,7 +43,14 @@ class ComputeGraphBatch(NamedTuple):
 
 
 class MergedAdjacency:
-    """Per-node-type merged CSR over all outgoing edge types."""
+    """Per-node-type merged CSR over all outgoing edge types.
+
+    Alongside (indptr, dst_id, dst_ty) we precompute, for the
+    degree-weighted strategy, each entry's *neighbor degree* and the
+    per-type cumulative weight array ``wcum`` (cumsum of degree + 1) so
+    weighted sampling is a vectorized inverse-CDF searchsorted instead of a
+    per-row ``rng.choice`` with per-neighbor degree lookups.
+    """
 
     def __init__(self, graph: HeteroGraph):
         self.graph = graph
@@ -55,25 +62,32 @@ class MergedAdjacency:
                 self.merged[ntype] = None
                 continue
             per_rel = [graph.adj[r] for r in rels]
-            counts = np.zeros(n, np.int64)
-            for csr in per_rel:
-                counts += np.diff(csr.indptr)
+            # concatenate all (src, dst, dst_type) triples, stable-sort by src
+            src_all = np.concatenate([np.repeat(np.arange(n), np.diff(csr.indptr))
+                                      for csr in per_rel])
+            dst_all = np.concatenate([csr.indices for csr in per_rel])
+            ty_all = np.concatenate([np.full(csr.num_edges, NODE_TYPE_ID[d], np.int8)
+                                     for (s, d), csr in zip(rels, per_rel)])
+            order = np.argsort(src_all, kind="stable")
+            counts = np.bincount(src_all, minlength=n)
             indptr = np.zeros(n + 1, np.int64)
             np.cumsum(counts, out=indptr[1:])
-            total = int(indptr[-1])
-            dst_id = np.empty(total, np.int32)
-            dst_ty = np.empty(total, np.int8)
-            cursor = indptr[:-1].copy()
-            for (s, d), csr in zip(rels, per_rel):
-                deg = np.diff(csr.indptr)
-                tid = NODE_TYPE_ID[d]
-                for node in np.nonzero(deg)[0]:
-                    a, b = csr.indptr[node], csr.indptr[node + 1]
-                    c = cursor[node]
-                    dst_id[c:c + (b - a)] = csr.indices[a:b]
-                    dst_ty[c:c + (b - a)] = tid
-                    cursor[node] += b - a
-            self.merged[ntype] = (indptr, dst_id, dst_ty)
+            self.merged[ntype] = (indptr, dst_all[order].astype(np.int32),
+                                  ty_all[order])
+        # second pass: per-entry neighbor degree + cumulative weights
+        self.wcum = {}
+        for ntype in NODE_TYPES:
+            m = self.merged[ntype]
+            if m is None:
+                self.wcum[ntype] = None
+                continue
+            _, dst_id, dst_ty = m
+            nb_deg = np.zeros(dst_id.shape[0], np.float64)
+            for tid, tname in enumerate(NODE_TYPES):
+                sel = np.nonzero(dst_ty == tid)[0]
+                if sel.size:
+                    nb_deg[sel] = self.degrees(tname)[dst_id[sel]]
+            self.wcum[ntype] = np.cumsum(nb_deg + 1.0)
 
     def degrees(self, ntype: str) -> np.ndarray:
         m = self.merged[ntype]
@@ -118,15 +132,17 @@ class NeighborSampler:
             if self.cfg.strategy == "degree_weighted":
                 # DeepGNN-style weighted sampling: bias neighbor choice by
                 # the *neighbor's* own degree (well-connected nodes carry
-                # more information; §4.1 lists weighted sampling support)
-                offs = np.empty((rows.size, fanout), np.int64)
-                for r in range(rows.size):
-                    cand = dst_id[base[r]:base[r] + d[r]]
-                    cty = dst_ty[base[r]:base[r] + d[r]]
-                    w = np.array([self._degree_of(cty[i], cand[i])
-                                  for i in range(len(cand))], np.float64) + 1.0
-                    w /= w.sum()
-                    offs[r] = self.rng.choice(d[r], size=fanout, p=w)
+                # more information; §4.1 lists weighted sampling support).
+                # Inverse-CDF over the precomputed cumulative weights: draw a
+                # uniform in each row's [wcum_lo, wcum_hi) span and
+                # searchsorted back to a global entry index.
+                wcum = self.madj.wcum[tname]
+                lo = np.where(base > 0, wcum[base - 1], 0.0)
+                hi = wcum[base + d - 1]
+                u = self.rng.random((rows.size, fanout))
+                targets = lo[:, None] + u * (hi - lo)[:, None]
+                gidx = np.searchsorted(wcum, targets, side="right")
+                offs = np.clip(gidx - base[:, None], 0, (d - 1)[:, None])
             else:
                 # uniform with replacement: offsets in [0, deg)
                 offs = (self.rng.random((rows.size, fanout)) * d[:, None]).astype(np.int64)

@@ -20,6 +20,7 @@ from repro.kernels import flash_attention as _flash
 from repro.kernels import neighbor_agg as _nagg
 from repro.kernels import ref
 from repro.kernels import sage_attention as _sattn
+from repro.kernels import sage_layer as _slayer
 from repro.kernels import ssd_scan as _ssd
 
 _IMPL = None  # resolved lazily
@@ -102,6 +103,41 @@ def neighbor_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     out = _sattn.sage_attention(qq, kk, vv, mm, block_n=128,
                                 interpret=(impl == "interpret"))
     return out[:n0].reshape(*lead, d)
+
+
+def sage_layer(h_self: jax.Array, h_neigh: jax.Array, mask: jax.Array,
+               w_self: jax.Array, b_self: jax.Array,
+               w_neigh: jax.Array, b_neigh: jax.Array, *, impl=None) -> jax.Array:
+    """Fused GraphSAGE layer (mean aggregator):
+    relu(h_self@W_self + b_self + mean_mask(h_neigh)@W_neigh + b_neigh).
+
+    h_self [..., D], h_neigh [..., F, D], mask [..., F], weights [D, H],
+    biases [H] -> [..., H].
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.sage_layer(h_self, h_neigh, mask, w_self, b_self,
+                              w_neigh, b_neigh)
+    lead = h_neigh.shape[:-2]
+    f, d = h_neigh.shape[-2:]
+    h_out = w_self.shape[1]
+    hh = h_self.reshape(-1, d)
+    nb = h_neigh.reshape(-1, f, d)
+    mm = mask.reshape(-1, f).astype(jnp.float32)
+    hh, n0 = _pad_to(hh, 0, 128)
+    nb, _ = _pad_to(nb, 0, 128)
+    mm, _ = _pad_to(mm, 0, 128)
+    # pad the contraction dim (zero rows of W contribute nothing) and the
+    # output dim (extra cols are sliced off) to the 128-lane width
+    hh, _ = _pad_to(hh, 1, 128)
+    nb, _ = _pad_to(nb, 2, 128)
+    ws, _ = _pad_to(_pad_to(w_self, 0, 128)[0], 1, 128)
+    wn, _ = _pad_to(_pad_to(w_neigh, 0, 128)[0], 1, 128)
+    bs, _ = _pad_to(b_self.reshape(1, -1), 1, 128)
+    bn, _ = _pad_to(b_neigh.reshape(1, -1), 1, 128)
+    out = _slayer.sage_layer(hh, nb, mm, ws, bs, wn, bn, block_n=128,
+                             interpret=(impl == "interpret"))
+    return out[:n0, :h_out].reshape(*lead, h_out)
 
 
 # ------------------------------------------------------------ attention

@@ -26,6 +26,23 @@ def neighbor_mean(feats: jax.Array, mask: jax.Array) -> jax.Array:
     return s / jnp.maximum(cnt, 1.0)
 
 
+def sage_layer(h_self: jax.Array, h_neigh: jax.Array, mask: jax.Array,
+               w_self: jax.Array, b_self: jax.Array,
+               w_neigh: jax.Array, b_neigh: jax.Array) -> jax.Array:
+    """Fused GraphSAGE layer rule with mean aggregation (the oracle for the
+    Pallas kernel in :mod:`repro.kernels.sage_layer`):
+
+        relu(h_self @ W_self + b_self + mean_mask(h_neigh) @ W_neigh + b_neigh)
+
+    h_self [..., D], h_neigh [..., F, D], mask [..., F], weights [D, H],
+    biases [H] -> [..., H].
+    """
+    agg = neighbor_mean(h_neigh, mask)
+    out = (h_self @ w_self.astype(h_self.dtype) + b_self.astype(h_self.dtype)
+           + agg @ w_neigh.astype(agg.dtype) + b_neigh.astype(agg.dtype))
+    return jax.nn.relu(out)
+
+
 def neighbor_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                        mask: jax.Array) -> jax.Array:
     """Masked single-query attention over neighbors (paper's α(i,n) agg).

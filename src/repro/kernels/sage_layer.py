@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused GraphSAGE layer (mean aggregator).
+
+The nearline/serving hot path applies the same three steps per layer:
+
+    agg = masked_mean(h_neigh, mask)                  # VPU reduction
+    out = relu(h_self @ W_self + b_self + agg @ W_neigh + b_neigh)
+
+Unfused, XLA materializes ``agg`` in HBM between the reduction and the two
+matmuls.  This kernel keeps the whole [bn, F, D] neighbor brick, the masked
+mean, both weight matrices and the activation resident in VMEM: one HBM read
+of the inputs, one HBM write of the output.
+
+Tiling: grid (N/bn,); the full fanout F and feature dim D stay resident
+(GNN hidden dims are 32-512, F is 5-25).  The weights are broadcast to every
+program via a constant index_map.  Brick budget at bn=128, F=32, D=512 fp32:
+h_self 0.25 MB + neigh 8 MB + 2 weights 2 MB — comfortably under the ~16 MB
+v5e VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sage_layer_kernel(h_ref, n_ref, mask_ref, ws_ref, bs_ref, wn_ref, bn_ref,
+                       out_ref):
+    h = h_ref[...]                                    # [bn, D]
+    neigh = n_ref[...]                                # [bn, F, D]
+    mask = mask_ref[...]                              # [bn, F]
+    m = mask.astype(jnp.float32)[..., None]
+    s = jnp.sum(neigh.astype(jnp.float32) * m, axis=1)            # [bn, D]
+    cnt = jnp.sum(mask.astype(jnp.float32), axis=1, keepdims=True)
+    agg = s / jnp.maximum(cnt, 1.0)
+    out = (jnp.dot(h.astype(jnp.float32), ws_ref[...].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+           + jnp.dot(agg, wn_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+           + bs_ref[...].astype(jnp.float32) + bn_ref[...].astype(jnp.float32))
+    out_ref[...] = jnp.maximum(out, 0.0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def sage_layer(h_self: jax.Array, h_neigh: jax.Array, mask: jax.Array,
+               w_self: jax.Array, b_self: jax.Array,
+               w_neigh: jax.Array, b_neigh: jax.Array,
+               *, block_n: int = 128, interpret: bool = False) -> jax.Array:
+    """h_self [N, D], h_neigh [N, F, D], mask [N, F], weights [D, H],
+    biases [1, H] -> relu(h@W_self + mean@W_neigh + biases)  [N, H]."""
+    n, f, d = h_neigh.shape
+    h_out = w_self.shape[1]
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _sage_layer_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bn, f), lambda i: (i, 0)),
+            pl.BlockSpec((d, h_out), lambda i: (0, 0)),
+            pl.BlockSpec((1, h_out), lambda i: (0, 0)),
+            pl.BlockSpec((d, h_out), lambda i: (0, 0)),
+            pl.BlockSpec((1, h_out), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, h_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out), h_self.dtype),
+        interpret=interpret,
+    )(h_self, h_neigh, mask, w_self, b_self, w_neigh, b_neigh)

@@ -46,6 +46,69 @@ def test_neighbor_mean_leading_dims():
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
+# ------------------------------------------------------ fused sage layer
+
+
+def _sage_layer_inputs(n, f, d, h):
+    h_self = _arr((n, d))
+    h_neigh = _arr((n, f, d))
+    mask = jnp.asarray((RNG.random((n, f)) < 0.7).astype(np.float32))
+    w_self = _arr((d, h), scale=0.1)
+    b_self = _arr((h,), scale=0.1)
+    w_neigh = _arr((d, h), scale=0.1)
+    b_neigh = _arr((h,), scale=0.1)
+    return h_self, h_neigh, mask, w_self, b_self, w_neigh, b_neigh
+
+
+@pytest.mark.parametrize("n,f,d,h", [(8, 4, 32, 32), (128, 10, 128, 128),
+                                     (300, 7, 96, 96), (64, 25, 200, 200),
+                                     (5, 3, 17, 17)])
+def test_sage_layer_matches_ref(n, f, d, h):
+    args = _sage_layer_inputs(n, f, d, h)
+    got = ops.sage_layer(*args, impl="interpret")
+    want = ops.sage_layer(*args, impl="ref")
+    assert float(jnp.max(jnp.abs(got - want))) <= 1e-5
+
+
+def test_sage_layer_all_masked_rows_use_self_path_only():
+    n, f, d = 16, 5, 64
+    h_self, h_neigh, _, w_self, b_self, w_neigh, b_neigh = \
+        _sage_layer_inputs(n, f, d, d)
+    mask = jnp.zeros((n, f))
+    got = ops.sage_layer(h_self, h_neigh, mask, w_self, b_self,
+                         w_neigh, b_neigh, impl="interpret")
+    want = jax.nn.relu(h_self @ w_self + b_self + b_neigh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sage_layer_leading_dims():
+    b, f1, f, d = 4, 6, 5, 48
+    h_self = _arr((b, f1, d))
+    h_neigh = _arr((b, f1, f, d))
+    mask = jnp.asarray((RNG.random((b, f1, f)) < 0.5).astype(np.float32))
+    w = _arr((d, d), scale=0.1)
+    bias = _arr((d,), scale=0.1)
+    got = ops.sage_layer(h_self, h_neigh, mask, w, bias, w, bias,
+                         impl="interpret")
+    want = ops.sage_layer(h_self, h_neigh, mask, w, bias, w, bias, impl="ref")
+    assert got.shape == (b, f1, d)
+    assert float(jnp.max(jnp.abs(got - want))) <= 1e-5
+
+
+def test_sage_layer_ref_equals_unfused_encoder_rule():
+    """The fused oracle must equal mean-agg + two dense layers + relu."""
+    n, f, d = 32, 6, 40
+    h_self, h_neigh, mask, w_self, b_self, w_neigh, b_neigh = \
+        _sage_layer_inputs(n, f, d, d)
+    agg = ref.neighbor_mean(h_neigh, mask)
+    want = jax.nn.relu(h_self @ w_self + b_self + agg @ w_neigh + b_neigh)
+    got = ops.sage_layer(h_self, h_neigh, mask, w_self, b_self,
+                         w_neigh, b_neigh, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
 # -------------------------------------------------------- sage attention
 
 

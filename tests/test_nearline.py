@@ -8,7 +8,8 @@ from dataclasses import replace
 from repro.configs.linksage import smoke as gnn_smoke
 from repro.core.linksage import LinkSAGETrainer
 from repro.core.nearline import (EmbeddingStore, Event, NearlineInference,
-                                 NoSQLStore, OfflineBatchInference, Topic)
+                                 NoSQLStore, OfflineBatchInference, RingBuffer,
+                                 Topic)
 from repro.data import GraphGenConfig, generate_job_marketplace_graph
 
 
@@ -116,6 +117,97 @@ def test_nearline_staleness_beats_offline(setup):
     assert near_p99 < 60.0, near_p99
     assert off_p99 > 3600.0, off_p99
     assert near_p99 < off_p99 / 100
+
+
+def test_ring_buffer_is_bounded_and_keeps_latest():
+    rb = RingBuffer("t", max_neighbors=4)
+    for i in range(10):
+        rb.add(0, i)
+    assert rb.count[0] == 4
+    assert set(rb.row(0)) == {6, 7, 8, 9}
+    # capacity growth past the initial allocation
+    rb.add(5000, 42)
+    assert rb.capacity > 5000 and rb.row(5000).tolist() == [42]
+    assert rb.counts(np.array([0, 5000, 10**6])).tolist() == [4, 1, 0]
+
+
+def test_ring_buffer_bulk_load_matches_incremental():
+    indptr = np.array([0, 2, 2, 9], np.int64)
+    indices = np.arange(9, dtype=np.int32)
+    bulk = RingBuffer("bulk", max_neighbors=4)
+    bulk.bulk_load(indptr, indices)
+    inc = RingBuffer("inc", max_neighbors=4)
+    for node in range(3):
+        for dst in indices[indptr[node]:indptr[node + 1]]:
+            inc.add(node, int(dst))
+    for node in range(3):
+        assert set(bulk.row(node)) == set(inc.row(node)), node
+        assert bulk.count[node] == inc.count[node]
+
+
+def test_batched_join_matches_scalar_join_same_rng(setup):
+    """The vectorized join and the per-key scalar baseline consume the same
+    uniform stream and must produce bit-identical tiles."""
+    g, truth, cfg, tr = setup
+
+    def make(impl):
+        nl = NearlineInference(cfg, tr.state.params["encoder"], micro_batch=16,
+                               fanouts=(4, 3), seed=11, join_impl=impl)
+        nl.bootstrap_from_graph(g)
+        return nl
+
+    batched, scalar = make("batched"), make("scalar")
+    nodes = [("member", 3), ("job", 5), ("member", 3), ("skill", 2),
+             ("job", 59), ("title", 0), ("member", 199)]
+    tile_b = batched._sequential_join(nodes)
+    tile_s = scalar._sequential_join(nodes)
+    for name, a, b in zip(tile_b._fields, tile_b, tile_s):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32), err_msg=name)
+    # the batched path must fetch strictly fewer (deduped) feature keys
+    assert batched.metrics.join_reads < scalar.metrics.join_reads
+
+
+def test_batched_join_matches_scalar_end_to_end(setup):
+    """Same events through both join impls -> identical served embeddings."""
+    g, truth, cfg, tr = setup
+
+    def run(impl):
+        nl = NearlineInference(cfg, tr.state.params["encoder"], micro_batch=8,
+                               fanouts=(4, 3), seed=5, join_impl=impl)
+        nl.bootstrap_from_graph(g)
+        for i in range(12):
+            nl.topic.publish(Event(time=float(i), kind="engagement",
+                                   payload={"member_id": 3 * i, "job_id": i}))
+        nl.process()
+        return nl
+
+    a, b = run("batched"), run("scalar")
+    for i in range(12):
+        ea = a.embedding_store.get_embedding("job", i)[0]
+        eb = b.embedding_store.get_embedding("job", i)[0]
+        np.testing.assert_allclose(ea, eb, rtol=1e-6, atol=1e-6)
+
+
+def test_no_retrace_across_same_bucket_batches(setup):
+    """Consecutive nearline batches with differing node counts inside one
+    power-of-two bucket must reuse the compiled encoder (1 trace total)."""
+    g, truth, cfg, tr = setup
+    nl = NearlineInference(cfg, tr.state.params["encoder"], micro_batch=16)
+    nl.bootstrap_from_graph(g)
+    for n_events in (3, 2, 4, 1):       # 2-8 touched nodes -> bucket 8
+        for i in range(n_events):
+            nl.topic.publish(Event(time=1.0, kind="engagement",
+                                   payload={"member_id": i, "job_id": i}))
+        nl.process()
+    assert nl.metrics.batches == 4
+    assert nl.metrics.encoder_traces == 1
+    # a batch in a new bucket compiles exactly once more
+    for i in range(8):
+        nl.topic.publish(Event(time=2.0, kind="engagement",
+                               payload={"member_id": 10 + i, "job_id": 10 + i}))
+    nl.process()
+    assert nl.metrics.encoder_traces == 2
 
 
 def test_sequential_join_reads_are_bounded(setup):
