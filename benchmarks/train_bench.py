@@ -1,0 +1,160 @@
+"""Training hot-path benchmark (the other half of the paper's decoupled
+train/serve methodology, §4 / Figure 3).
+
+Replays the same synthetic-graph training job through the arms of the
+sync-vs-prefetch × donated-vs-copy × mean-vs-attention matrix:
+
+  * ``sync_copy_unfused``       — the PR 1 baseline: synchronous host
+                                  sampling, un-donated TrainState, one
+                                  encode dispatch per tile, a host sync on
+                                  the metrics every step;
+  * ``prefetch_donated_fused``  — the pipelined hot path: background-thread
+                                  sampler with double-buffered device_put,
+                                  donated TrainState buffers, one stacked
+                                  [2B, ...] encode, metrics fetched after
+                                  the loop;
+  * the two mixed arms isolate each lever; the ``*_attn`` arms run the same
+    comparison through the attention aggregator (the fused Pallas
+    sage_attention_layer path).
+
+All arms are identically warmed (same warmup steps compile + prime every
+executable outside the timed region), timed best-of-``REPEATS`` (shared CPU
+containers are noisy), and share per-step RNG streams, so the equivalence
+row can assert the prefetch trainer reproduces the synchronous trainer's
+loss history bit-for-bit at equal seeds.
+
+On CPU the step compute (the 6-type masked transform, FLOP-bound) dwarfs
+the vectorized sampler, so the headline arm ratio under-sells the pipeline;
+``sampler_stall_frac`` ≈ 0 is the structural claim — the sampler and the
+host→device copies are fully hidden behind compute, which is exactly what
+scales on accelerators where the compute side is ~free (LiGNN's regime).
+The component row reports the raw sample/step split backing that up.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, standard_graph
+from repro.configs.linksage import CONFIG as GNN_CONFIG
+from repro.core.linksage import LinkSAGETrainer
+
+N_STEPS = 30
+WARMUP = 4
+BATCH = 128
+REPEATS = 2
+
+
+def _bench_cfg(g, aggregator: str = "mean"):
+    return replace(GNN_CONFIG, hidden_dim=64, embed_dim=64, fanouts=(8, 4),
+                   aggregator=aggregator, feat_dim=g.feat_dim)
+
+
+def _run_arm(g, cfg, *, prefetch: int, donate: bool, fused: bool,
+             steps: int = N_STEPS, batch: int = BATCH, seed: int = 0,
+             repeats: int = REPEATS):
+    tr = LinkSAGETrainer(cfg, g, seed=seed, prefetch=prefetch, donate=donate,
+                         fused_encode=fused)
+    tr.train(WARMUP, batch_size=batch)          # identical warmup in every arm
+    hist, stats = None, None
+    for r in range(repeats):                    # best-of rate: shared-CPU noise
+        h = tr.train(steps, batch_size=batch)
+        if r == 0:
+            hist = h                            # fixed step window across arms
+        if stats is None or tr.last_train_stats["steps_per_s"] > stats["steps_per_s"]:
+            stats = tr.last_train_stats
+    return hist, stats
+
+
+def bench_train_components():
+    """Raw per-step cost split: host sampling vs device step (the overlap
+    budget the prefetcher can hide)."""
+    g, _ = standard_graph(0)
+    cfg = _bench_cfg(g)
+    tr = LinkSAGETrainer(cfg, g, seed=0)
+    tr.train(WARMUP, batch_size=BATCH)
+    t0 = time.perf_counter()
+    for i in range(10):
+        batch = tr._build_batch(i, BATCH)
+    t_sample = (time.perf_counter() - t0) / 10
+    xb = tr._transfer(batch)
+    step = tr._get_step(3e-3)
+    state, m = step(tr.state, *xb)
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for _ in range(10):
+        state, m = step(state, *xb)
+    jax.block_until_ready(m["loss"])
+    t_step = (time.perf_counter() - t0) / 10
+    emit("train_component_split", t_step * 1e6,
+         f"sample_ms={t_sample * 1e3:.2f};step_ms={t_step * 1e3:.2f};"
+         f"hideable_frac={t_sample / (t_sample + t_step):.3f}")
+
+
+def bench_train_pipeline():
+    g, _ = standard_graph(0)
+    cfg = _bench_cfg(g)
+    arms = {
+        "sync_copy_unfused":      dict(prefetch=0, donate=False, fused=False),
+        "sync_donated_fused":     dict(prefetch=0, donate=True, fused=True),
+        "prefetch_copy_unfused":  dict(prefetch=2, donate=False, fused=False),
+        "prefetch_donated_fused": dict(prefetch=2, donate=True, fused=True),
+    }
+    rates = {}
+    for label, kw in arms.items():
+        hist, s = _run_arm(g, cfg, **kw)
+        rates[label] = s["steps_per_s"]
+        emit(f"train_pipeline_{label}", 1e6 / max(s["steps_per_s"], 1e-9),
+             f"steps_per_s={s['steps_per_s']:.2f};"
+             f"sampler_stall_frac={s['sampler_stall_frac']:.3f};"
+             f"final_loss={hist[-1]['loss']:.4f}")
+    emit("train_pipeline_speedup", 0.0,
+         f"steps_per_s_ratio={rates['prefetch_donated_fused'] / rates['sync_copy_unfused']:.2f}x;"
+         f"pipelined={rates['prefetch_donated_fused']:.2f};"
+         f"baseline={rates['sync_copy_unfused']:.2f}")
+
+
+def bench_train_pipeline_attention():
+    """Same matrix endpoints through the fused attention-aggregator kernel."""
+    g, _ = standard_graph(0)
+    cfg = _bench_cfg(g, aggregator="attention")
+    rates = {}
+    for label, kw in (
+            ("sync_copy_unfused_attn", dict(prefetch=0, donate=False, fused=False)),
+            ("prefetch_donated_fused_attn", dict(prefetch=2, donate=True, fused=True))):
+        hist, s = _run_arm(g, cfg, **kw)
+        rates[label] = s["steps_per_s"]
+        emit(f"train_pipeline_{label}", 1e6 / max(s["steps_per_s"], 1e-9),
+             f"steps_per_s={s['steps_per_s']:.2f};"
+             f"sampler_stall_frac={s['sampler_stall_frac']:.3f};"
+             f"final_loss={hist[-1]['loss']:.4f}")
+    emit("train_pipeline_speedup_attn", 0.0,
+         f"steps_per_s_ratio={rates['prefetch_donated_fused_attn'] / rates['sync_copy_unfused_attn']:.2f}x")
+
+
+def bench_train_prefetch_equivalence():
+    """Prefetch must reproduce the synchronous loss history bit-for-bit at
+    equal seeds (same per-step RNG streams, same donated+fused step)."""
+    g, _ = standard_graph(0)
+    cfg = _bench_cfg(g)
+    h_sync, _ = _run_arm(g, cfg, prefetch=0, donate=True, fused=True,
+                         steps=12, batch=64, repeats=1)
+    h_pre, s = _run_arm(g, cfg, prefetch=4, donate=True, fused=True,
+                        steps=12, batch=64, repeats=1)
+    l_sync = [m["loss"] for m in h_sync]
+    l_pre = [m["loss"] for m in h_pre]
+    emit("train_prefetch_equivalence", 0.0,
+         f"loss_bitmatch={l_sync == l_pre};"
+         f"max_abs_delta={max(abs(a - b) for a, b in zip(l_sync, l_pre)):.1e};"
+         f"sampler_stall_frac={s['sampler_stall_frac']:.3f}")
+
+
+ALL_TRAIN = [
+    bench_train_components,
+    bench_train_pipeline,
+    bench_train_pipeline_attention,
+    bench_train_prefetch_equivalence,
+]

@@ -7,8 +7,10 @@ Implements both aggregation variants from the paper:
 
 f is a per-node-type linear transform (heterogeneity-aware); α is a masked
 scaled-dot-product attention between the query node's hidden state and its
-neighbors.  The aggregation inner loop is the perf-critical hot spot and is
-served by the Pallas kernels in :mod:`repro.kernels` (interpret-mode on CPU).
+neighbors.  The aggregation inner loop is the perf-critical hot spot; BOTH
+layer rules are served by fused Pallas kernels (``kops.sage_layer`` for the
+mean path, ``kops.sage_attention_layer`` for attention) which dispatch to
+the pure-jnp reference on CPU and to the compiled kernels on TPU.
 
 Layer rule (GraphSAGE):  h_v ← σ(W_self·h_v + W_neigh·AGG_{n∈N(v)} h_n)
 applied innermost-hop-first over the padded 2-hop tile.
@@ -77,24 +79,20 @@ def _type_transform(p, x, types):
     return out
 
 
-def _aggregate(layer, cfg: GNNConfig, h_query, h_neigh, mask):
-    """AGG over the second-to-last axis of h_neigh ([..., F, h])."""
-    if cfg.aggregator == "mean":
-        return kops.neighbor_mean(h_neigh, mask)
-    q = nn.dense_apply(layer["attn_q"], h_query)
-    k = nn.dense_apply(layer["attn_k"], h_neigh)
-    return kops.neighbor_attention(q, k, h_neigh, mask)
-
-
 def _sage_layer(layer, cfg: GNNConfig, h_self, h_neigh, mask):
     if cfg.aggregator == "mean":
         # fused kernel: masked mean + dual matmul + ReLU in one VMEM pass
         return kops.sage_layer(h_self, h_neigh, mask,
                                layer["self"]["w"], layer["self"]["b"],
                                layer["neigh"]["w"], layer["neigh"]["b"])
-    agg = _aggregate(layer, cfg, h_self, h_neigh, mask)
-    out = nn.dense_apply(layer["self"], h_self) + nn.dense_apply(layer["neigh"], agg)
-    return jax.nn.relu(out)
+    # fused kernel: score → masked softmax → weighted sum → dual matmul →
+    # ReLU in one VMEM pass; the q/k projections stay outside (plain
+    # matmuls XLA already fuses well)
+    q = nn.dense_apply(layer["attn_q"], h_self)
+    k = nn.dense_apply(layer["attn_k"], h_neigh)
+    return kops.sage_attention_layer(h_self, q, k, h_neigh, mask,
+                                     layer["self"]["w"], layer["self"]["b"],
+                                     layer["neigh"]["w"], layer["neigh"]["b"])
 
 
 def encoder_apply(params, cfg: GNNConfig, tile) -> jax.Array:

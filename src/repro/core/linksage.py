@@ -4,10 +4,23 @@ The trainer mirrors Figure 3 (left): label tuples (memberId, jobId, label)
 → DeepGNN-role sampler builds padded compute-graph tiles → encoder–decoder
 forward → sigmoid-CE loss → AdamW.  The jitted step is pure; sampling stays
 host-side.
+
+Training hot path (DESIGN.md §7):
+
+* batches are a pure function of (seed, step index) — per-step RNG streams —
+  so a :class:`~repro.core.sampler.BatchPrefetcher` can build the next K
+  batches on a background thread (numpy sampling + ``jax.device_put``) while
+  the device runs the current step, bit-identically to the synchronous loop;
+* the jitted step donates the TrainState buffers (no params/opt copy per
+  step) and encodes BOTH tiles of the link-prediction pair in one stacked
+  [2B, ...] dispatch (half the kernel launches, 2×-larger matmuls);
+* an optional ``("data",)`` mesh turns the same step into a shard_map
+  data-parallel step: tiles sharded on the batch dim, grads pmean-reduced,
+  params/opt replicated (specs in :mod:`repro.parallel`).
 """
 from __future__ import annotations
 
-import functools
+import time
 from dataclasses import dataclass
 from typing import NamedTuple
 
@@ -18,7 +31,8 @@ import numpy as np
 from repro.configs.linksage import GNNConfig
 from repro.core import decoder as dec
 from repro.core import encoder as enc
-from repro.core.sampler import ComputeGraphBatch, NeighborSampler, SamplerConfig
+from repro.core.sampler import (BatchPrefetcher, ComputeGraphBatch,
+                                NeighborSampler, SamplerConfig)
 from repro.optim import AdamWState, adamw_init, adamw_update, clip_by_global_norm
 
 
@@ -31,9 +45,43 @@ def encode(params, cfg: GNNConfig, tile) -> jax.Array:
     return enc.encoder_apply(params["encoder"], cfg, tile)
 
 
-def loss_fn(params, cfg: GNNConfig, m_tile, j_tile, labels=None, pos_mask=None):
-    m_emb = encode(params, cfg, m_tile)
-    j_emb = encode(params, cfg, j_tile)
+def stack_tiles(m_tile, j_tile) -> ComputeGraphBatch:
+    """Concatenate two same-shape tiles along the batch axis -> [2B, ...]."""
+    return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                        m_tile, j_tile)
+
+
+def encode_pair(params, cfg: GNNConfig, m_tile, j_tile, *, fused: bool = True):
+    """Encode the (member, job) tile pair -> (m_emb [B,e], j_emb [B,e]).
+
+    ``fused`` stacks both tiles into one [2B, ...] encode: every per-type
+    transform / SAGE-layer kernel launches once instead of twice on
+    2×-larger tiles.  Row-wise ops make the stacked result bit-identical to
+    the two separate encodes.
+    """
+    if fused:
+        b = m_tile.q_feat.shape[0]
+        emb = encode(params, cfg, stack_tiles(m_tile, j_tile))
+        return emb[:b], emb[b:]
+    return encode(params, cfg, m_tile), encode(params, cfg, j_tile)
+
+
+def pos_mask_from_ids(m_ids, j_ids) -> jax.Array:
+    """[B, B] 0/1 labels for the in-batch score grid from the sampled pairs.
+
+    y_ij = 1 iff (m_ids[i], j_ids[j]) is itself one of the sampled positive
+    edges, i.e. ∃k with m_ids[k] == m_ids[i] and j_ids[k] == j_ids[j].
+    Without this, duplicate members/jobs inside a batch train as negatives
+    against their own positives (the in-batch false-negative bug).
+    """
+    m_eq = (m_ids[:, None] == m_ids[None, :]).astype(jnp.float32)
+    j_eq = (j_ids[:, None] == j_ids[None, :]).astype(jnp.float32)
+    return (m_eq @ j_eq > 0).astype(jnp.float32)
+
+
+def loss_fn(params, cfg: GNNConfig, m_tile, j_tile, labels=None, pos_mask=None,
+            *, fused: bool = True):
+    m_emb, j_emb = encode_pair(params, cfg, m_tile, j_tile, fused=fused)
     if cfg.decoder == "inbatch":
         return dec.inbatch_loss(cfg, m_emb, j_emb, pos_mask=pos_mask)
     assert labels is not None
@@ -45,27 +93,82 @@ class TrainState(NamedTuple):
     opt: AdamWState
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "lr", "max_norm"))
-def train_step(state: TrainState, cfg: GNNConfig, m_tile, j_tile, labels,
-               *, lr: float = 3e-3, max_norm: float = 1.0):
-    def lf(p):
-        if cfg.decoder == "inbatch":
-            return loss_fn(p, cfg, m_tile, j_tile)
-        return loss_fn(p, cfg, m_tile, j_tile, labels=labels)
+def make_train_step(cfg: GNNConfig, *, lr: float = 3e-3, max_norm: float = 1.0,
+                    donate: bool = True, fused: bool = True, mesh=None):
+    """Build the jitted training step
+    ``(state, m_tile, j_tile, m_ids, j_ids) -> (state, metrics)``.
 
-    loss, grads = jax.value_and_grad(lf)(state.params)
-    grads, gnorm = clip_by_global_norm(grads, max_norm)
-    params, opt = adamw_update(state.params, grads, state.opt, lr=lr,
-                               weight_decay=0.01)
-    return TrainState(params, opt), {"loss": loss, "grad_norm": gnorm}
+    * ``donate``: donate the TrainState argument so params/opt buffers are
+      updated in place instead of copied every step (ignored by backends
+      without donation support, e.g. CPU).
+    * ``fused``: one stacked [2B, ...] encode for both tiles.
+    * ``mesh``: optional mesh with a ``"data"`` axis — the step becomes a
+      shard_map data-parallel step: tiles/ids sharded on the batch dim,
+      per-shard grads pmean-reduced, params/opt replicated.  The in-batch
+      decoder then scores each shard's local B/D × B/D grid (standard local
+      in-batch negatives; the pos-mask is built per shard from local ids).
+    """
+
+    def step(state: TrainState, m_tile, j_tile, m_ids, j_ids):
+        def lf(p):
+            if cfg.decoder == "inbatch":
+                return loss_fn(p, cfg, m_tile, j_tile,
+                               pos_mask=pos_mask_from_ids(m_ids, j_ids),
+                               fused=fused)
+            labels = jnp.ones(m_ids.shape[0], jnp.float32)
+            return loss_fn(p, cfg, m_tile, j_tile, labels=labels, fused=fused)
+
+        loss, grads = jax.value_and_grad(lf)(state.params)
+        if mesh is not None:
+            loss = jax.lax.pmean(loss, "data")
+            grads = jax.lax.pmean(grads, "data")
+        grads, gnorm = clip_by_global_norm(grads, max_norm)
+        params, opt = adamw_update(state.params, grads, state.opt, lr=lr,
+                                   weight_decay=0.01)
+        return TrainState(params, opt), {"loss": loss, "grad_norm": gnorm}
+
+    # CPU jax has no buffer donation: requesting it only warns once per
+    # compile, so the hint is dropped there instead of globally silenced
+    donate_argnums = (0,) if donate and jax.default_backend() != "cpu" else ()
+    if mesh is None:
+        return jax.jit(step, donate_argnums=donate_argnums)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro import parallel as par
+
+    # state placement comes from the rule machinery (today: everything
+    # replicated), so a future sharded param is a _GNN_RULES change that
+    # flows straight into these specs — and a rule-less new param fails
+    # loudly here, at step-build time
+    state_tmpl = jax.eval_shape(
+        lambda: (lambda p: TrainState(p, adamw_init(p)))(
+            linksage_init(jax.random.PRNGKey(0), cfg)))
+    state_sp = par.gnn_state_pspecs(state_tmpl)
+    tile_sp = par.gnn_tile_pspecs()
+    smapped = shard_map(step, mesh=mesh,
+                        in_specs=(state_sp, tile_sp, tile_sp, P("data"), P("data")),
+                        out_specs=(state_sp, P()),
+                        check_rep=False)
+    return jax.jit(smapped, donate_argnums=donate_argnums)
 
 
 @dataclass
 class LinkSAGETrainer:
-    """End-to-end trainer over a HeteroGraph (the paper's GNN training job)."""
+    """End-to-end trainer over a HeteroGraph (the paper's GNN training job).
+
+    ``prefetch`` > 0 enables the background sampler pipeline with that queue
+    depth; per-step RNG streams keep it bit-identical to ``prefetch=0``.
+    ``mesh`` (a ``("data",)`` mesh) enables the data-parallel step.
+    """
     cfg: GNNConfig
     graph: "HeteroGraph"
     seed: int = 0
+    donate: bool = True
+    fused_encode: bool = True
+    prefetch: int = 0
+    mesh: object = None
 
     def __post_init__(self):
         from dataclasses import replace
@@ -77,44 +180,131 @@ class LinkSAGETrainer:
         key = jax.random.PRNGKey(self.seed)
         params = linksage_init(key, self.cfg)
         self.state = TrainState(params, adamw_init(params))
-        self.rng = np.random.default_rng(self.seed)
+        self.rng = np.random.default_rng(self.seed)   # legacy stream
         eng = self.graph.adj[("member", "job")]
         self._pos_src = np.repeat(np.arange(len(eng.indptr) - 1), np.diff(eng.indptr))
         self._pos_dst = eng.indices
+        self._step_count = 0
+        self._steps: dict = {}
+        self.encoder_traces = 0                        # embed_nodes retraces
+        self._embed = self._make_embed()
+        self.last_train_stats: dict = {}
+
+    # -- step-indexed batch pipeline --------------------------------------
+    def _step_rng(self, step: int) -> np.random.Generator:
+        """One RNG stream per (trainer seed, step index): batches are a pure
+        function of the step, so prefetched and synchronous runs coincide."""
+        return np.random.default_rng((self.seed, step))
+
+    def _build_batch(self, step: int, batch_size: int):
+        rng = self._step_rng(step)
+        idx = rng.integers(0, len(self._pos_src), batch_size)
+        m_ids = self._pos_src[idx].astype(np.int32)
+        j_ids = self._pos_dst[idx].astype(np.int32)
+        m_tile, j_tile = self.sampler.sample_pair_batch(m_ids, j_ids, rng=rng)
+        return m_tile, j_tile, m_ids, j_ids
+
+    @staticmethod
+    def _transfer(batch):
+        """Host→device copy of a built batch (runs on the prefetch thread)."""
+        return jax.device_put(batch)
+
+    def _get_step(self, lr: float, max_norm: float = 1.0):
+        # every build input is in the key: flipping the public donate /
+        # fused_encode / mesh fields mid-run gets a fresh step, not a stale
+        # cache hit
+        key = (float(lr), float(max_norm), self.donate, self.fused_encode,
+               self.mesh)
+        if key not in self._steps:
+            self._steps[key] = make_train_step(
+                self.cfg, lr=lr, max_norm=max_norm, donate=self.donate,
+                fused=self.fused_encode, mesh=self.mesh)
+        return self._steps[key]
 
     def sample_label_batch(self, batch_size: int):
-        """Positive engagement edges; in-batch pairs provide the negatives."""
+        """Positive engagement edges; in-batch pairs provide the negatives.
+        (Legacy stateful-stream variant; the trainer samples per-step.)"""
         idx = self.rng.integers(0, len(self._pos_src), batch_size)
         return self._pos_src[idx].astype(np.int32), self._pos_dst[idx].astype(np.int32)
 
     def step(self, batch_size: int = 128, lr: float = 3e-3):
-        m_ids, j_ids = self.sample_label_batch(batch_size)
-        m_tile, j_tile = self.sampler.sample_pair_batch(m_ids, j_ids)
-        labels = jnp.ones((batch_size,), jnp.float32)
-        self.state, metrics = train_step(self.state, self.cfg,
-                                         _to_jnp(m_tile), _to_jnp(j_tile), labels,
-                                         lr=lr)
+        batch = self._transfer(self._build_batch(self._step_count, batch_size))
+        self.state, metrics = self._get_step(lr)(self.state, *batch)
+        self._step_count += 1
         return {k: float(v) for k, v in metrics.items()}
 
     def train(self, steps: int, batch_size: int = 128, lr: float = 3e-3,
               log_every: int = 20, verbose: bool = False):
-        history = []
-        for i in range(steps):
-            m = self.step(batch_size, lr)
-            history.append(m)
-            if verbose and i % log_every == 0:
-                print(f"step {i:4d}  loss {m['loss']:.4f}  gnorm {m['grad_norm']:.3f}")
+        t0 = time.perf_counter()
+        stall = 0.0
+        if self.prefetch > 0:
+            step_fn = self._get_step(lr)
+            device_metrics = []
+            with BatchPrefetcher(
+                    lambda i: self._build_batch(i, batch_size), steps,
+                    depth=self.prefetch, transfer=self._transfer,
+                    start_step=self._step_count) as pf:
+                for i in range(steps):
+                    self.state, m = step_fn(self.state, *pf.get())
+                    # the counter tracks COMPLETED steps (a mid-run failure
+                    # must not rewind the per-step RNG streams onto already
+                    # -trained batches on retry)
+                    self._step_count += 1
+                    # keep metrics on device: no per-step host sync to stall
+                    # the pipeline; converted in one pass below
+                    device_metrics.append(m)
+                    if verbose and i % log_every == 0:
+                        print(f"step {i:4d}  loss {float(m['loss']):.4f}")
+                stall = pf.stall_seconds
+            history = [{k: float(v) for k, v in m.items()} for m in device_metrics]
+        else:
+            history = []
+            for i in range(steps):
+                m = self.step(batch_size, lr)
+                history.append(m)
+                if verbose and i % log_every == 0:
+                    print(f"step {i:4d}  loss {m['loss']:.4f}  gnorm {m['grad_norm']:.3f}")
+        wall = time.perf_counter() - t0
+        self.last_train_stats = {
+            "steps": steps, "wall_s": wall,
+            "steps_per_s": steps / max(wall, 1e-9),
+            "sampler_stall_s": stall,
+            "sampler_stall_frac": stall / max(wall, 1e-9),
+        }
         return history
 
     # -- inference -------------------------------------------------------
+    def _make_embed(self):
+        cfg = self.cfg
+
+        def fn(params, tile):
+            # trace-time side effect: counts (re)compilations per bucket
+            self.encoder_traces += 1
+            return enc.encoder_apply(params["encoder"], cfg, tile)
+
+        return jax.jit(fn)
+
+    # embed_nodes RNG domain separator (keeps inference streams disjoint
+    # from the (seed, step) training streams)
+    _EMBED_STREAM = 1 << 24
+
     def embed_nodes(self, node_type: str, ids: np.ndarray, batch: int = 256):
+        """Chunked encoding of ``ids``.  Full chunks reuse one compiled
+        executable of shape ``batch``; the final partial chunk is padded to
+        its power-of-two bucket (capped at ``batch``) so repeated calls
+        never retrace (asserted via ``encoder_traces``).  Neighborhoods are
+        sampled from per-chunk RNG streams, so the same call yields the
+        same embeddings until the graph changes."""
+        from repro.core.nearline import bucket_pow2
         out = []
         for i in range(0, len(ids), batch):
             chunk = ids[i:i + batch]
-            pad = (-len(chunk)) % batch
+            bucket = min(bucket_pow2(len(chunk)), batch)
+            pad = bucket - len(chunk)
             padded = np.concatenate([chunk, np.zeros(pad, chunk.dtype)]) if pad else chunk
-            tile = self.sampler.sample_batch(node_type, padded)
-            emb = np.asarray(encode(self.state.params, self.cfg, _to_jnp(tile)))
+            rng = np.random.default_rng((self.seed, self._EMBED_STREAM, i))
+            tile = self.sampler.sample_batch(node_type, padded, rng=rng)
+            emb = np.asarray(self._embed(self.state.params, _to_jnp(tile)))
             out.append(emb[:len(chunk)])
         return np.concatenate(out, axis=0)
 

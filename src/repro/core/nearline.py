@@ -275,6 +275,14 @@ class EmbeddingStore(NoSQLStore):
         return self.get((node_type, int(node_id)))
 
 
+def bucket_pow2(n: int, minimum: int = 8) -> int:
+    """Pad batch sizes to power-of-two buckets (min ``minimum``) so jit
+    compiles one executable per bucket and steady-state batches never
+    retrace.  Shared by the nearline encoder and the trainer's
+    ``embed_nodes``."""
+    return max(minimum, 1 << max(n - 1, 1).bit_length())
+
+
 def _pad_tile(tile: ComputeGraphBatch, to: int) -> ComputeGraphBatch:
     """Zero-pad every array of the tile along the batch axis to ``to`` rows
     (all-masked padding rows encode to garbage that is sliced off)."""
@@ -351,9 +359,7 @@ class NearlineInference:
 
     @staticmethod
     def _bucket(n: int) -> int:
-        """Pad batch sizes to power-of-two buckets (min 8) so jit compiles
-        one executable per bucket and steady-state batches never retrace."""
-        return max(8, 1 << max(n - 1, 1).bit_length())
+        return bucket_pow2(n)
 
     # ---- store bootstrap (initial graph snapshot load) -------------------
     def bootstrap_from_graph(self, graph) -> None:

@@ -15,8 +15,11 @@ dst_id) pairs) is precomputed so sampling is vectorized numpy.
 """
 from __future__ import annotations
 
+import queue
+import threading
+import time
 from dataclasses import dataclass
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import numpy as np
 
@@ -108,7 +111,9 @@ class NeighborSampler:
         self._dim = graph.feat_dim
 
     # -- one hop: (types[N], ids[N]) -> (types[N,F], ids[N,F], mask[N,F])
-    def _sample_hop(self, types: np.ndarray, ids: np.ndarray, fanout: int):
+    def _sample_hop(self, types: np.ndarray, ids: np.ndarray, fanout: int,
+                    rng: np.random.Generator | None = None):
+        rng = self.rng if rng is None else rng
         n = ids.shape[0]
         out_id = np.zeros((n, fanout), np.int32)
         out_ty = np.zeros((n, fanout), np.int8)
@@ -139,13 +144,13 @@ class NeighborSampler:
                 wcum = self.madj.wcum[tname]
                 lo = np.where(base > 0, wcum[base - 1], 0.0)
                 hi = wcum[base + d - 1]
-                u = self.rng.random((rows.size, fanout))
+                u = rng.random((rows.size, fanout))
                 targets = lo[:, None] + u * (hi - lo)[:, None]
                 gidx = np.searchsorted(wcum, targets, side="right")
                 offs = np.clip(gidx - base[:, None], 0, (d - 1)[:, None])
             else:
                 # uniform with replacement: offsets in [0, deg)
-                offs = (self.rng.random((rows.size, fanout)) * d[:, None]).astype(np.int64)
+                offs = (rng.random((rows.size, fanout)) * d[:, None]).astype(np.int64)
             flat = base[:, None] + offs
             out_id[rows] = dst_id[flat]
             out_ty[rows] = dst_ty[flat]
@@ -169,16 +174,23 @@ class NeighborSampler:
                 out[sel] = self._feat[tid][flat_i[sel]]
         return out.reshape(*types.shape, self._dim)
 
-    def sample_batch(self, node_type: str, node_ids: np.ndarray) -> ComputeGraphBatch:
-        """Build the padded 2-hop compute-graph tile for a batch of queries."""
+    def sample_batch(self, node_type: str, node_ids: np.ndarray,
+                     rng: np.random.Generator | None = None) -> ComputeGraphBatch:
+        """Build the padded 2-hop compute-graph tile for a batch of queries.
+
+        ``rng`` overrides the sampler's own (stateful) stream — the training
+        pipeline passes a per-step generator keyed by step index so batches
+        are a pure function of (seed, step) and the prefetching pipeline
+        reproduces the synchronous one bit-for-bit.
+        """
         f1, f2 = self.cfg.fanouts
         b = node_ids.shape[0]
         q_type = np.full(b, NODE_TYPE_ID[node_type], np.int8)
         q_ids = node_ids.astype(np.int32)
 
-        n1_ty, n1_id, n1_mask = self._sample_hop(q_type, q_ids, f1)
+        n1_ty, n1_id, n1_mask = self._sample_hop(q_type, q_ids, f1, rng)
         n2_ty, n2_id, n2_mask_flat = self._sample_hop(
-            n1_ty.reshape(-1), n1_id.reshape(-1), f2)
+            n1_ty.reshape(-1), n1_id.reshape(-1), f2, rng)
         n2_ty = n2_ty.reshape(b, f1, f2)
         n2_id = n2_id.reshape(b, f1, f2)
         n2_mask = n2_mask_flat.reshape(b, f1, f2) & n1_mask[:, :, None]
@@ -194,7 +206,94 @@ class NeighborSampler:
             n2_mask=n2_mask.astype(np.float32),
         )
 
-    def sample_pair_batch(self, member_ids: np.ndarray, job_ids: np.ndarray):
+    def sample_pair_batch(self, member_ids: np.ndarray, job_ids: np.ndarray,
+                          rng: np.random.Generator | None = None):
         """(member tile, job tile) for link-prediction batches."""
-        return (self.sample_batch("member", member_ids),
-                self.sample_batch("job", job_ids))
+        return (self.sample_batch("member", member_ids, rng),
+                self.sample_batch("job", job_ids, rng))
+
+
+# ---------------------------------------------------------------- prefetch
+
+
+class BatchPrefetcher:
+    """Background-thread batch pipeline for the training loop.
+
+    A worker thread builds batch ``i`` by calling ``build(i)`` (host-side
+    numpy sampling) and pushes it through ``transfer`` (typically
+    ``jax.device_put``, so the host→device copy ALSO happens off the main
+    thread) into a bounded queue of depth ``depth`` — double-buffering by
+    default.  The main thread pops batches in step order while the device
+    runs the current step, so sampler time is hidden behind compute.
+
+    Reproducibility contract: ``build`` must be a pure function of the step
+    index (per-step RNG streams — see :meth:`NeighborSampler.sample_batch`),
+    which makes the prefetched run bit-identical to a synchronous loop
+    calling ``build(i)`` inline.
+
+    ``stall_seconds`` accumulates the time the consumer spent blocked on an
+    empty queue — the sampler-stall metric the train benchmark reports.
+    """
+
+    _STOP = object()
+
+    def __init__(self, build: Callable[[int], object], num_steps: int, *,
+                 depth: int = 2, transfer: Callable | None = None,
+                 start_step: int = 0):
+        assert depth >= 1, depth
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._build = build
+        self._transfer = transfer or (lambda x: x)
+        self._stop = False
+        self._error: BaseException | None = None
+        self.stall_seconds = 0.0
+        self.batches = 0
+        self._thread = threading.Thread(
+            target=self._run, args=(start_step, num_steps), daemon=True)
+        self._thread.start()
+
+    def _run(self, start: int, num_steps: int) -> None:
+        try:
+            for i in range(start, start + num_steps):
+                if self._stop:
+                    return
+                item = self._transfer(self._build(i))
+                while not self._stop:
+                    try:
+                        self._q.put(item, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:        # surfaced on the consumer side
+            self._error = e
+            self._q.put(self._STOP)
+
+    def get(self):
+        """Next batch in step order; blocks (and accounts the stall) if the
+        producer is behind."""
+        t0 = time.perf_counter()
+        item = self._q.get()
+        self.stall_seconds += time.perf_counter() - t0
+        if item is self._STOP:
+            raise RuntimeError("prefetch worker failed") from self._error
+        self.batches += 1
+        return item
+
+    def close(self) -> None:
+        """Stop the worker and release anything still queued.  Never raises:
+        worker errors surface through :meth:`get` (close may run while an
+        exception is already propagating and must not mask it)."""
+        self._stop = True
+        while self._thread.is_alive():
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.05)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

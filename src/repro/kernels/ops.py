@@ -13,6 +13,8 @@ can pass [..., F, D] tiles of any rank.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -105,28 +107,14 @@ def neighbor_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out[:n0].reshape(*lead, d)
 
 
-def sage_layer(h_self: jax.Array, h_neigh: jax.Array, mask: jax.Array,
-               w_self: jax.Array, b_self: jax.Array,
-               w_neigh: jax.Array, b_neigh: jax.Array, *, impl=None) -> jax.Array:
-    """Fused GraphSAGE layer (mean aggregator):
-    relu(h_self@W_self + b_self + mean_mask(h_neigh)@W_neigh + b_neigh).
-
-    h_self [..., D], h_neigh [..., F, D], mask [..., F], weights [D, H],
-    biases [H] -> [..., H].
-    """
-    impl = _resolve(impl)
-    if impl == "ref":
-        return ref.sage_layer(h_self, h_neigh, mask, w_self, b_self,
-                              w_neigh, b_neigh)
-    lead = h_neigh.shape[:-2]
+def _sage_layer_pallas(interpret: bool, h_self, h_neigh, mask,
+                       w_self, b_self, w_neigh, b_neigh):
+    """Padded kernel call at flat [N, ...] rank (the custom-VJP primal)."""
     f, d = h_neigh.shape[-2:]
     h_out = w_self.shape[1]
-    hh = h_self.reshape(-1, d)
-    nb = h_neigh.reshape(-1, f, d)
-    mm = mask.reshape(-1, f).astype(jnp.float32)
-    hh, n0 = _pad_to(hh, 0, 128)
-    nb, _ = _pad_to(nb, 0, 128)
-    mm, _ = _pad_to(mm, 0, 128)
+    hh, n0 = _pad_to(h_self, 0, 128)
+    nb, _ = _pad_to(h_neigh, 0, 128)
+    mm, _ = _pad_to(mask.astype(jnp.float32), 0, 128)
     # pad the contraction dim (zero rows of W contribute nothing) and the
     # output dim (extra cols are sliced off) to the 128-lane width
     hh, _ = _pad_to(hh, 1, 128)
@@ -136,8 +124,168 @@ def sage_layer(h_self: jax.Array, h_neigh: jax.Array, mask: jax.Array,
     bs, _ = _pad_to(b_self.reshape(1, -1), 1, 128)
     bn, _ = _pad_to(b_neigh.reshape(1, -1), 1, 128)
     out = _slayer.sage_layer(hh, nb, mm, ws, bs, wn, bn, block_n=128,
-                             interpret=(impl == "interpret"))
-    return out[:n0, :h_out].reshape(*lead, h_out)
+                             interpret=interpret)
+    return out[:n0, :h_out]
+
+
+# pallas_call has no autodiff rule, so the fused kernels carry a hand-written
+# recompute-based jnp backward: training can run straight through the
+# ``pallas`` / ``interpret`` paths (forward AND backward parity against the
+# jnp oracle is asserted in tests).  ``mask`` encodes graph structure, never
+# a function of params, and gets a zero cotangent.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sage_layer_fused(interpret, h_self, h_neigh, mask,
+                      w_self, b_self, w_neigh, b_neigh):
+    return _sage_layer_pallas(interpret, h_self, h_neigh, mask,
+                              w_self, b_self, w_neigh, b_neigh)
+
+
+def _sage_layer_fwd(interpret, h_self, h_neigh, mask,
+                    w_self, b_self, w_neigh, b_neigh):
+    out = _sage_layer_pallas(interpret, h_self, h_neigh, mask,
+                             w_self, b_self, w_neigh, b_neigh)
+    return out, (h_self, h_neigh, mask, w_self, b_self, w_neigh, b_neigh, out)
+
+
+def _sage_layer_bwd(interpret, res, g):
+    h_self, h_neigh, mask, w_self, b_self, w_neigh, b_neigh, out = res
+    f32 = jnp.float32
+    g = g.astype(f32) * (out > 0)                       # relu'(pre) ≡ out > 0
+    m = mask.astype(f32)
+    cnt = jnp.maximum(jnp.sum(m, axis=-1, keepdims=True), 1.0)   # [N, 1]
+    agg = jnp.sum(h_neigh.astype(f32) * m[..., None], axis=1) / cnt
+    d_h = (g @ w_self.astype(f32).T).astype(h_self.dtype)
+    d_ws = (h_self.astype(f32).T @ g).astype(w_self.dtype)
+    d_agg = g @ w_neigh.astype(f32).T
+    d_wn = (agg.T @ g).astype(w_neigh.dtype)
+    d_b = jnp.sum(g, axis=0)
+    d_nb = ((d_agg / cnt)[:, None, :] * m[..., None]).astype(h_neigh.dtype)
+    return (d_h, d_nb, jnp.zeros_like(mask), d_ws, d_b.astype(b_self.dtype),
+            d_wn, d_b.astype(b_neigh.dtype))
+
+
+_sage_layer_fused.defvjp(_sage_layer_fwd, _sage_layer_bwd)
+
+
+def sage_layer(h_self: jax.Array, h_neigh: jax.Array, mask: jax.Array,
+               w_self: jax.Array, b_self: jax.Array,
+               w_neigh: jax.Array, b_neigh: jax.Array, *, impl=None) -> jax.Array:
+    """Fused GraphSAGE layer (mean aggregator):
+    relu(h_self@W_self + b_self + mean_mask(h_neigh)@W_neigh + b_neigh).
+
+    h_self [..., D], h_neigh [..., F, D], mask [..., F], weights [D, H],
+    biases [H] -> [..., H].  Differentiable in every input except ``mask``.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.sage_layer(h_self, h_neigh, mask, w_self, b_self,
+                              w_neigh, b_neigh)
+    lead = h_neigh.shape[:-2]
+    f, d = h_neigh.shape[-2:]
+    h_out = w_self.shape[1]
+    out = _sage_layer_fused(impl == "interpret",
+                            h_self.reshape(-1, d), h_neigh.reshape(-1, f, d),
+                            mask.reshape(-1, f), w_self, b_self,
+                            w_neigh, b_neigh)
+    return out.reshape(*lead, h_out)
+
+
+def _sage_attention_layer_pallas(interpret: bool, h_self, q, k, v, mask,
+                                 w_self, b_self, w_neigh, b_neigh):
+    """Padded fused attention-layer kernel call at flat [N, ...] rank."""
+    f, d = k.shape[-2:]
+    h_out = w_self.shape[1]
+    # the softmax scale must come from the TRUE feature dim, not the padded
+    # one, so it is resolved here and passed into the kernel statically
+    scale = 1.0 / float(d) ** 0.5
+    hh, n0 = _pad_to(h_self, 0, 128)
+    qq, _ = _pad_to(q, 0, 128)
+    kk, _ = _pad_to(k, 0, 128)
+    vv, _ = _pad_to(v, 0, 128)
+    mm, _ = _pad_to(mask.astype(jnp.float32), 0, 128)
+    hh, _ = _pad_to(hh, 1, 128)
+    qq, _ = _pad_to(qq, 1, 128)
+    kk, _ = _pad_to(kk, 2, 128)
+    vv, _ = _pad_to(vv, 2, 128)
+    ws, _ = _pad_to(_pad_to(w_self, 0, 128)[0], 1, 128)
+    wn, _ = _pad_to(_pad_to(w_neigh, 0, 128)[0], 1, 128)
+    bs, _ = _pad_to(b_self.reshape(1, -1), 1, 128)
+    bn, _ = _pad_to(b_neigh.reshape(1, -1), 1, 128)
+    out = _sattn.sage_attention_layer(hh, qq, kk, vv, mm, ws, bs, wn, bn,
+                                      scale=scale, block_n=128,
+                                      interpret=interpret)
+    return out[:n0, :h_out]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sage_attention_layer_fused(interpret, h_self, q, k, v, mask,
+                                w_self, b_self, w_neigh, b_neigh):
+    return _sage_attention_layer_pallas(interpret, h_self, q, k, v, mask,
+                                        w_self, b_self, w_neigh, b_neigh)
+
+
+def _sage_attention_layer_fwd(interpret, h_self, q, k, v, mask,
+                              w_self, b_self, w_neigh, b_neigh):
+    out = _sage_attention_layer_pallas(interpret, h_self, q, k, v, mask,
+                                       w_self, b_self, w_neigh, b_neigh)
+    return out, (h_self, q, k, v, mask, w_self, b_self, w_neigh, b_neigh, out)
+
+
+def _sage_attention_layer_bwd(interpret, res, g):
+    h_self, q, k, v, mask, w_self, b_self, w_neigh, b_neigh, out = res
+    f32 = jnp.float32
+    g = g.astype(f32) * (out > 0)
+    scale = 1.0 / float(q.shape[-1]) ** 0.5
+    qf, kf, vf = q.astype(f32), k.astype(f32), v.astype(f32)
+    logits = jnp.einsum("nd,nfd->nf", qf, kf) * scale
+    logits = jnp.where(mask > 0, logits, -1e30)
+    e = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True)) * (mask > 0)
+    w = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)   # [N, F]
+    agg = jnp.einsum("nf,nfd->nd", w, vf)
+    d_h = (g @ w_self.astype(f32).T).astype(h_self.dtype)
+    d_ws = (h_self.astype(f32).T @ g).astype(w_self.dtype)
+    d_agg = g @ w_neigh.astype(f32).T
+    d_wn = (agg.T @ g).astype(w_neigh.dtype)
+    d_b = jnp.sum(g, axis=0)
+    d_v = (w[..., None] * d_agg[:, None, :]).astype(v.dtype)
+    d_w = jnp.einsum("nd,nfd->nf", d_agg, vf)
+    d_logits = w * (d_w - jnp.sum(w * d_w, axis=-1, keepdims=True))
+    d_q = (jnp.einsum("nf,nfd->nd", d_logits, kf) * scale).astype(q.dtype)
+    d_k = (d_logits[..., None] * qf[:, None, :] * scale).astype(k.dtype)
+    return (d_h, d_q, d_k, d_v, jnp.zeros_like(mask), d_ws,
+            d_b.astype(b_self.dtype), d_wn, d_b.astype(b_neigh.dtype))
+
+
+_sage_attention_layer_fused.defvjp(_sage_attention_layer_fwd,
+                                   _sage_attention_layer_bwd)
+
+
+def sage_attention_layer(h_self: jax.Array, q: jax.Array, k: jax.Array,
+                         v: jax.Array, mask: jax.Array,
+                         w_self: jax.Array, b_self: jax.Array,
+                         w_neigh: jax.Array, b_neigh: jax.Array,
+                         *, impl=None) -> jax.Array:
+    """Fused GraphSAGE layer (attention aggregator):
+    relu(h_self@W_self + b_self + attn(q, k, v, mask)@W_neigh + b_neigh).
+
+    h_self/q [..., D], k/v [..., F, D], mask [..., F], weights [D, H],
+    biases [H] -> [..., H].  q/k are the caller-projected attention inputs;
+    differentiable in every input except ``mask``.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.sage_attention_layer(h_self, q, k, v, mask,
+                                        w_self, b_self, w_neigh, b_neigh)
+    lead = k.shape[:-2]
+    f, d = k.shape[-2:]
+    h_out = w_self.shape[1]
+    out = _sage_attention_layer_fused(impl == "interpret",
+                                      h_self.reshape(-1, d), q.reshape(-1, d),
+                                      k.reshape(-1, f, d), v.reshape(-1, f, d),
+                                      mask.reshape(-1, f), w_self, b_self,
+                                      w_neigh, b_neigh)
+    return out.reshape(*lead, h_out)
 
 
 # ------------------------------------------------------------ attention

@@ -58,6 +58,25 @@ def neighbor_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return jnp.einsum("...f,...fd->...d", w, v)
 
 
+def sage_attention_layer(h_self: jax.Array, q: jax.Array, k: jax.Array,
+                         v: jax.Array, mask: jax.Array,
+                         w_self: jax.Array, b_self: jax.Array,
+                         w_neigh: jax.Array, b_neigh: jax.Array) -> jax.Array:
+    """Fused GraphSAGE layer rule with attention aggregation (the oracle for
+    the Pallas kernel in :mod:`repro.kernels.sage_attention`):
+
+        agg = Σ_n α(i,n)·v_n,   α = masked softmax(⟨q_i, k_n⟩/√D)
+        out = relu(h_self @ W_self + b_self + agg @ W_neigh + b_neigh)
+
+    h_self/q [..., D], k/v [..., F, D], mask [..., F], weights [D, H],
+    biases [H] -> [..., H].  The q/k projections are applied by the caller.
+    """
+    agg = neighbor_attention(q, k, v, mask)
+    out = (h_self @ w_self.astype(h_self.dtype) + b_self.astype(h_self.dtype)
+           + agg @ w_neigh.astype(agg.dtype) + b_neigh.astype(agg.dtype))
+    return jax.nn.relu(out)
+
+
 # ------------------------------------------------------------ attention
 
 

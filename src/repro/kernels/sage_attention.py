@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: masked single-query neighbor attention (paper §4.2).
+"""Pallas TPU kernels: masked single-query neighbor attention (paper §4.2).
 
 Computes the attention aggregation  M_i = Σ_n α(i,n) f(features(n)) where
 α(i,·) = softmax over the (masked) fanout of ⟨W_q h_i, W_k h_n⟩/√d.  The
@@ -6,8 +6,16 @@ projections are applied outside (plain matmuls XLA already fuses well); the
 kernel fuses score → masked softmax → weighted sum so the [N, F] score
 matrix never leaves VMEM.
 
+``sage_attention_layer`` additionally fuses the full GraphSAGE layer rule
+epilogue — ``relu(h_self·W_self + b_self + agg·W_neigh + b_neigh)`` — so the
+attention aggregate never round-trips through HBM between the softmax and
+the dual matmul, mirroring what ``sage_layer`` does for the mean path.
+
 Tiling: grid (N/bn,); the full feature dim D stays resident (GNN hidden dims
-are 128–512).  Brick: q [bn, D], k/v [bn, F, D], mask [bn, F].
+are 128–512).  Brick: q [bn, D], k/v [bn, F, D], mask [bn, F]; the layer
+variant adds h_self [bn, D] plus the two broadcast [D, H] weight bricks
+(~2 MB at D=H=512 — comfortably inside the ~16 MB v5e VMEM budget alongside
+the 8 MB F=32 neighbor brick).
 """
 from __future__ import annotations
 
@@ -54,3 +62,67 @@ def sage_attention(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n, d), v.dtype),
         interpret=interpret,
     )(q, k, v, mask)
+
+
+def _sage_attention_layer_kernel(h_ref, q_ref, k_ref, v_ref, mask_ref,
+                                 ws_ref, bs_ref, wn_ref, bn_ref, out_ref,
+                                 *, scale: float):
+    # ``scale`` is passed in statically because the wrapper zero-pads the
+    # feature dim: 1/√D must use the TRUE D, not the padded one.
+    q = q_ref[...].astype(jnp.float32)          # [bn, D]
+    k = k_ref[...].astype(jnp.float32)          # [bn, F, D]
+    v = v_ref[...].astype(jnp.float32)
+    mask = mask_ref[...]                        # [bn, F]
+    logits = jnp.sum(q[:, None, :] * k, axis=-1) * scale          # [bn, F]
+    logits = jnp.where(mask > 0, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m) * (mask > 0)
+    denom = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    agg = jnp.einsum("nf,nfd->nd", e / denom, v)                  # [bn, D]
+    out = (jnp.dot(h_ref[...].astype(jnp.float32),
+                   ws_ref[...].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+           + jnp.dot(agg, wn_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+           + bs_ref[...].astype(jnp.float32) + bn_ref[...].astype(jnp.float32))
+    out_ref[...] = jnp.maximum(out, 0.0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_n", "interpret"))
+def sage_attention_layer(h_self: jax.Array, q: jax.Array, k: jax.Array,
+                         v: jax.Array, mask: jax.Array,
+                         w_self: jax.Array, b_self: jax.Array,
+                         w_neigh: jax.Array, b_neigh: jax.Array,
+                         *, scale: float | None = None, block_n: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """h_self/q [N, D], k/v [N, F, D], mask [N, F], weights [D, H],
+    biases [1, H] -> relu(h·W_self + attn_agg·W_neigh + biases)  [N, H].
+
+    ``scale`` defaults to 1/√D of the given (possibly padded) k; callers that
+    pad the feature dim must pass the true-dim scale explicitly.
+    """
+    n, f, d = k.shape
+    h_out = w_self.shape[1]
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_sage_attention_layer_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bn, f, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bn, f), lambda i: (i, 0)),
+            pl.BlockSpec((d, h_out), lambda i: (0, 0)),
+            pl.BlockSpec((1, h_out), lambda i: (0, 0)),
+            pl.BlockSpec((d, h_out), lambda i: (0, 0)),
+            pl.BlockSpec((1, h_out), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, h_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h_out), h_self.dtype),
+        interpret=interpret,
+    )(h_self, q, k, v, mask, w_self, b_self, w_neigh, b_neigh)

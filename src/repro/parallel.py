@@ -148,6 +148,65 @@ def param_shardings(cfg: ArchConfig, params, mesh: Mesh):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+# ------------------------------------------------------- GNN (LinkSAGE)
+
+# Training-parallelism policy for the GNN (DESIGN.md §7): pure data-parallel.
+# LinkSAGE is inductive — no embedding tables, the 1B-member scale lives in
+# the stores — so params are tiny and replicate; the batch dim of both
+# compute-graph tiles shards over ("data",).  Specs reuse the same
+# path-regex machinery as the transformer rules above so a future sharded
+# piece (e.g. a giant per-type transform) is a one-line rule, not new code.
+
+_GNN_RULES = [
+    (r"type_transform/(w|b)$",                        None),
+    (r"layers/\d+/(self|neigh|attn_q|attn_k)/(w|b)$", None),
+    (r"out/(w|b)$",                                   None),
+    (r"mlp/",                                         None),   # MLP decoder
+]
+
+
+def gnn_param_pspecs(params):
+    """Pytree of PartitionSpecs for a LinkSAGE params tree (all replicated
+    today; every leaf must match a rule so new params are placed on
+    purpose, not by accident)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        for pat, axes in _GNN_RULES:
+            if re.search(pat, ps):
+                assert axes is None
+                specs.append(P(*([None] * np.ndim(leaf))))
+                break
+        else:
+            raise ValueError(f"no GNN sharding rule matches param path {ps!r}")
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def gnn_tile_pspecs():
+    """Batch-dim ("data",) sharding for a padded 2-hop ComputeGraphBatch."""
+    from repro.core.sampler import ComputeGraphBatch
+    return ComputeGraphBatch(
+        q_feat=P("data", None),
+        q_type=P("data"),
+        n1_feat=P("data", None, None),
+        n1_type=P("data", None),
+        n1_mask=P("data", None),
+        n2_feat=P("data", None, None, None),
+        n2_type=P("data", None, None),
+        n2_mask=P("data", None, None),
+    )
+
+
+def gnn_state_pspecs(state):
+    """Replicated specs for the whole TrainState (params + AdamW moments)."""
+    from repro.optim import AdamWState
+    param_specs = gnn_param_pspecs(state.params)
+    opt_specs = AdamWState(step=P(), m=gnn_param_pspecs(state.opt.m),
+                           v=gnn_param_pspecs(state.opt.v))
+    return type(state)(params=param_specs, opt=opt_specs)
+
+
 # ---------------------------------------------------------- batch / state
 
 

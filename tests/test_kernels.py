@@ -109,6 +109,149 @@ def test_sage_layer_ref_equals_unfused_encoder_rule():
                                rtol=1e-6, atol=1e-6)
 
 
+# ------------------------------------------------- fused attention layer
+
+
+def _sage_attention_layer_inputs(n, f, d, h):
+    h_self = _arr((n, d))
+    q = _arr((n, d))
+    k = _arr((n, f, d))
+    v = _arr((n, f, d))
+    mask = jnp.asarray((RNG.random((n, f)) < 0.7).astype(np.float32))
+    w_self = _arr((d, h), scale=0.1)
+    b_self = _arr((h,), scale=0.1)
+    w_neigh = _arr((d, h), scale=0.1)
+    b_neigh = _arr((h,), scale=0.1)
+    return h_self, q, k, v, mask, w_self, b_self, w_neigh, b_neigh
+
+
+@pytest.mark.parametrize("n,f,d,h", [(16, 4, 32, 32), (128, 10, 64, 64),
+                                     (37, 6, 40, 48), (5, 3, 17, 17)])
+def test_sage_attention_layer_matches_ref(n, f, d, h):
+    args = _sage_attention_layer_inputs(n, f, d, h)
+    got = ops.sage_attention_layer(*args, impl="interpret")
+    want = ops.sage_attention_layer(*args, impl="ref")
+    assert float(jnp.max(jnp.abs(got - want))) <= 1e-5
+
+
+def test_sage_attention_layer_all_masked_rows_use_self_path_only():
+    n, f, d = 16, 5, 64
+    h_self, q, k, v, _, w_self, b_self, w_neigh, b_neigh = \
+        _sage_attention_layer_inputs(n, f, d, d)
+    mask = jnp.zeros((n, f))
+    got = ops.sage_attention_layer(h_self, q, k, v, mask, w_self, b_self,
+                                   w_neigh, b_neigh, impl="interpret")
+    want = jax.nn.relu(h_self @ w_self + b_self + b_neigh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sage_attention_layer_leading_dims():
+    b, f1, f, d = 4, 6, 5, 48
+    h_self = _arr((b, f1, d))
+    q = _arr((b, f1, d))
+    k = _arr((b, f1, f, d))
+    v = _arr((b, f1, f, d))
+    mask = jnp.asarray((RNG.random((b, f1, f)) < 0.5).astype(np.float32))
+    w = _arr((d, d), scale=0.1)
+    bias = _arr((d,), scale=0.1)
+    got = ops.sage_attention_layer(h_self, q, k, v, mask, w, bias, w, bias,
+                                   impl="interpret")
+    want = ops.sage_attention_layer(h_self, q, k, v, mask, w, bias, w, bias,
+                                    impl="ref")
+    assert got.shape == (b, f1, d)
+    assert float(jnp.max(jnp.abs(got - want))) <= 1e-5
+
+
+# --------------------------------------------------- kernel gradient parity
+#
+# The fused kernels carry custom VJPs (pallas_call has no autodiff rule);
+# backward parity against jax.grad of the pure-jnp oracle is what lets the
+# TRAINING loop run through the pallas/interpret paths, not just inference.
+
+
+def _grad_parity(make_loss, args, names, tol=1e-5):
+    argnums = tuple(range(len(args)))
+    g_int = jax.grad(make_loss("interpret"), argnums=argnums)(*args)
+    g_ref = jax.grad(make_loss("ref"), argnums=argnums)(*args)
+    for name, a, b in zip(names, g_int, g_ref):
+        err = float(jnp.max(jnp.abs(a - b)))
+        assert err <= tol, (name, err)
+
+
+@pytest.mark.parametrize("n,f,d,h", [(32, 6, 40, 40), (128, 10, 64, 64)])
+def test_sage_layer_gradient_parity(n, f, d, h):
+    h_self, h_neigh, mask, w_self, b_self, w_neigh, b_neigh = \
+        _sage_layer_inputs(n, f, d, h)
+    cot = _arr((n, h))
+
+    def make_loss(impl):
+        def loss(h_self, h_neigh, w_self, b_self, w_neigh, b_neigh):
+            out = ops.sage_layer(h_self, h_neigh, mask, w_self, b_self,
+                                 w_neigh, b_neigh, impl=impl)
+            return jnp.sum(out * cot)
+        return loss
+
+    _grad_parity(make_loss, (h_self, h_neigh, w_self, b_self, w_neigh, b_neigh),
+                 ("h_self", "h_neigh", "w_self", "b_self", "w_neigh", "b_neigh"))
+
+
+def test_sage_layer_gradient_parity_leading_dims():
+    b, f1, f, d = 3, 5, 4, 32
+    h_self = _arr((b, f1, d))
+    h_neigh = _arr((b, f1, f, d))
+    mask = jnp.asarray((RNG.random((b, f1, f)) < 0.6).astype(np.float32))
+    w = _arr((d, d), scale=0.1)
+    bias = _arr((d,), scale=0.1)
+    cot = _arr((b, f1, d))
+
+    def make_loss(impl):
+        def loss(h_self, h_neigh, w, bias):
+            out = ops.sage_layer(h_self, h_neigh, mask, w, bias, w, bias,
+                                 impl=impl)
+            return jnp.sum(out * cot)
+        return loss
+
+    _grad_parity(make_loss, (h_self, h_neigh, w, bias),
+                 ("h_self", "h_neigh", "w", "bias"))
+
+
+@pytest.mark.parametrize("n,f,d,h", [(32, 6, 40, 40), (128, 10, 64, 64)])
+def test_sage_attention_layer_gradient_parity(n, f, d, h):
+    h_self, q, k, v, mask, w_self, b_self, w_neigh, b_neigh = \
+        _sage_attention_layer_inputs(n, f, d, h)
+    cot = _arr((n, h))
+
+    def make_loss(impl):
+        def loss(h_self, q, k, v, w_self, b_self, w_neigh, b_neigh):
+            out = ops.sage_attention_layer(h_self, q, k, v, mask, w_self,
+                                           b_self, w_neigh, b_neigh, impl=impl)
+            return jnp.sum(out * cot)
+        return loss
+
+    _grad_parity(make_loss,
+                 (h_self, q, k, v, w_self, b_self, w_neigh, b_neigh),
+                 ("h_self", "q", "k", "v", "w_self", "b_self", "w_neigh",
+                  "b_neigh"))
+
+
+def test_sage_attention_layer_gradient_parity_with_all_masked_rows():
+    n, f, d = 24, 4, 32
+    h_self, q, k, v, mask, w_self, b_self, w_neigh, b_neigh = \
+        _sage_attention_layer_inputs(n, f, d, d)
+    mask = mask.at[:5].set(0.0)           # zero-degree rows in the batch
+    cot = _arr((n, d))
+
+    def make_loss(impl):
+        def loss(q, k, v):
+            out = ops.sage_attention_layer(h_self, q, k, v, mask, w_self,
+                                           b_self, w_neigh, b_neigh, impl=impl)
+            return jnp.sum(out * cot)
+        return loss
+
+    _grad_parity(make_loss, (q, k, v), ("q", "k", "v"))
+
+
 # -------------------------------------------------------- sage attention
 
 

@@ -1,0 +1,186 @@
+"""Training hot-path behaviour: per-step RNG prefetch pipeline, donated /
+fused / data-parallel train step, in-batch pos-mask, embed_nodes bucketing."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from dataclasses import replace
+
+from repro import parallel as par
+from repro.configs.linksage import smoke as gnn_smoke
+from repro.core.linksage import (LinkSAGETrainer, _to_jnp, linksage_init,
+                                 loss_fn, make_train_step, pos_mask_from_ids)
+from repro.data import GraphGenConfig, generate_job_marketplace_graph
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    cfg = GraphGenConfig(num_members=200, num_jobs=60, seed=7)
+    return generate_job_marketplace_graph(cfg)
+
+
+def _smoke_cfg(g, **kw):
+    return replace(gnn_smoke(), feat_dim=g.feat_dim, **kw)
+
+
+# ----------------------------------------------------------- pos-mask fix
+
+
+def test_pos_mask_from_ids_marks_duplicate_pairs():
+    # batch (A,X), (A,Y), (B,Y): (A,Y) is a positive at BOTH (0,1) and (1,2)
+    # would-be-negative grid slots, via duplicate member A and duplicate job Y
+    m_ids = jnp.asarray([0, 0, 1], jnp.int32)
+    j_ids = jnp.asarray([5, 6, 6], jnp.int32)
+    mask = np.asarray(pos_mask_from_ids(m_ids, j_ids))
+    want = np.array([[1, 1, 1],
+                     [1, 1, 1],
+                     [0, 1, 1]], np.float32)
+    np.testing.assert_array_equal(mask, want)
+
+
+def test_pos_mask_defaults_to_diagonal_without_duplicates():
+    m_ids = jnp.asarray([0, 1, 2], jnp.int32)
+    j_ids = jnp.asarray([5, 6, 7], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(pos_mask_from_ids(m_ids, j_ids)),
+                                  np.eye(3, dtype=np.float32))
+
+
+def test_trainer_step_applies_pos_mask(small_graph):
+    """The trainer's jitted step must score duplicates as positives — its
+    loss equals loss_fn with the id-derived mask, not the bare diagonal."""
+    g, _ = small_graph
+    cfg = _smoke_cfg(g)
+    tr = LinkSAGETrainer(cfg, g, seed=3)
+    m_tile, j_tile, m_ids, j_ids = tr._build_batch(0, 64)
+    pm = pos_mask_from_ids(jnp.asarray(m_ids), jnp.asarray(j_ids))
+    assert float(jnp.sum(pm)) > 64, "batch has no duplicates; pick a new seed"
+    with_mask = float(loss_fn(tr.state.params, cfg, _to_jnp(m_tile),
+                              _to_jnp(j_tile), pos_mask=pm))
+    diag_only = float(loss_fn(tr.state.params, cfg, _to_jnp(m_tile),
+                              _to_jnp(j_tile)))
+    got = tr.step(64)["loss"]
+    assert got == pytest.approx(with_mask, rel=1e-6)
+    assert got != pytest.approx(diag_only, rel=1e-6)
+
+
+# ------------------------------------------------- prefetch == synchronous
+
+
+def test_prefetch_matches_sync_loss_history(small_graph):
+    g, _ = small_graph
+    cfg = _smoke_cfg(g)
+    sync = LinkSAGETrainer(cfg, g, seed=0)
+    pre = LinkSAGETrainer(cfg, g, seed=0, prefetch=3)
+    h_sync = sync.train(10, batch_size=32)
+    h_pre = pre.train(10, batch_size=32)
+    assert [m["loss"] for m in h_sync] == [m["loss"] for m in h_pre]
+    assert [m["grad_norm"] for m in h_sync] == [m["grad_norm"] for m in h_pre]
+    assert pre.last_train_stats["sampler_stall_frac"] >= 0.0
+
+
+def test_prefetch_resumes_step_streams_across_train_calls(small_graph):
+    """Two successive train() calls must continue the per-step RNG streams —
+    identical to one long run, prefetched or not."""
+    g, _ = small_graph
+    cfg = _smoke_cfg(g)
+    one = LinkSAGETrainer(cfg, g, seed=1, prefetch=2)
+    two = LinkSAGETrainer(cfg, g, seed=1, prefetch=2)
+    h_one = one.train(8, batch_size=16)
+    h_two = two.train(4, batch_size=16) + two.train(4, batch_size=16)
+    assert [m["loss"] for m in h_one] == [m["loss"] for m in h_two]
+
+
+def test_fused_dual_tile_encode_matches_unfused(small_graph):
+    g, _ = small_graph
+    cfg = _smoke_cfg(g)
+    tr = LinkSAGETrainer(cfg, g, seed=0)
+    m_tile, j_tile, *_ = tr._build_batch(0, 16)
+    fused = loss_fn(tr.state.params, cfg, _to_jnp(m_tile), _to_jnp(j_tile),
+                    fused=True)
+    unfused = loss_fn(tr.state.params, cfg, _to_jnp(m_tile), _to_jnp(j_tile),
+                      fused=False)
+    np.testing.assert_allclose(float(fused), float(unfused), rtol=1e-6)
+
+
+@pytest.mark.parametrize("aggregator", ["mean", "attention"])
+def test_donated_fused_step_trains(small_graph, aggregator):
+    g, _ = small_graph
+    cfg = _smoke_cfg(g, aggregator=aggregator)
+    tr = LinkSAGETrainer(cfg, g, seed=0, prefetch=2)
+    hist = tr.train(20, batch_size=32)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert np.isfinite(hist[-1]["grad_norm"])
+
+
+# ------------------------------------------------------------ data parallel
+
+
+def test_dp_step_matches_single_device(small_graph):
+    """shard_map over a 1-device ("data",) mesh must reproduce the plain
+    step exactly (pmean over one shard is the identity)."""
+    g, _ = small_graph
+    cfg = _smoke_cfg(g)
+    plain = LinkSAGETrainer(cfg, g, seed=0)
+    mesh = jax.make_mesh((1,), ("data",))
+    dp = LinkSAGETrainer(cfg, g, seed=0, mesh=mesh)
+    h_plain = plain.train(4, batch_size=16)
+    h_dp = dp.train(4, batch_size=16)
+    assert [m["loss"] for m in h_plain] == [m["loss"] for m in h_dp]
+
+
+def test_gnn_param_pspecs_cover_every_leaf(small_graph):
+    from jax.sharding import PartitionSpec as P
+    g, _ = small_graph
+    for decoder in ("inbatch", "mlp"):
+        cfg = _smoke_cfg(g, decoder=decoder)
+        params = jax.eval_shape(lambda c=cfg: linksage_init(jax.random.PRNGKey(0), c))
+        specs = par.gnn_param_pspecs(params)
+        leaves_p = jax.tree.leaves(params)
+        leaves_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(leaves_p) == len(leaves_s)
+        for p, s in zip(leaves_p, leaves_s):
+            assert len(s) == p.ndim
+
+
+def test_gnn_param_pspecs_reject_unknown_paths():
+    with pytest.raises(ValueError, match="no GNN sharding rule"):
+        par.gnn_param_pspecs({"mystery": {"w": np.zeros((2, 2))}})
+
+
+def test_gnn_tile_pspecs_shard_batch_dim_only():
+    specs = par.gnn_tile_pspecs()
+    for s in specs:
+        assert s[0] == "data"
+        assert all(ax is None for ax in s[1:])
+
+
+# -------------------------------------------------- embed_nodes bucketing
+
+
+def test_embed_nodes_no_retrace_across_calls(small_graph):
+    g, _ = small_graph
+    cfg = _smoke_cfg(g)
+    tr = LinkSAGETrainer(cfg, g, seed=0)
+    ids = np.arange(70)
+    emb = tr.embed_nodes("member", ids, batch=32)     # chunks 32, 32, 6→8
+    assert emb.shape == (70, cfg.embed_dim)
+    traces = tr.encoder_traces
+    assert traces == 2                                 # full bucket + tail bucket
+    emb2 = tr.embed_nodes("member", ids, batch=32)
+    assert tr.encoder_traces == traces                 # pure cache hits
+    np.testing.assert_allclose(emb, emb2, rtol=1e-6, atol=1e-6)
+    # same tile shapes for the other node type: still no retrace
+    tr.embed_nodes("job", np.arange(40), batch=32)
+    assert tr.encoder_traces == traces
+
+
+def test_embed_nodes_partial_tail_bucket_caps_at_batch(small_graph):
+    g, _ = small_graph
+    cfg = _smoke_cfg(g)
+    tr = LinkSAGETrainer(cfg, g, seed=0)
+    # tail of 50 would bucket to 64 > batch=48: must cap at batch and reuse
+    # the full-chunk executable instead of compiling a 64-wide one
+    tr.embed_nodes("member", np.arange(48 + 30), batch=48)
+    assert tr.encoder_traces == 2                      # 48-wide + 32-bucket
+    tr.embed_nodes("member", np.arange(48 + 47), batch=48)
+    assert tr.encoder_traces == 2                      # 47→cap 48: pure hit
