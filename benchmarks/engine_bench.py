@@ -1,0 +1,72 @@
+"""Graph-substrate benchmark (DESIGN.md §8): K-hop tile-build throughput of
+the two GraphEngine backends through the one shared TileBuilder.
+
+Arms: {snapshot, streaming} × {K=2 (8,4), K=3 (8,4,2)} at a fixed query
+batch, plus the structural row the refactor's acceptance gate tracks —
+bit-identical tiles from both backends on the same uniform stream (the
+training/serving-parity claim, not a timing).
+
+The snapshot arm is the trainer's sampling hot path (merged-CSR gathers);
+the streaming arm is the nearline join hot path (ring sampling + deduped
+feature multi_gets).  K=3 costs ~F3× the hop-2 work, which is exactly the
+padded-tile scaling the encoder inherits.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, standard_graph, timed
+from repro.core.engine import (SnapshotEngine, StreamingEngine, TileBuilder,
+                               slab_width)
+
+BATCH = 64
+FANOUT_ARMS = (("k2", (8, 4)), ("k3", (8, 4, 2)))
+
+
+def _engines(g):
+    stream = StreamingEngine(g.feat_dim, max_neighbors=128)
+    stream.bootstrap_from_graph(g)
+    return {"snapshot": SnapshotEngine(g), "streaming": stream}
+
+
+def bench_engine_tile_build():
+    g, _ = standard_graph(0)
+    engines = _engines(g)
+    ids = np.arange(BATCH) % g.num_nodes["member"]
+    for kname, fanouts in FANOUT_ARMS:
+        for ename, engine in engines.items():
+            builder = TileBuilder(engine, fanouts)
+
+            def build(b=builder):
+                return b.build("member", ids, rng=np.random.default_rng(0))
+
+            tile, us = timed(build, repeats=5)
+            emit(f"engine_tile_build_{ename}_{kname}", us,
+                 f"query_nodes_per_s={BATCH / (us / 1e6):.0f};"
+                 f"fanouts={'x'.join(map(str, fanouts))};"
+                 f"tile_entries={tile.types[-1].size};"
+                 f"hop_mask_mean={tile.masks[-1].mean():.3f}")
+
+
+def bench_engine_backend_parity():
+    """Not a timing: asserts the substrate contract the refactor rests on —
+    both backends emit bit-identical tiles from one uniform stream."""
+    g, _ = standard_graph(0)
+    engines = _engines(g)
+    ids = np.arange(BATCH) % g.num_nodes["member"]
+    for kname, fanouts in FANOUT_ARMS:
+        u = np.random.default_rng(3).random((BATCH, slab_width(fanouts)))
+        tiles = [TileBuilder(e, fanouts).build("member", ids, uniforms=u)
+                 for e in engines.values()]
+        flat = [np.concatenate([np.asarray(x, np.float64).ravel()
+                                for hop in t for x in hop]) for t in tiles]
+        bitmatch = bool(np.array_equal(flat[0], flat[1]))
+        emit(f"engine_backend_parity_{kname}", 0.0,
+             f"tiles_bitmatch={bitmatch};uniforms={u.size}")
+        assert bitmatch, f"backend parity broken at {kname}"  # fail the run, not just the row
+
+
+ALL_ENGINE = [
+    bench_engine_tile_build,
+    bench_engine_backend_parity,
+]

@@ -9,25 +9,27 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="substring filter on benchmark name")
     ap.add_argument("--quick", action="store_true",
-                    help="graph census + kernel + nearline + train-pipeline "
-                         "benchmarks only (skips the slow GNN-training "
-                         "tables; CI mode)")
+                    help="graph census + engine + kernel + nearline + "
+                         "train-pipeline benchmarks only (skips the slow "
+                         "GNN-training tables; CI mode)")
     ap.add_argument("--skip-slow", action="store_true",
                     help="deprecated alias of --quick")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the emitted rows as JSON to PATH")
     args = ap.parse_args()
 
+    from benchmarks.engine_bench import ALL_ENGINE
     from benchmarks.kernels_bench import ALL_KERNELS
     from benchmarks.nearline_bench import ALL_NEARLINE
     from benchmarks.tables import ALL_TABLES
     from benchmarks.train_bench import ALL_TRAIN
 
-    benches = (list(ALL_TABLES) + list(ALL_KERNELS) + list(ALL_NEARLINE)
-               + list(ALL_TRAIN))
+    benches = (list(ALL_TABLES) + list(ALL_ENGINE) + list(ALL_KERNELS)
+               + list(ALL_NEARLINE) + list(ALL_TRAIN))
     if args.skip_slow or args.quick:
         benches = [b for b in benches if b.__name__ == "bench_graph_construction"]
-        benches += list(ALL_KERNELS) + list(ALL_NEARLINE) + list(ALL_TRAIN)
+        benches += (list(ALL_ENGINE) + list(ALL_KERNELS) + list(ALL_NEARLINE)
+                    + list(ALL_TRAIN))
     if args.only:
         benches = [b for b in benches if args.only in b.__name__]
 

@@ -9,34 +9,48 @@
      fresh jobs get embeddings in seconds vs the 24 h offline batch
 
     PYTHONPATH=src python examples/end_to_end_linksage.py
+    # CI smoke: --members 120 --jobs 40 --steps 30 --ranker-epochs 2
 """
+import argparse
+
 import numpy as np
 
 from repro.configs.linksage import CONFIG
 from repro.core.eval import auc, retrieval_eval
 from repro.core.linksage import LinkSAGETrainer
-from repro.core.nearline import Event, NearlineInference, OfflineBatchInference
+from repro.core.nearline import Event, NearlineInference
 from repro.core.transfer import (DownstreamRanker, RankerConfig,
                                  build_ranker_dataset)
 from repro.data import GraphGenConfig, generate_job_marketplace_graph
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--members", type=int, default=600)
+    ap.add_argument("--jobs", type=int, default=180)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ranker-epochs", type=int, default=4)
+    ap.add_argument("--fanouts", default=None,
+                    help="per-hop fanouts, e.g. '10,5' or '8,4,2' (K=3)")
+    args = ap.parse_args()
     rng = np.random.default_rng(0)
+    cfg = CONFIG
+    if args.fanouts:
+        cfg = cfg.with_fanouts(int(f) for f in args.fanouts.split(","))
 
     # -- 1. graph ----------------------------------------------------------
     graph, truth = generate_job_marketplace_graph(
-        GraphGenConfig(num_members=600, num_jobs=180, seed=0))
+        GraphGenConfig(num_members=args.members, num_jobs=args.jobs, seed=0))
     print("graph:", graph.census()["total_edges"], "edges")
 
     # -- 2. GNN training ----------------------------------------------------
-    trainer = LinkSAGETrainer(CONFIG, graph, seed=0)
-    hist = trainer.train(200, batch_size=64)
+    trainer = LinkSAGETrainer(cfg, graph, seed=0)
+    hist = trainer.train(args.steps, batch_size=64)
     print(f"GNN loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
 
     # -- 3. offline embedding precompute ------------------------------------
-    m_emb = trainer.embed_nodes("member", np.arange(600))
-    j_emb = trainer.embed_nodes("job", np.arange(180))
+    m_emb = trainer.embed_nodes("member", np.arange(args.members))
+    j_emb = trainer.embed_nodes("job", np.arange(args.jobs))
     src, dst = truth["engagements"]
     print("EBR recall@10:", retrieval_eval(m_emb, j_emb, src, dst, k=10)["recall"])
 
@@ -46,31 +60,33 @@ def main():
     weak_j = (graph.features["job"] * 0.1
               + rng.normal(size=graph.features["job"].shape)).astype(np.float32)
     n = len(src)
-    pairs = (np.concatenate([src, rng.integers(0, 600, n)]),
-             np.concatenate([dst, rng.integers(0, 180, n)]))
+    pairs = (np.concatenate([src, rng.integers(0, args.members, n)]),
+             np.concatenate([dst, rng.integers(0, args.jobs, n)]))
     labels = np.concatenate([np.ones(n), np.zeros(n)]).astype(np.float32)
     for use_gnn in (True, False):
         ds = build_ranker_dataset(weak_m, weak_j, m_emb, j_emb, pairs, labels,
                                   use_gnn=use_gnn)
-        rk = DownstreamRanker(RankerConfig(name="jymbii", gnn_embed_dim=CONFIG.embed_dim,
+        rk = DownstreamRanker(RankerConfig(name="jymbii", gnn_embed_dim=cfg.embed_dim,
                                            other_feat_dim=64, use_gnn=use_gnn))
-        rk.fit(ds, epochs=4)
+        rk.fit(ds, epochs=args.ranker_epochs)
         print(f"JYMBII ranker AUC ({'with' if use_gnn else 'no  '} GNN):",
               f"{auc(labels, rk.score(ds)):.4f}")
 
     # -- 5. nearline day ------------------------------------------------------
-    nl = NearlineInference(CONFIG, trainer.state.params["encoder"], micro_batch=8)
+    nl = NearlineInference(cfg, trainer.state.params["encoder"], micro_batch=8)
     nl.bootstrap_from_graph(graph)
     for i in range(12):
         t = 3600.0 * i
         nl.topic.publish(Event(time=t, kind="job_created", payload={
-            "job_id": 180 + i, "features": rng.normal(size=64).astype(np.float32),
+            "job_id": args.jobs + i,
+            "features": rng.normal(size=64).astype(np.float32),
             "title": int(rng.integers(0, 40)), "company": int(rng.integers(0, 80))}))
         nl.topic.publish(Event(time=t + 5, kind="engagement", payload={
-            "member_id": int(rng.integers(0, 600)), "job_id": 180 + i}))
+            "member_id": int(rng.integers(0, args.members)),
+            "job_id": args.jobs + i}))
         nl.process()
     print("nearline:", nl.metrics.summary())
-    fresh = sum(nl.embedding_store.get_embedding("job", 180 + i) is not None
+    fresh = sum(nl.embedding_store.get_embedding("job", args.jobs + i) is not None
                 for i in range(12))
     print(f"fresh jobs embedded during the day: {fresh}/12 "
           "(offline daily batch: 0/12 until midnight)")

@@ -1,6 +1,7 @@
 """LinkSAGE GNN configuration (the paper's own model, §4.2).
 
-Encoder: 2-hop GraphSAGE over the heterogeneous job-marketplace graph with
+Encoder: K-hop GraphSAGE (paper default: 2 hops; ``with_fanouts`` builds
+deeper variants) over the heterogeneous job-marketplace graph with
 per-node-type feature transforms and mean or attention aggregation.
 Decoder: in-batch negative dot-product (default), MLP, or cosine.
 """
@@ -35,6 +36,12 @@ class GNNConfig:
 
     def with_decoder(self, dec: str) -> "GNNConfig":
         return replace(self, decoder=dec)
+
+    def with_fanouts(self, fanouts) -> "GNNConfig":
+        """K-hop config: one SAGE layer per hop (the encoder requires
+        num_sage_layers == len(fanouts))."""
+        fanouts = tuple(int(f) for f in fanouts)
+        return replace(self, fanouts=fanouts, num_sage_layers=len(fanouts))
 
 
 CONFIG = GNNConfig()

@@ -1,7 +1,10 @@
 """LinkSAGE core: the paper's contribution.
 
   graph     — heterogeneous job-marketplace graph (§3)
-  sampler   — fixed-fanout multi-hop tiles (DeepGNN role, §4.1)
+  stores    — NoSQL / ring-buffer storage primitives (§5.2)
+  engine    — the shared graph substrate: GraphEngine protocol, snapshot +
+              streaming backends, K-hop TileBuilder (DESIGN.md §8)
+  sampler   — training front-end over the engine (DeepGNN role, §4.1)
   encoder   — GraphSAGE mean/attention encoder (§4.2)
   decoder   — MLP / cosine / in-batch decoders + losses (§4.2)
   linksage  — model assembly + link-prediction training (§4.3)

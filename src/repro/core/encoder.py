@@ -13,7 +13,11 @@ mean path, ``kops.sage_attention_layer`` for attention) which dispatch to
 the pure-jnp reference on CPU and to the compiled kernels on TPU.
 
 Layer rule (GraphSAGE):  h_v ← σ(W_self·h_v + W_neigh·AGG_{n∈N(v)} h_n)
-applied innermost-hop-first over the padded 2-hop tile.
+applied innermost-hop-first over the padded K-hop tile: at stage l every
+remaining depth aggregates its children, so after K stages the query row
+has absorbed its full K-hop neighborhood (K = len(cfg.fanouts) =
+cfg.num_sage_layers; each stage's kernels flatten the leading hop dims, so
+K=3 runs through the same fused Pallas kernels as K=2).
 """
 from __future__ import annotations
 
@@ -96,24 +100,25 @@ def _sage_layer(layer, cfg: GNNConfig, h_self, h_neigh, mask):
 
 
 def encoder_apply(params, cfg: GNNConfig, tile) -> jax.Array:
-    """Encode the query nodes of a padded 2-hop tile -> [B, embed_dim].
+    """Encode the query nodes of a padded K-hop tile -> [B, embed_dim].
 
     ``tile`` is a ComputeGraphBatch (or pytree of jnp arrays with the same
-    fields).
+    structure).  Stage l updates every remaining depth k from its children
+    at depth k+1 (innermost-first GraphSAGE): for K=2 this is exactly the
+    classic h_n1 = L1(x_n1, x_n2), h_q = L2(L1(x_q, x_n1), h_n1) schedule.
     """
-    x_q = _type_transform(params["type_transform"], tile.q_feat, tile.q_type)
-    x_n1 = _type_transform(params["type_transform"], tile.n1_feat, tile.n1_type)
-    x_n2 = _type_transform(params["type_transform"], tile.n2_feat, tile.n2_type)
+    hs = [_type_transform(params["type_transform"], f, t)
+          for f, t in zip(tile.feats, tile.types)]
+    num_hops = len(hs) - 1
+    layers = params["layers"]
+    assert len(layers) == num_hops, (
+        f"num_sage_layers ({len(layers)}) must equal len(fanouts) "
+        f"({num_hops}); use GNNConfig.with_fanouts")
+    for l in range(num_hops):
+        hs = [_sage_layer(layers[l], cfg, hs[k], hs[k + 1], tile.masks[k])
+              for k in range(num_hops - l)]
 
-    l1, l2 = params["layers"][0], params["layers"][1]
-    # hop-1 nodes aggregate their own (hop-2) neighbors
-    h_n1 = _sage_layer(l1, cfg, x_n1, x_n2, tile.n2_mask)               # [B, F1, h]
-    # query nodes aggregate raw hop-1 feats at layer 1 ...
-    h_q = _sage_layer(l1, cfg, x_q, x_n1, tile.n1_mask)                 # [B, h]
-    # ... then the refined hop-1 states at layer 2
-    h_q = _sage_layer(l2, cfg, h_q, h_n1, tile.n1_mask)                 # [B, h]
-
-    emb = nn.dense_apply(params["out"], h_q)
+    emb = nn.dense_apply(params["out"], hs[0])
     if cfg.l2_normalize:
         emb = emb / (jnp.linalg.norm(emb, axis=-1, keepdims=True) + 1e-6)
     return emb

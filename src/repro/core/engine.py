@@ -1,0 +1,556 @@
+"""One graph substrate for training AND serving (DESIGN.md §8).
+
+LinkSAGE's core claim is inductive learning on a heterogeneous, *evolving*
+graph where training and nearline serving see the same graph semantics
+(§4.1, §5.2).  This module is the single engine both paths sit on:
+
+  GraphEngine      — the protocol: merged-degree ``counts``, fixed-fanout
+                     ``sample_batched`` over an explicit uniform stream, and
+                     the ``gather_features`` join
+  SnapshotEngine   — static backend: CSR :class:`HeteroGraph` + the merged
+                     per-type adjacency (the DeepGNN role)
+  StreamingEngine  — evolving backend: bounded neighbor rings + NoSQL
+                     feature store (bootstrap + live event appends)
+  TileBuilder      — the one K-hop padded-tile builder shared by the
+                     trainer, ``embed_nodes`` and the nearline join
+
+Determinism contract: every sampling decision is a pure function of an
+explicit uniform stream — one ``[B, slab_width]`` slab per batch, row-major
+per query node (hop 1 first, then hop 2 over hop-1 slots, ...).  Backends
+share the merged-neighbor-list offset contract (relation insertion order,
+then within-relation order), so a SnapshotEngine of a graph and a
+StreamingEngine bootstrapped from it produce **bit-identical tiles from the
+same uniforms** — including after an event suffix, as long as no ring
+evicts (per-relation degree stays ≤ ``max_neighbors``).  The degree-
+weighted strategy is distribution- (not bit-) equivalent across backends:
+snapshot uses a precomputed global cumulative-weight array, streaming a
+ring-local one (see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.graph import NODE_TYPE_ID, NODE_TYPES, HeteroGraph
+from repro.core.stores import NeighborStore, NoSQLStore
+
+STRATEGIES = ("uniform", "degree_weighted")
+
+
+# ------------------------------------------------------------------- tiles
+
+
+class ComputeGraphBatch(NamedTuple):
+    """Padded K-hop compute-graph tile; arrays are host numpy (or a pytree of
+    device arrays with the same structure), moved to device whole.
+
+    ``feats[k]`` is ``[B, F1..Fk, d]``, ``types[k]`` is ``[B, F1..Fk]`` and
+    ``masks[k-1]`` is ``[B, F1..Fk]`` for hop k (hop 0 = the query nodes,
+    which have no mask).  The legacy 2-hop field names (``q_feat`` ...
+    ``n2_mask``) are kept as read-only views.
+    """
+    feats: tuple
+    types: tuple
+    masks: tuple
+
+    # -- legacy 2-hop views ------------------------------------------------
+    @property
+    def q_feat(self):
+        return self.feats[0]
+
+    @property
+    def q_type(self):
+        return self.types[0]
+
+    @property
+    def n1_feat(self):
+        return self.feats[1]
+
+    @property
+    def n1_type(self):
+        return self.types[1]
+
+    @property
+    def n1_mask(self):
+        return self.masks[0]
+
+    @property
+    def n2_feat(self):
+        return self.feats[2]
+
+    @property
+    def n2_type(self):
+        return self.types[2]
+
+    @property
+    def n2_mask(self):
+        return self.masks[1]
+
+    @property
+    def num_hops(self) -> int:
+        return len(self.masks)
+
+    @property
+    def batch_size(self) -> int:
+        return self.types[0].shape[0]
+
+    @property
+    def fanouts(self) -> tuple:
+        return tuple(self.types[-1].shape[1:])
+
+def bucket_pow2(n: int, minimum: int = 8, cap: int | None = None) -> int:
+    """Pad batch sizes to power-of-two buckets (min ``minimum``, optionally
+    capped at ``cap``) so jit compiles one executable per bucket and
+    steady-state batches never retrace.  Shared by the nearline encoder and
+    the trainer's ``embed_nodes``."""
+    b = max(minimum, 1 << max(n - 1, 1).bit_length())
+    return b if cap is None else min(b, cap)
+
+
+def pad_tile(tile: ComputeGraphBatch, to: int) -> ComputeGraphBatch:
+    """Zero-pad every array of the tile along the batch axis to ``to`` rows
+    (all-masked padding rows encode to garbage that is sliced off)."""
+    pad = to - tile.batch_size
+    if pad <= 0:
+        return tile
+
+    def _pad(x):
+        return np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
+
+    return ComputeGraphBatch(feats=tuple(_pad(x) for x in tile.feats),
+                             types=tuple(_pad(x) for x in tile.types),
+                             masks=tuple(_pad(x) for x in tile.masks))
+
+
+def hop_widths(fanouts) -> tuple:
+    """Uniforms consumed per query node at each hop: (F1, F1·F2, ...).
+    THE slab layout — every consumer (TileBuilder, the scalar-join oracle)
+    derives its per-hop offsets from this one running product, which is what
+    keeps their uniform streams bit-aligned."""
+    out, w = [], 1
+    for f in fanouts:
+        w *= int(f)
+        out.append(w)
+    return tuple(out)
+
+
+def slab_width(fanouts) -> int:
+    """Total uniforms consumed per query node by a K-hop build."""
+    return sum(hop_widths(fanouts))
+
+
+def neighbor_weight(degree):
+    """Degree-weighted strategy's per-neighbor weight (shared by backends):
+    bias towards well-connected neighbors, +1 so zero-degree leaves stay
+    reachable."""
+    return degree + 1.0
+
+
+# ---------------------------------------------------------------- protocol
+
+
+@runtime_checkable
+class GraphEngine(Protocol):
+    """The backend contract: ``sample_batched`` + ``gather_features`` are
+    what the TileBuilder consumes; ``counts`` (merged out-degree) backs the
+    degree-weighted strategy and the parity tests."""
+
+    feat_dim: int
+    join_reads: int
+
+    def counts(self, types: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        """Merged out-degree (across all outgoing edge types) per node."""
+        ...
+
+    def sample_batched(self, types: np.ndarray, ids: np.ndarray, fanout: int,
+                       uniforms: np.ndarray):
+        """(types [n], ids [n], uniforms [n, F]) ->
+        (dst_ty [n, F] int32, dst_id [n, F] int32, mask [n, F] float32)."""
+        ...
+
+    def gather_features(self, types: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        """Flat (types [n], ids [n]) -> [n, feat_dim] float32 feature join."""
+        ...
+
+
+# ---------------------------------------------------------------- snapshot
+
+
+class MergedAdjacency:
+    """Per-node-type merged CSR over all outgoing edge types.
+
+    Alongside (indptr, dst_id, dst_ty) we precompute, for the
+    degree-weighted strategy, each entry's *neighbor degree* and the
+    per-type cumulative weight array ``wcum`` (cumsum of degree + 1) so
+    weighted sampling is a vectorized inverse-CDF searchsorted instead of a
+    per-row ``rng.choice`` with per-neighbor degree lookups.
+    """
+
+    def __init__(self, graph: HeteroGraph):
+        self.graph = graph
+        self.merged = {}
+        for ntype in NODE_TYPES:
+            rels = graph.relations_from(ntype)
+            n = graph.num_nodes[ntype]
+            if not rels:
+                self.merged[ntype] = None
+                continue
+            per_rel = [graph.adj[r] for r in rels]
+            # concatenate all (src, dst, dst_type) triples, stable-sort by src
+            src_all = np.concatenate([np.repeat(np.arange(n), np.diff(csr.indptr))
+                                      for csr in per_rel])
+            dst_all = np.concatenate([csr.indices for csr in per_rel])
+            ty_all = np.concatenate([np.full(csr.num_edges, NODE_TYPE_ID[d], np.int8)
+                                     for (s, d), csr in zip(rels, per_rel)])
+            order = np.argsort(src_all, kind="stable")
+            counts = np.bincount(src_all, minlength=n)
+            indptr = np.zeros(n + 1, np.int64)
+            np.cumsum(counts, out=indptr[1:])
+            self.merged[ntype] = (indptr, dst_all[order].astype(np.int32),
+                                  ty_all[order])
+        # second pass: per-entry neighbor degree + cumulative weights
+        self.wcum = {}
+        for ntype in NODE_TYPES:
+            m = self.merged[ntype]
+            if m is None:
+                self.wcum[ntype] = None
+                continue
+            _, dst_id, dst_ty = m
+            nb_deg = np.zeros(dst_id.shape[0], np.float64)
+            for tid, tname in enumerate(NODE_TYPES):
+                sel = np.nonzero(dst_ty == tid)[0]
+                if sel.size:
+                    nb_deg[sel] = self.degrees(tname)[dst_id[sel]]
+            self.wcum[ntype] = np.cumsum(neighbor_weight(nb_deg))
+
+    def degrees(self, ntype: str) -> np.ndarray:
+        m = self.merged[ntype]
+        if m is None:
+            return np.zeros(self.graph.num_nodes[ntype], np.int64)
+        return np.diff(m[0])
+
+
+class SnapshotEngine:
+    """Static backend: the CSR HeteroGraph + merged adjacency, answering
+    fixed-fanout queries over a frozen graph snapshot (the training-time
+    DeepGNN role)."""
+
+    def __init__(self, graph: HeteroGraph, strategy: str = "uniform"):
+        assert strategy in STRATEGIES, strategy
+        self.graph = graph
+        self.strategy = strategy
+        self.madj = MergedAdjacency(graph)
+        self._feat = [graph.features[t] for t in NODE_TYPES]
+        self.feat_dim = graph.feat_dim
+        self.join_reads = 0
+
+    def counts(self, types: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        out = np.zeros(len(ids), np.int64)
+        for tid, tname in enumerate(NODE_TYPES):
+            sel = np.nonzero(types == tid)[0]
+            if sel.size == 0 or self.madj.merged[tname] is None:
+                continue
+            indptr = self.madj.merged[tname][0]
+            nid = ids[sel]
+            out[sel] = indptr[nid + 1] - indptr[nid]
+        return out
+
+    def degree(self, tid: int, nid: int) -> int:
+        m = self.madj.merged[NODE_TYPES[tid]]
+        if m is None:
+            return 0
+        indptr = m[0]
+        return int(indptr[nid + 1] - indptr[nid])
+
+    def sample_batched(self, types: np.ndarray, ids: np.ndarray, fanout: int,
+                       uniforms: np.ndarray):
+        n = ids.shape[0]
+        out_ty = np.zeros((n, fanout), np.int32)
+        out_id = np.zeros((n, fanout), np.int32)
+        out_mask = np.zeros((n, fanout), np.float32)
+        for tid, tname in enumerate(NODE_TYPES):
+            sel = np.nonzero(types == tid)[0]
+            if sel.size == 0:
+                continue
+            m = self.madj.merged[tname]
+            if m is None:
+                continue
+            indptr, dst_id, dst_ty = m
+            node_ids = ids[sel]
+            deg = (indptr[node_ids + 1] - indptr[node_ids]).astype(np.int64)
+            has = deg > 0
+            if not has.any():
+                continue
+            rows = sel[has]
+            base = indptr[node_ids[has]]
+            d = deg[has]
+            u = uniforms[rows]
+            if self.strategy == "degree_weighted":
+                # DeepGNN-style weighted sampling: bias neighbor choice by
+                # the *neighbor's* own degree (well-connected nodes carry
+                # more information; §4.1 lists weighted sampling support).
+                # Inverse-CDF over the precomputed cumulative weights: map
+                # each uniform into its row's [wcum_lo, wcum_hi) span and
+                # searchsorted back to a global entry index.
+                wcum = self.madj.wcum[tname]
+                lo = np.where(base > 0, wcum[base - 1], 0.0)
+                hi = wcum[base + d - 1]
+                targets = lo[:, None] + u * (hi - lo)[:, None]
+                gidx = np.searchsorted(wcum, targets, side="right")
+                offs = np.clip(gidx - base[:, None], 0, (d - 1)[:, None])
+            else:
+                # uniform with replacement: offsets in [0, deg)
+                offs = (u * d[:, None]).astype(np.int64)
+            flat = base[:, None] + offs
+            out_id[rows] = dst_id[flat]
+            out_ty[rows] = dst_ty[flat]
+            out_mask[rows] = 1.0
+        return out_ty, out_id, out_mask
+
+    def gather_features(self, types: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        flat_t = types.reshape(-1)
+        flat_i = ids.reshape(-1)
+        out = np.zeros((flat_t.shape[0], self.feat_dim), np.float32)
+        for tid in range(len(NODE_TYPES)):
+            sel = np.nonzero(flat_t == tid)[0]
+            if sel.size:
+                out[sel] = self._feat[tid][flat_i[sel]]
+        self.join_reads += flat_t.shape[0]
+        return out.reshape(*types.shape, self.feat_dim)
+
+
+# --------------------------------------------------------------- streaming
+
+
+class StreamingEngine:
+    """Evolving backend: bounded neighbor rings + NoSQL feature store.
+
+    Bootstrap from a graph snapshot, then apply live :class:`Event`-derived
+    edge/feature writes; answers the same engine queries as
+    :class:`SnapshotEngine` over whatever the stores currently hold — this
+    is the "stateful job marketplace graph" of §5.2, now also consumable by
+    the trainer (near-realtime inductive training)."""
+
+    def __init__(self, feat_dim: int, *, max_neighbors: int = 64,
+                 strategy: str = "uniform"):
+        assert strategy in STRATEGIES, strategy
+        self.feat_dim = feat_dim
+        self.strategy = strategy
+        self.neighbor_store = NeighborStore(max_neighbors)
+        self.feature_store = NoSQLStore("node-features")
+        self.join_reads = 0
+
+    # ---- writes ---------------------------------------------------------
+    def bootstrap_from_graph(self, graph: HeteroGraph) -> None:
+        items = []
+        for ntype in NODE_TYPES:
+            feats = graph.features[ntype]
+            tid = NODE_TYPE_ID[ntype]
+            items.extend(((tid, i), feats[i]) for i in range(feats.shape[0]))
+        self.feature_store.put_many(items)
+        for (s, d), csr in graph.adj.items():
+            self.neighbor_store.bulk_load(s, d, csr.indptr, csr.indices)
+
+    def add_edge(self, src_type: str, src_id: int, dst_type: str,
+                 dst_id: int) -> None:
+        self.neighbor_store.add(src_type, src_id, dst_type, dst_id)
+
+    def put_feature(self, tid: int, nid: int, feat: np.ndarray) -> None:
+        self.feature_store.put((tid, int(nid)), feat)
+
+    # ---- reads ----------------------------------------------------------
+    def get_feature(self, tid: int, nid: int) -> np.ndarray:
+        self.join_reads += 1
+        f = self.feature_store.get((int(tid), int(nid)))
+        if f is None:
+            f = np.zeros(self.feat_dim, np.float32)
+        return f
+
+    def neighbors(self, tid: int, nid: int):
+        """Merged (dst_type_id, dst_id) list (the scalar-join contract)."""
+        return self.neighbor_store.neighbors(NODE_TYPES[tid], nid)
+
+    def counts(self, types: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        out = np.zeros(len(ids), np.int64)
+        for tid, tname in enumerate(NODE_TYPES):
+            sel = np.nonzero(types == tid)[0]
+            if sel.size:
+                out[sel] = self._type_degrees(tname, ids[sel])
+        return out
+
+    def _type_degrees(self, tname: str, ids: np.ndarray) -> np.ndarray:
+        out = np.zeros(len(ids), np.int64)
+        for _, st in self.neighbor_store._relations(tname):
+            out += st.counts(ids)
+        return out
+
+    def gather_features(self, types: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        """Deduped batched feature join: flat (tid, nid) pairs -> [n, d].
+
+        One multi_get over the unique keys instead of one get per entry;
+        missing keys are zero-filled.
+        """
+        d = self.feat_dim
+        tids = types.reshape(-1)
+        nids = ids.reshape(-1)
+        if tids.size == 0:
+            return np.zeros((0, d), np.float32)
+        packed = tids.astype(np.int64) << 40 | nids.astype(np.int64)
+        uniq, inv = np.unique(packed, return_inverse=True)
+        keys = [(int(p >> 40), int(p & ((1 << 40) - 1))) for p in uniq]
+        vals = self.feature_store.multi_get(keys)
+        self.join_reads += len(keys)
+        mat = np.zeros((len(keys), d), np.float32)
+        for i, v in enumerate(vals):
+            if v is not None:
+                mat[i] = v
+        return mat[inv].reshape(*types.shape, d)
+
+    def sample_batched(self, types: np.ndarray, ids: np.ndarray, fanout: int,
+                       uniforms: np.ndarray):
+        if self.strategy == "degree_weighted":
+            return self._sample_weighted(types, ids, fanout, uniforms)
+        return self.neighbor_store.sample_batched(types, ids, fanout, uniforms)
+
+    def _sample_weighted(self, types: np.ndarray, ids: np.ndarray, fanout: int,
+                         uniforms: np.ndarray):
+        """Ring-local degree-weighted inverse-CDF (the streaming counterpart
+        of the snapshot ``wcum`` path).
+
+        Candidates are the [m, R, K] ring rows (invalid slots weight 0);
+        weights are ``neighbor_weight(deg)`` with ``deg`` read live from the
+        rings, cumsum'd per row.  Zero-weight slots have zero-width spans,
+        so the pick distribution (and the compact merged-list oracle) is
+        unaffected by the padding slots.
+        """
+        ns = self.neighbor_store
+        n = len(ids)
+        out_ty = np.zeros((n, fanout), np.int32)
+        out_id = np.zeros((n, fanout), np.int32)
+        out_mask = np.zeros((n, fanout), np.float32)
+        for tid, tname in enumerate(NODE_TYPES):
+            rows = np.nonzero(types == tid)[0]
+            if rows.size == 0:
+                continue
+            rels = ns._relations(tname)
+            if not rels:
+                continue
+            nid = ids[rows]
+            cnts = np.stack([st.counts(nid) for _, st in rels], axis=1)  # [m, R]
+            has = cnts.sum(axis=1) > 0
+            if not has.any():
+                continue
+            rows, nid, cnts = rows[has], nid[has], cnts[has]
+            m, R = rows.size, len(rels)
+            # work at the batch's widest resident row, not the full ring
+            # width — trailing empty slots are zero-weight anyway, so
+            # dropping them cannot change any pick
+            K = int(cnts.max())
+            cand_id = np.zeros((m, R, K), np.int32)
+            cand_ty = np.zeros((m, R, K), np.int32)
+            deg = np.zeros((m, R, K), np.float64)
+            for r, (dtid, st) in enumerate(rels):
+                cand_id[:, r] = st.rows(nid)[:, :K]
+                cand_ty[:, r] = dtid
+                deg[:, r] = self._type_degrees(
+                    NODE_TYPES[dtid], cand_id[:, r].reshape(-1)).reshape(m, K)
+            valid = np.arange(K)[None, None, :] < cnts[:, :, None]
+            w = np.where(valid, neighbor_weight(deg), 0.0).reshape(m, R * K)
+            cum = np.cumsum(w, axis=1)
+            targets = uniforms[rows] * cum[:, -1:]                 # [m, F]
+            idx = (targets[:, :, None] >= cum[:, None, :]).sum(axis=-1)
+            idx = np.clip(idx, 0, R * K - 1)
+            # float-boundary guard: u·total can round up onto (or past) a
+            # zero-weight padding slot — walk back to the last valid entry
+            bad = np.take_along_axis(w, idx, axis=1) <= 0
+            if bad.any():
+                last_valid = (R * K - 1) - np.argmax(w[:, ::-1] > 0, axis=1)
+                idx = np.where(bad, last_valid[:, None], idx)
+            out_id[rows] = np.take_along_axis(cand_id.reshape(m, R * K), idx, axis=1)
+            out_ty[rows] = np.take_along_axis(cand_ty.reshape(m, R * K), idx, axis=1)
+            out_mask[rows] = 1.0
+        return out_ty, out_id, out_mask
+
+
+# ------------------------------------------------------------ tile builder
+
+
+@dataclass
+class TileBuilder:
+    """The one K-hop padded-tile builder (trainer, embed_nodes AND the
+    nearline sequential join all go through here).
+
+    ``fanouts`` is an arbitrary-length tuple; each build consumes one
+    ``[B, slab_width(fanouts)]`` uniform slab (row-major per query node:
+    hop 1, then hop 2 over hop-1 slots, ...), either passed explicitly or
+    drawn from ``rng`` — which is what makes snapshot and streaming builds
+    bit-identical on the same stream, and prefetched training batches a
+    pure function of (seed, step).
+    """
+
+    engine: GraphEngine
+    fanouts: tuple
+
+    def __post_init__(self):
+        self.fanouts = tuple(int(f) for f in self.fanouts)
+        assert self.fanouts, "need at least one hop"
+
+    @property
+    def slab_width(self) -> int:
+        return slab_width(self.fanouts)
+
+    def build(self, types, ids, *, rng: np.random.Generator | None = None,
+              uniforms: np.ndarray | None = None) -> ComputeGraphBatch:
+        """Build the padded K-hop tile for a batch of (type, id) queries.
+
+        ``types`` is a node-type name (uniform batch) or an int array.
+        Children of masked-out parents are never sampled (their type/id/mask
+        stay zero), and features are joined once per hop over the valid
+        entries only — the deduped multi_get path on streaming backends.
+        """
+        ids = np.asarray(ids)
+        b = ids.shape[0]
+        if isinstance(types, str):
+            types = np.full(b, NODE_TYPE_ID[types], np.int64)
+        types = np.asarray(types).astype(np.int64)
+        if uniforms is None:
+            assert rng is not None, "build() needs exactly one of rng/uniforms"
+            uniforms = rng.random((b, self.slab_width))
+        d = self.engine.feat_dim
+
+        feats = [self.engine.gather_features(types, ids.astype(np.int64))]
+        typs = [types.astype(np.int32)]
+        masks = []
+        par_ty = types.reshape(-1)
+        par_id = ids.astype(np.int64).reshape(-1)
+        par_mask = np.ones(b, np.float32)
+        off = 0
+        for k, (f, width) in enumerate(zip(self.fanouts,
+                                           hop_widths(self.fanouts))):
+            u_k = uniforms[:, off:off + width].reshape(-1, f)   # [parents, f]
+            off += width
+            rows = par_ty.shape[0]
+            ty = np.zeros((rows, f), np.int32)
+            id_ = np.zeros((rows, f), np.int32)
+            mask = np.zeros((rows, f), np.float32)
+            valid = par_mask > 0
+            if valid.any():
+                t, i, mk = self.engine.sample_batched(
+                    par_ty[valid], par_id[valid], f, u_k[valid])
+                ty[valid], id_[valid], mask[valid] = t, i, mk
+            fl = mask.reshape(-1) > 0
+            fm = np.zeros((rows * f, d), np.float32)
+            if fl.any():
+                fm[fl] = self.engine.gather_features(
+                    ty.reshape(-1)[fl].astype(np.int64),
+                    id_.reshape(-1)[fl].astype(np.int64))
+            shape = (b,) + self.fanouts[:k + 1]
+            feats.append(fm.reshape(*shape, d))
+            typs.append(ty.reshape(shape))
+            masks.append(mask.reshape(shape))
+            par_ty = ty.reshape(-1).astype(np.int64)
+            par_id = id_.reshape(-1).astype(np.int64)
+            par_mask = mask.reshape(-1)
+        return ComputeGraphBatch(tuple(feats), tuple(typs), tuple(masks))

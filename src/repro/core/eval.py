@@ -10,32 +10,40 @@ import numpy as np
 
 
 def recall_at_k(scores: np.ndarray, positives: list, k: int = 10) -> float:
-    """scores [num_members, num_jobs]; positives[i] = set of relevant job ids."""
-    hits, total = 0, 0
-    topk = np.argpartition(-scores, min(k, scores.shape[1] - 1), axis=1)[:, :k]
-    for i, pos in enumerate(positives):
-        if not pos:
-            continue
-        hits += len(set(topk[i].tolist()) & pos)
-        total += min(len(pos), k)
+    """scores [num_members, num_jobs]; positives[i] = set of relevant job ids.
+
+    Fully vectorized: one dense [n, num_jobs] membership matrix gathered at
+    the top-k indices replaces the per-member set-intersection loop.
+    Out-of-range positive ids count toward the denominator but can never be
+    retrieved (identical to the old set-based semantics).
+    """
+    n, num_jobs = scores.shape
+    topk = np.argpartition(-scores, min(k, num_jobs - 1), axis=1)[:, :k]
+    lens = np.fromiter((len(p) for p in positives), np.int64, n)
+    if not (lens > 0).any():
+        return 0.0
+    rows = np.repeat(np.arange(n), lens)
+    cols = np.fromiter((j for p in positives for j in p), np.int64, lens.sum())
+    ok = (cols >= 0) & (cols < num_jobs)
+    pos_mat = np.zeros((n, num_jobs), bool)
+    pos_mat[rows[ok], cols[ok]] = True
+    hits = int(pos_mat[np.arange(n)[:, None], topk].sum())
+    total = int(np.minimum(lens, k).sum())
     return hits / max(total, 1)
 
 
 def auc(labels: np.ndarray, scores: np.ndarray) -> float:
-    """Rank-based AUC (no sklearn dependency)."""
-    order = np.argsort(scores, kind="mergesort")
-    ranks = np.empty_like(order, dtype=np.float64)
-    ranks[order] = np.arange(1, len(scores) + 1)
-    # average ties
-    sorted_scores = scores[order]
-    i = 0
-    while i < len(sorted_scores):
-        j = i
-        while j + 1 < len(sorted_scores) and sorted_scores[j + 1] == sorted_scores[i]:
-            j += 1
-        if j > i:
-            ranks[order[i:j + 1]] = ranks[order[i:j + 1]].mean()
-        i = j + 1
+    """Rank-based AUC (no sklearn dependency).
+
+    Tied scores share their average rank (the Mann-Whitney convention: a
+    pos/neg tie counts 1/2), computed vectorized from the unique-value run
+    boundaries — rank of a run ending at position e with count c averages
+    to e - (c-1)/2.
+    """
+    uniq, inv, counts = np.unique(scores, return_inverse=True,
+                                  return_counts=True)
+    ends = np.cumsum(counts)
+    ranks = (ends - (counts - 1) / 2.0)[inv]
     pos = labels > 0
     n_pos, n_neg = int(pos.sum()), int((~pos).sum())
     if n_pos == 0 or n_neg == 0:

@@ -10,10 +10,10 @@ optimal):
     engagement edges  member→job  (save/apply/click)
     recruiter edges   job→member  (reach-outs)
 
-Storage is CSR per edge type (host-side numpy) — this plays the role of
-DeepGNN's graph engine: it owns topology + features and answers fixed-fanout
-sampling queries.  Device-side code only ever sees the padded tiles produced
-by :mod:`repro.core.sampler`.
+Storage is CSR per edge type (host-side numpy).  Fixed-fanout sampling
+queries are answered by :class:`repro.core.engine.SnapshotEngine` wrapping
+this graph (the DeepGNN role); device-side code only ever sees the padded
+K-hop tiles produced by :class:`repro.core.engine.TileBuilder`.
 """
 from __future__ import annotations
 

@@ -31,8 +31,9 @@ import numpy as np
 from repro.configs.linksage import GNNConfig
 from repro.core import decoder as dec
 from repro.core import encoder as enc
-from repro.core.sampler import (BatchPrefetcher, ComputeGraphBatch,
-                                NeighborSampler, SamplerConfig)
+from repro.core.engine import (ComputeGraphBatch, SnapshotEngine, TileBuilder,
+                               bucket_pow2)
+from repro.core.sampler import BatchPrefetcher
 from repro.optim import AdamWState, adamw_init, adamw_update, clip_by_global_norm
 
 
@@ -146,7 +147,7 @@ def make_train_step(cfg: GNNConfig, *, lr: float = 3e-3, max_norm: float = 1.0,
         lambda: (lambda p: TrainState(p, adamw_init(p)))(
             linksage_init(jax.random.PRNGKey(0), cfg)))
     state_sp = par.gnn_state_pspecs(state_tmpl)
-    tile_sp = par.gnn_tile_pspecs()
+    tile_sp = par.gnn_tile_pspecs(len(cfg.fanouts))
     smapped = shard_map(step, mesh=mesh,
                         in_specs=(state_sp, tile_sp, tile_sp, P("data"), P("data")),
                         out_specs=(state_sp, P()),
@@ -156,11 +157,15 @@ def make_train_step(cfg: GNNConfig, *, lr: float = 3e-3, max_norm: float = 1.0,
 
 @dataclass
 class LinkSAGETrainer:
-    """End-to-end trainer over a HeteroGraph (the paper's GNN training job).
+    """End-to-end trainer over a GraphEngine (the paper's GNN training job).
 
     ``prefetch`` > 0 enables the background sampler pipeline with that queue
     depth; per-step RNG streams keep it bit-identical to ``prefetch=0``.
     ``mesh`` (a ``("data",)`` mesh) enables the data-parallel step.
+    ``engine`` selects the graph backend: ``None`` builds a SnapshotEngine
+    over ``graph`` (static training); pass a bootstrapped
+    :class:`~repro.core.engine.StreamingEngine` to train against the
+    evolving event-fed store — the same substrate serving reads from.
     """
     cfg: GNNConfig
     graph: "HeteroGraph"
@@ -169,14 +174,16 @@ class LinkSAGETrainer:
     fused_encode: bool = True
     prefetch: int = 0
     mesh: object = None
+    engine: object = None
 
     def __post_init__(self):
         from dataclasses import replace
         from repro.core.graph import HeteroGraph  # noqa: F401 (type only)
         if self.cfg.feat_dim != self.graph.feat_dim:
             self.cfg = replace(self.cfg, feat_dim=self.graph.feat_dim)
-        self.sampler = NeighborSampler(self.graph, SamplerConfig(fanouts=self.cfg.fanouts,
-                                                                 seed=self.seed))
+        if self.engine is None:
+            self.engine = SnapshotEngine(self.graph)
+        self.builder = TileBuilder(self.engine, self.cfg.fanouts)
         key = jax.random.PRNGKey(self.seed)
         params = linksage_init(key, self.cfg)
         self.state = TrainState(params, adamw_init(params))
@@ -201,7 +208,8 @@ class LinkSAGETrainer:
         idx = rng.integers(0, len(self._pos_src), batch_size)
         m_ids = self._pos_src[idx].astype(np.int32)
         j_ids = self._pos_dst[idx].astype(np.int32)
-        m_tile, j_tile = self.sampler.sample_pair_batch(m_ids, j_ids, rng=rng)
+        m_tile = self.builder.build("member", m_ids, rng=rng)
+        j_tile = self.builder.build("job", j_ids, rng=rng)
         return m_tile, j_tile, m_ids, j_ids
 
     @staticmethod
@@ -295,19 +303,18 @@ class LinkSAGETrainer:
         never retrace (asserted via ``encoder_traces``).  Neighborhoods are
         sampled from per-chunk RNG streams, so the same call yields the
         same embeddings until the graph changes."""
-        from repro.core.nearline import bucket_pow2
         out = []
         for i in range(0, len(ids), batch):
             chunk = ids[i:i + batch]
-            bucket = min(bucket_pow2(len(chunk)), batch)
+            bucket = bucket_pow2(len(chunk), cap=batch)
             pad = bucket - len(chunk)
             padded = np.concatenate([chunk, np.zeros(pad, chunk.dtype)]) if pad else chunk
             rng = np.random.default_rng((self.seed, self._EMBED_STREAM, i))
-            tile = self.sampler.sample_batch(node_type, padded, rng=rng)
+            tile = self.builder.build(node_type, padded, rng=rng)
             emb = np.asarray(self._embed(self.state.params, _to_jnp(tile)))
             out.append(emb[:len(chunk)])
         return np.concatenate(out, axis=0)
 
 
 def _to_jnp(tile: ComputeGraphBatch) -> ComputeGraphBatch:
-    return ComputeGraphBatch(*(jnp.asarray(x) for x in tile))
+    return jax.tree.map(jnp.asarray, tile)

@@ -3,10 +3,12 @@
 Faithfully reproduces the production dataflow without the JVM/Kafka stack:
 
   Kafka topics            → :class:`Topic` (append log + consumer offsets)
-  NoSQL feature stores    → :class:`NoSQLStore` (keyed store with I/O counters)
-  neighbor stores/type    → :class:`NeighborStore` (bounded per-node rings)
-  sequential join         → :meth:`NearlineInference._sequential_join`
-                            (batched multi_get joins; see DESIGN.md §5)
+  NoSQL feature stores    → :class:`repro.core.stores.NoSQLStore`
+  neighbor stores/type    → :class:`repro.core.stores.NeighborStore` rings
+  graph substrate         → :class:`repro.core.engine.StreamingEngine`
+                            (the evolving backend of the shared GraphEngine)
+  sequential join         → the shared K-hop :class:`TileBuilder` — the SAME
+                            builder the trainer samples through (DESIGN.md §8)
   nearline GNN inference  → shape-bucketed jitted encoder on the joined tiles
   online feature store    → :class:`EmbeddingStore` (embedding + timestamp)
 
@@ -14,10 +16,12 @@ Triggers (paper): (1) a recruiter creates a job posting; (2) new neighbors
 (members who applied/saved/clicked) arrive on an existing job.  Member
 embeddings refresh symmetrically on engagement/profile events.
 
-The "stateful job marketplace graph" emerges from the stores: during
-inference only neighbors + their input features are needed — not a full
-graph engine with temporal processing/sampling (§5.2) — which is exactly
-what the sequential join provides.
+The "stateful job marketplace graph" IS the StreamingEngine: bounded
+neighbor rings + feature store, bootstrapped from a snapshot and advanced by
+live events.  Because the trainer can consume the same engine, training and
+serving share one graph semantics — the paper's near-realtime inductive
+story.  The per-key scalar join survives only as a benchmark baseline (and
+as the pre-refactor bit-exactness oracle).
 """
 from __future__ import annotations
 
@@ -26,12 +30,14 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.linksage import GNNConfig
+from repro.core.engine import (ComputeGraphBatch, StreamingEngine, TileBuilder,
+                               bucket_pow2, hop_widths, pad_tile, slab_width)
 from repro.core.graph import NODE_TYPE_ID, NODE_TYPES
-from repro.core.sampler import ComputeGraphBatch
+from repro.core.stores import (EmbeddingStore, NeighborStore,  # noqa: F401
+                               NoSQLStore, RingBuffer)
 
 
 # --------------------------------------------------------------- messaging
@@ -69,231 +75,6 @@ class Topic:
         return len(self.log) - self.offsets[consumer]
 
 
-# ------------------------------------------------------------------ stores
-
-
-class NoSQLStore:
-    """In-memory NoSQL store with read/write accounting (I/O bottleneck
-    analysis, §5.2 challenge (c))."""
-
-    def __init__(self, name: str):
-        self.name = name
-        self._d: dict = {}
-        self.reads = 0
-        self.writes = 0
-
-    def put(self, key, value) -> None:
-        self._d[key] = value
-        self.writes += 1
-
-    def get(self, key, default=None):
-        self.reads += 1
-        return self._d.get(key, default)
-
-    def put_many(self, items) -> None:
-        """Bulk write (one RPC in the real store): items is (key, value)s."""
-        items = list(items)
-        self._d.update(items)
-        self.writes += len(items)
-
-    def multi_get(self, keys):
-        self.reads += len(keys)
-        return [self._d.get(k) for k in keys]
-
-    def __contains__(self, key):
-        return key in self._d
-
-    def __len__(self):
-        return len(self._d)
-
-
-class RingBuffer:
-    """Array-backed bounded neighbor lists for one (src_type, dst_type) edge
-    type: a [capacity, K] int32 ring per source node with a write cursor.
-
-    Replaces the old list-copy-append NoSQLStore values: ``add`` is an O(1)
-    in-place write, bulk bootstrap is a vectorized fill, and batched
-    sampling reads the backing arrays directly (no per-key dict gets).
-    Neighbor *order* inside a row is not meaningful once the ring wraps —
-    sampling is uniform over the resident set, so only membership matters.
-    """
-
-    def __init__(self, name: str, max_neighbors: int, capacity: int = 1024):
-        self.name = name
-        self.K = max_neighbors
-        self.buf = np.zeros((capacity, max_neighbors), np.int32)
-        self.count = np.zeros(capacity, np.int32)
-        self.head = np.zeros(capacity, np.int32)
-        self.reads = 0
-        self.writes = 0
-
-    @property
-    def capacity(self) -> int:
-        return self.buf.shape[0]
-
-    def _ensure(self, n: int) -> None:
-        cap = self.capacity
-        if n <= cap:
-            return
-        new_cap = max(cap * 2, n)
-        self.buf = np.concatenate(
-            [self.buf, np.zeros((new_cap - cap, self.K), np.int32)])
-        self.count = np.concatenate([self.count, np.zeros(new_cap - cap, np.int32)])
-        self.head = np.concatenate([self.head, np.zeros(new_cap - cap, np.int32)])
-
-    def add(self, src_id: int, dst_id: int) -> None:
-        self._ensure(src_id + 1)
-        self.buf[src_id, self.head[src_id]] = dst_id
-        self.head[src_id] = (self.head[src_id] + 1) % self.K
-        self.count[src_id] = min(self.count[src_id] + 1, self.K)
-        self.writes += 1
-
-    def bulk_load(self, indptr: np.ndarray, indices: np.ndarray) -> None:
-        """Vectorized bootstrap from a CSR: keep the last K neighbors/node."""
-        n = len(indptr) - 1
-        self._ensure(n)
-        deg = np.diff(indptr)
-        cnt = np.minimum(deg, self.K).astype(np.int64)
-        total = int(cnt.sum())
-        rows = np.repeat(np.arange(n), cnt)
-        offs = np.zeros(n + 1, np.int64)
-        np.cumsum(cnt, out=offs[1:])
-        pos = np.arange(total) - np.repeat(offs[:-1], cnt)
-        src_idx = np.repeat(indptr[1:] - cnt, cnt) + pos
-        self.buf[rows, pos] = indices[src_idx]
-        self.count[:n] = cnt
-        self.head[:n] = cnt % self.K
-        self.writes += total
-
-    def counts(self, ids: np.ndarray) -> np.ndarray:
-        """Vectorized degree lookup; ids beyond capacity have degree 0."""
-        self.reads += len(ids)
-        out = np.zeros(len(ids), np.int64)
-        ok = ids < self.capacity
-        out[ok] = self.count[ids[ok]]
-        return out
-
-    def row(self, src_id: int) -> np.ndarray:
-        self.reads += 1
-        if src_id >= self.capacity:
-            return self.buf[:0, 0]
-        return self.buf[src_id, :self.count[src_id]]
-
-
-class NeighborStore:
-    """Per-edge-type bounded neighbor rings keyed by (node_type, id).
-
-    One store monitors job neighbors per node type (paper: "multiple feature
-    stores that monitor job neighbors per node type").
-    """
-
-    def __init__(self, max_neighbors: int = 64):
-        self.stores: dict = {}
-        self.max_neighbors = max_neighbors
-
-    def _store(self, src_type: str, dst_type: str) -> RingBuffer:
-        key = (src_type, dst_type)
-        if key not in self.stores:
-            self.stores[key] = RingBuffer(f"neigh:{src_type}->{dst_type}",
-                                          self.max_neighbors)
-        return self.stores[key]
-
-    def add(self, src_type: str, src_id: int, dst_type: str, dst_id: int) -> None:
-        self._store(src_type, dst_type).add(src_id, dst_id)
-
-    def bulk_load(self, src_type: str, dst_type: str, indptr, indices) -> None:
-        self._store(src_type, dst_type).bulk_load(indptr, indices)
-
-    def _relations(self, node_type: str):
-        return [(NODE_TYPE_ID[d], st) for (s, d), st in self.stores.items()
-                if s == node_type]
-
-    def neighbors(self, node_type: str, node_id: int):
-        """Merged (dst_type_id, dst_id) neighbor list across edge types.
-
-        Entry order — relation insertion order, then ring column order — is
-        the contract shared with :meth:`sample_batched`: offset ``j`` into
-        this list and offset ``j`` of the batched path address the same
-        neighbor, which is what makes the scalar and batched joins
-        bit-identical on the same uniform stream.
-        """
-        out = []
-        for tid, st in self._relations(node_type):
-            out.extend((tid, int(i)) for i in st.row(node_id))
-        return out
-
-    def sample_batched(self, types: np.ndarray, ids: np.ndarray, fanout: int,
-                       uniforms: np.ndarray):
-        """Vectorized fixed-fanout sampling for a batch of (type, id) nodes.
-
-        types [n] int, ids [n] int, uniforms [n, fanout] in [0, 1) ->
-        (dst_ty [n, F] int32, dst_id [n, F] int32, mask [n, F] float32).
-        Draw j = floor(u · deg) indexes the merged neighbor list (see
-        :meth:`neighbors`) without ever materializing it.
-        """
-        n = len(ids)
-        out_ty = np.zeros((n, fanout), np.int32)
-        out_id = np.zeros((n, fanout), np.int32)
-        out_mask = np.zeros((n, fanout), np.float32)
-        for tid, tname in enumerate(NODE_TYPES):
-            rows = np.nonzero(types == tid)[0]
-            if rows.size == 0:
-                continue
-            rels = self._relations(tname)
-            if not rels:
-                continue
-            nid = ids[rows]
-            cnts = np.stack([st.counts(nid) for _, st in rels], axis=1)  # [m, R]
-            total = cnts.sum(axis=1)
-            has = total > 0
-            if not has.any():
-                continue
-            rows, nid, cnts, total = rows[has], nid[has], cnts[has], total[has]
-            j = (uniforms[rows] * total[:, None]).astype(np.int64)       # [m, F]
-            cum = np.cumsum(cnts, axis=1)
-            rel_idx = (j[:, :, None] >= cum[:, None, :]).sum(axis=-1)    # [m, F]
-            start = cum - cnts
-            slot = j - np.take_along_axis(start, rel_idx, axis=1)        # [m, F]
-            for r, (dtid, st) in enumerate(rels):
-                rr, ff = np.nonzero(rel_idx == r)
-                if rr.size == 0:
-                    continue
-                out_id[rows[rr], ff] = st.buf[nid[rr], slot[rr, ff]]
-                out_ty[rows[rr], ff] = dtid
-            out_mask[rows] = 1.0
-        return out_ty, out_id, out_mask
-
-
-class EmbeddingStore(NoSQLStore):
-    """Online feature store: (node_type, id) -> (embedding, refresh_time)."""
-
-    def put_embedding(self, node_type: str, node_id: int, emb: np.ndarray,
-                      t: float) -> None:
-        self.put((node_type, int(node_id)), (emb, t))
-
-    def get_embedding(self, node_type: str, node_id: int):
-        return self.get((node_type, int(node_id)))
-
-
-def bucket_pow2(n: int, minimum: int = 8) -> int:
-    """Pad batch sizes to power-of-two buckets (min ``minimum``) so jit
-    compiles one executable per bucket and steady-state batches never
-    retrace.  Shared by the nearline encoder and the trainer's
-    ``embed_nodes``."""
-    return max(minimum, 1 << max(n - 1, 1).bit_length())
-
-
-def _pad_tile(tile: ComputeGraphBatch, to: int) -> ComputeGraphBatch:
-    """Zero-pad every array of the tile along the batch axis to ``to`` rows
-    (all-masked padding rows encode to garbage that is sliced off)."""
-    b = tile.q_feat.shape[0]
-    pad = to - b
-    if pad <= 0:
-        return tile
-    return ComputeGraphBatch(*(
-        np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)]) for x in tile))
-
-
 # -------------------------------------------------------------- inference
 
 
@@ -324,26 +105,39 @@ class NearlineMetrics:
 
 
 class NearlineInference:
-    """The nearline pipeline: poll → update stores → sequential join → encode
-    → push embeddings (Figure 4)."""
+    """The nearline pipeline: poll → update the streaming engine → shared
+    K-hop tile build → encode → push embeddings (Figure 4)."""
 
     def __init__(self, cfg: GNNConfig, encoder_params, *, fanouts=None,
                  micro_batch: int = 64, max_neighbors: int = 64, seed: int = 0,
-                 join_impl: str = "batched", jit_encoder: bool = True):
+                 join_impl: str = "batched", jit_encoder: bool = True,
+                 strategy: str = "uniform"):
         assert join_impl in ("batched", "scalar"), join_impl
+        # the scalar arm is the uniform-sampling oracle; it has no weighted walk
+        assert join_impl == "batched" or strategy == "uniform", (join_impl, strategy)
         self.cfg = cfg
         self.params = encoder_params
-        self.fanouts = fanouts or cfg.fanouts
+        self.fanouts = tuple(fanouts or cfg.fanouts)
         self.micro_batch = micro_batch
         self.join_impl = join_impl
         self.jit_encoder = jit_encoder
         self.topic = Topic("job-marketplace-events")
-        self.neighbor_store = NeighborStore(max_neighbors)
-        self.feature_store = NoSQLStore("node-features")      # input features per node
+        self.engine = StreamingEngine(cfg.feat_dim, max_neighbors=max_neighbors,
+                                      strategy=strategy)
+        self.builder = TileBuilder(self.engine, self.fanouts)
         self.embedding_store = EmbeddingStore("gnn-embeddings")
         self.metrics = NearlineMetrics()
         self.rng = np.random.default_rng(seed)
         self._encode = self._make_encode()  # shape-bucketed jitted encoder
+
+    # engine-store views (the stores belong to the StreamingEngine now)
+    @property
+    def neighbor_store(self) -> NeighborStore:
+        return self.engine.neighbor_store
+
+    @property
+    def feature_store(self) -> NoSQLStore:
+        return self.engine.feature_store
 
     # ---- bucketed jitted encoder ----------------------------------------
     def _make_encode(self):
@@ -363,156 +157,92 @@ class NearlineInference:
 
     # ---- store bootstrap (initial graph snapshot load) -------------------
     def bootstrap_from_graph(self, graph) -> None:
-        items = []
-        for ntype in NODE_TYPES:
-            feats = graph.features[ntype]
-            tid = NODE_TYPE_ID[ntype]
-            items.extend(((tid, i), feats[i]) for i in range(feats.shape[0]))
-        self.feature_store.put_many(items)
-        for (s, d), csr in graph.adj.items():
-            self.neighbor_store.bulk_load(s, d, csr.indptr, csr.indices)
+        self.engine.bootstrap_from_graph(graph)
 
     # ---- event application ----------------------------------------------
     def _apply_event(self, ev: Event):
         touched = []
         p = ev.payload
         if ev.kind == "job_created":
-            self.feature_store.put((NODE_TYPE_ID["job"], p["job_id"]), p["features"])
+            self.engine.put_feature(NODE_TYPE_ID["job"], p["job_id"], p["features"])
             for attr in ("title", "company", "position", "skill"):
                 if attr in p:
-                    self.neighbor_store.add("job", p["job_id"], attr, p[attr])
-                    self.neighbor_store.add(attr, p[attr], "job", p["job_id"])
+                    self.engine.add_edge("job", p["job_id"], attr, p[attr])
+                    self.engine.add_edge(attr, p[attr], "job", p["job_id"])
             touched.append(("job", p["job_id"], ev.time))
         elif ev.kind == "engagement":                  # member saved/applied/clicked
-            self.neighbor_store.add("member", p["member_id"], "job", p["job_id"])
+            self.engine.add_edge("member", p["member_id"], "job", p["job_id"])
             touched.append(("job", p["job_id"], ev.time))
             touched.append(("member", p["member_id"], ev.time))
         elif ev.kind == "recruiter_interaction":       # recruiter reached out
-            self.neighbor_store.add("job", p["job_id"], "member", p["member_id"])
+            self.engine.add_edge("job", p["job_id"], "member", p["member_id"])
             touched.append(("job", p["job_id"], ev.time))
         elif ev.kind == "member_update":
-            self.feature_store.put((NODE_TYPE_ID["member"], p["member_id"]), p["features"])
+            self.engine.put_feature(NODE_TYPE_ID["member"], p["member_id"],
+                                    p["features"])
             touched.append(("member", p["member_id"], ev.time))
         return touched
 
     # ---- sequential join: node -> neighbors -> neighbor features ---------
     #
-    # Both implementations consume the SAME uniform stream in the same order
-    # (one rng.random(f1 + f1*f2) slab per query node, row-major) and share
-    # the merged-neighbor-list offset contract of NeighborStore.neighbors /
-    # sample_batched, so they produce bit-identical tiles from the same seed.
-    # ``batched`` is the production path (~6 vectorized gathers + deduped
-    # multi_gets per micro-batch); ``scalar`` is the pre-optimization
-    # O(B·F1·F2) per-key baseline kept for benchmarking and as a correctness
-    # oracle.
-
-    def _fetch_feats(self, tid: int, nid: int) -> np.ndarray:
-        f = self.feature_store.get((tid, nid))
-        self.metrics.join_reads += 1
-        if f is None:
-            f = np.zeros(self.cfg.feat_dim, np.float32)
-        return f
-
-    def _multi_fetch_feats(self, tids: np.ndarray, nids: np.ndarray) -> np.ndarray:
-        """Deduped batched feature lookup: flat (tid, nid) pairs -> [n, d].
-
-        One multi_get over the unique keys per hop instead of one get per
-        (node, neighbor, neighbor-of-neighbor) feature; missing keys are
-        zero-filled.
-        """
-        d = self.cfg.feat_dim
-        if tids.size == 0:
-            return np.zeros((0, d), np.float32)
-        packed = tids.astype(np.int64) << 40 | nids.astype(np.int64)
-        uniq, inv = np.unique(packed, return_inverse=True)
-        keys = [(int(p >> 40), int(p & ((1 << 40) - 1))) for p in uniq]
-        vals = self.feature_store.multi_get(keys)
-        self.metrics.join_reads += len(keys)
-        mat = np.zeros((len(keys), d), np.float32)
-        for i, v in enumerate(vals):
-            if v is not None:
-                mat[i] = v
-        return mat[inv]
+    # The production path is the shared TileBuilder over the StreamingEngine
+    # (~one vectorized sample + one deduped multi_get per hop).  The scalar
+    # per-key baseline consumes the SAME uniform stream in the same order
+    # (one rng.random(slab_width) slab per query node, row-major over hops)
+    # and shares the merged-neighbor-list offset contract, so it produces
+    # bit-identical tiles from the same seed — the pre-optimization
+    # O(B·F1···FK) oracle kept for benchmarking.
 
     def _sequential_join(self, nodes) -> ComputeGraphBatch:
+        reads0 = self.engine.join_reads
         if self.join_impl == "scalar":
-            return self._sequential_join_scalar(nodes)
-        return self._sequential_join_batched(nodes)
-
-    def _sequential_join_batched(self, nodes) -> ComputeGraphBatch:
-        f1, f2 = self.fanouts
-        b = len(nodes)
-        d = self.cfg.feat_dim
-        q_type = np.array([NODE_TYPE_ID[t] for t, _ in nodes], np.int64)
-        q_id = np.array([i for _, i in nodes], np.int64)
-        u = self.rng.random((b, f1 + f1 * f2))
-        u1, u2 = u[:, :f1], u[:, f1:].reshape(b, f1, f2)
-
-        # hop 0+1: one batched sample over all query nodes
-        n1_type, n1_id, n1_mask = self.neighbor_store.sample_batched(
-            q_type, q_id, f1, u1)
-        q_feat = self._multi_fetch_feats(q_type, q_id)
-
-        m1 = n1_mask.reshape(-1) > 0
-        n1_feat = np.zeros((b * f1, d), np.float32)
-        n1_feat[m1] = self._multi_fetch_feats(n1_type.reshape(-1)[m1],
-                                              n1_id.reshape(-1)[m1])
-
-        # hop 2: batched sample over all valid hop-1 neighbors
-        n2_type = np.zeros((b * f1, f2), np.int32)
-        n2_id = np.zeros((b * f1, f2), np.int32)
-        n2_mask = np.zeros((b * f1, f2), np.float32)
-        if m1.any():
-            t2, i2, mk2 = self.neighbor_store.sample_batched(
-                n1_type.reshape(-1)[m1].astype(np.int64),
-                n1_id.reshape(-1)[m1].astype(np.int64),
-                f2, u2.reshape(b * f1, f2)[m1])
-            n2_type[m1], n2_id[m1], n2_mask[m1] = t2, i2, mk2
-        m2 = n2_mask.reshape(-1) > 0
-        n2_feat = np.zeros((b * f1 * f2, d), np.float32)
-        n2_feat[m2] = self._multi_fetch_feats(n2_type.reshape(-1)[m2],
-                                              n2_id.reshape(-1)[m2])
-
-        return ComputeGraphBatch(
-            q_feat, q_type.astype(np.int32),
-            n1_feat.reshape(b, f1, d), n1_type, n1_mask,
-            n2_feat.reshape(b, f1, f2, d), n2_type.reshape(b, f1, f2),
-            n2_mask.reshape(b, f1, f2))
+            tile = self._sequential_join_scalar(nodes)
+        else:
+            q_type = np.array([NODE_TYPE_ID[t] for t, _ in nodes], np.int64)
+            q_id = np.array([i for _, i in nodes], np.int64)
+            tile = self.builder.build(q_type, q_id, rng=self.rng)
+        self.metrics.join_reads += self.engine.join_reads - reads0
+        return tile
 
     def _sequential_join_scalar(self, nodes) -> ComputeGraphBatch:
-        f1, f2 = self.fanouts
+        fan = self.fanouts
         b = len(nodes)
         d = self.cfg.feat_dim
-        q_feat = np.zeros((b, d), np.float32)
-        q_type = np.zeros(b, np.int32)
-        n1_feat = np.zeros((b, f1, d), np.float32)
-        n1_type = np.zeros((b, f1), np.int32)
-        n1_mask = np.zeros((b, f1), np.float32)
-        n2_feat = np.zeros((b, f1, f2, d), np.float32)
-        n2_type = np.zeros((b, f1, f2), np.int32)
-        n2_mask = np.zeros((b, f1, f2), np.float32)
+        widths = hop_widths(fan)
+        feats = [np.zeros((b, d), np.float32)]
+        typs = [np.zeros(b, np.int32)]
+        masks = []
+        for k, f in enumerate(fan):
+            shape = (b,) + fan[:k + 1]
+            feats.append(np.zeros(shape + (d,), np.float32))
+            typs.append(np.zeros(shape, np.int32))
+            masks.append(np.zeros(shape, np.float32))
         for r, (ntype, nid) in enumerate(nodes):
-            u = self.rng.random(f1 + f1 * f2)
-            u1, u2 = u[:f1], u[f1:].reshape(f1, f2)
+            u = self.rng.random(slab_width(fan))
             tid = NODE_TYPE_ID[ntype]
-            q_type[r] = tid
-            q_feat[r] = self._fetch_feats(tid, nid)
-            merged = self.neighbor_store.neighbors(ntype, nid)
-            for s in range(f1):
-                if not merged:
-                    break
-                t1, i1 = merged[int(u1[s] * len(merged))]
-                n1_type[r, s], n1_mask[r, s] = t1, 1.0
-                n1_feat[r, s] = self._fetch_feats(t1, i1)
-                merged2 = self.neighbor_store.neighbors(NODE_TYPES[t1], i1)
-                for v in range(f2):
-                    if not merged2:
-                        break
-                    t2, i2 = merged2[int(u2[s, v] * len(merged2))]
-                    n2_type[r, s, v], n2_mask[r, s, v] = t2, 1.0
-                    n2_feat[r, s, v] = self._fetch_feats(t2, i2)
-        return ComputeGraphBatch(q_feat, q_type, n1_feat, n1_type, n1_mask,
-                                 n2_feat, n2_type, n2_mask)
+            typs[0][r] = tid
+            feats[0][r] = self.engine.get_feature(tid, nid)
+            frontier = [(tid, int(nid), True)]
+            off = 0
+            for k, f in enumerate(fan):
+                uk = u[off:off + widths[k]].reshape(-1, f)
+                off += widths[k]
+                fe = feats[k + 1][r].reshape(-1, d)
+                ty = typs[k + 1][r].reshape(-1)
+                mk = masks[k][r].reshape(-1)
+                nxt = []
+                for s, (pt, pi, pvalid) in enumerate(frontier):
+                    merged = self.engine.neighbors(pt, pi) if pvalid else []
+                    for v in range(f):
+                        if not merged:
+                            nxt.append((0, 0, False))
+                            continue
+                        t2, i2 = merged[int(uk[s, v] * len(merged))]
+                        ty[s * f + v], mk[s * f + v] = t2, 1.0
+                        fe[s * f + v] = self.engine.get_feature(t2, i2)
+                        nxt.append((t2, i2, True))
+                frontier = nxt
+        return ComputeGraphBatch(tuple(feats), tuple(typs), tuple(masks))
 
     # ---- the nearline loop ------------------------------------------------
     def process(self, *, upto_time: float | None = None, max_batches: int = 10**9,
@@ -544,10 +274,10 @@ class NearlineInference:
                 # pad the tile to its power-of-two bucket: one compiled
                 # executable per bucket, reused across batches — steady-state
                 # nearline batches never retrace
-                tile = _pad_tile(tile, self._bucket(len(nodes)))
+                tile = pad_tile(tile, self._bucket(len(nodes)))
                 emb = np.asarray(self._encode(self.params, _to_jnp(tile)))
             else:
-                tile = _pad_tile(tile, len(nodes) + (-len(nodes)) % 8)
+                tile = pad_tile(tile, len(nodes) + (-len(nodes)) % 8)
                 emb = np.asarray(enc.encoder_apply(self.params, self.cfg,
                                                    _to_jnp(tile)))
             self.metrics.encoder_seconds += _time.perf_counter() - t0

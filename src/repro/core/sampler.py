@@ -1,17 +1,22 @@
-"""Multi-hop fixed-fanout neighborhood sampler (the DeepGNN role, §4.1/§4.3).
+"""Training-side sampling front-end over the shared graph substrate.
 
-TPU adaptation (see DESIGN.md §3): instead of ragged gather/scatter compute
-graphs, every batch of query nodes becomes a *fixed-shape padded tile*:
+The DeepGNN-role engine itself lives in :mod:`repro.core.engine`
+(DESIGN.md §8): :class:`NeighborSampler` is now a thin front-end binding a
+:class:`SnapshotEngine` to the shared K-hop :class:`TileBuilder`, so the
+trainer samples through exactly the same code path as nearline serving.
+Every batch of query nodes becomes a fixed-shape padded K-hop tile
+(DESIGN.md §3):
 
-    hop0   q_feat  [B, d]          q_type  [B]
-    hop1   n1_feat [B, F1, d]      n1_type [B, F1]      n1_mask [B, F1]
-    hop2   n2_feat [B, F1, F2, d]  n2_type [B, F1, F2]  n2_mask [B, F1, F2]
+    hop0   feats[0] [B, d]           types[0] [B]
+    hop k  feats[k] [B, F1..Fk, d]   types[k] [B, F1..Fk]   masks[k-1] [B, F1..Fk]
 
 Neighbors are sampled uniformly (or degree-weighted) *across all outgoing
 edge types* of a node; heterogeneity is preserved by carrying the neighbor's
 node-type id, which selects the per-type feature transform in the encoder.
-A merged adjacency (one CSR per node type whose entries are (dst_type,
-dst_id) pairs) is precomputed so sampling is vectorized numpy.
+
+This module also keeps the :class:`BatchPrefetcher` (the background-thread
+training pipeline) and re-exports the tile/adjacency types it historically
+owned.
 """
 from __future__ import annotations
 
@@ -19,196 +24,61 @@ import queue
 import threading
 import time
 from dataclasses import dataclass
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import numpy as np
 
-from repro.core.graph import NODE_TYPES, NODE_TYPE_ID, HeteroGraph
+from repro.core.engine import (ComputeGraphBatch, MergedAdjacency,  # noqa: F401
+                               SnapshotEngine, TileBuilder)
+from repro.core.graph import HeteroGraph
 
 
 @dataclass(frozen=True)
 class SamplerConfig:
-    fanouts: tuple = (10, 5)          # (hop1, hop2)
+    fanouts: tuple = (10, 5)          # one entry per hop, arbitrary K
     strategy: str = "uniform"         # uniform | degree_weighted
     seed: int = 0
 
 
-class ComputeGraphBatch(NamedTuple):
-    """Padded 2-hop tile; arrays are numpy on the host, moved to device whole."""
-    q_feat: np.ndarray
-    q_type: np.ndarray
-    n1_feat: np.ndarray
-    n1_type: np.ndarray
-    n1_mask: np.ndarray
-    n2_feat: np.ndarray
-    n2_type: np.ndarray
-    n2_mask: np.ndarray
-
-
-class MergedAdjacency:
-    """Per-node-type merged CSR over all outgoing edge types.
-
-    Alongside (indptr, dst_id, dst_ty) we precompute, for the
-    degree-weighted strategy, each entry's *neighbor degree* and the
-    per-type cumulative weight array ``wcum`` (cumsum of degree + 1) so
-    weighted sampling is a vectorized inverse-CDF searchsorted instead of a
-    per-row ``rng.choice`` with per-neighbor degree lookups.
-    """
-
-    def __init__(self, graph: HeteroGraph):
-        self.graph = graph
-        self.merged = {}
-        for ntype in NODE_TYPES:
-            rels = graph.relations_from(ntype)
-            n = graph.num_nodes[ntype]
-            if not rels:
-                self.merged[ntype] = None
-                continue
-            per_rel = [graph.adj[r] for r in rels]
-            # concatenate all (src, dst, dst_type) triples, stable-sort by src
-            src_all = np.concatenate([np.repeat(np.arange(n), np.diff(csr.indptr))
-                                      for csr in per_rel])
-            dst_all = np.concatenate([csr.indices for csr in per_rel])
-            ty_all = np.concatenate([np.full(csr.num_edges, NODE_TYPE_ID[d], np.int8)
-                                     for (s, d), csr in zip(rels, per_rel)])
-            order = np.argsort(src_all, kind="stable")
-            counts = np.bincount(src_all, minlength=n)
-            indptr = np.zeros(n + 1, np.int64)
-            np.cumsum(counts, out=indptr[1:])
-            self.merged[ntype] = (indptr, dst_all[order].astype(np.int32),
-                                  ty_all[order])
-        # second pass: per-entry neighbor degree + cumulative weights
-        self.wcum = {}
-        for ntype in NODE_TYPES:
-            m = self.merged[ntype]
-            if m is None:
-                self.wcum[ntype] = None
-                continue
-            _, dst_id, dst_ty = m
-            nb_deg = np.zeros(dst_id.shape[0], np.float64)
-            for tid, tname in enumerate(NODE_TYPES):
-                sel = np.nonzero(dst_ty == tid)[0]
-                if sel.size:
-                    nb_deg[sel] = self.degrees(tname)[dst_id[sel]]
-            self.wcum[ntype] = np.cumsum(nb_deg + 1.0)
-
-    def degrees(self, ntype: str) -> np.ndarray:
-        m = self.merged[ntype]
-        if m is None:
-            return np.zeros(self.graph.num_nodes[ntype], np.int64)
-        return np.diff(m[0])
-
-
 class NeighborSampler:
-    """Vectorized fixed-fanout sampler over a MergedAdjacency."""
+    """Fixed-fanout K-hop sampler: a SnapshotEngine + the shared TileBuilder."""
 
     def __init__(self, graph: HeteroGraph, cfg: SamplerConfig | None = None):
         self.graph = graph
         self.cfg = cfg or SamplerConfig()
-        self.madj = MergedAdjacency(graph)
+        self.engine = SnapshotEngine(graph, strategy=self.cfg.strategy)
+        self.builder = TileBuilder(self.engine, self.cfg.fanouts)
+        self.madj = self.engine.madj
         self.rng = np.random.default_rng(self.cfg.seed)
-        self._feat = [graph.features[t] for t in NODE_TYPES]
-        self._dim = graph.feat_dim
 
     # -- one hop: (types[N], ids[N]) -> (types[N,F], ids[N,F], mask[N,F])
     def _sample_hop(self, types: np.ndarray, ids: np.ndarray, fanout: int,
                     rng: np.random.Generator | None = None):
         rng = self.rng if rng is None else rng
-        n = ids.shape[0]
-        out_id = np.zeros((n, fanout), np.int32)
-        out_ty = np.zeros((n, fanout), np.int8)
-        out_mask = np.zeros((n, fanout), bool)
-        for tid, tname in enumerate(NODE_TYPES):
-            sel = np.nonzero(types == tid)[0]
-            if sel.size == 0:
-                continue
-            m = self.madj.merged[tname]
-            if m is None:
-                continue
-            indptr, dst_id, dst_ty = m
-            node_ids = ids[sel]
-            deg = (indptr[node_ids + 1] - indptr[node_ids]).astype(np.int64)
-            has = deg > 0
-            if not has.any():
-                continue
-            rows = sel[has]
-            base = indptr[node_ids[has]]
-            d = deg[has]
-            if self.cfg.strategy == "degree_weighted":
-                # DeepGNN-style weighted sampling: bias neighbor choice by
-                # the *neighbor's* own degree (well-connected nodes carry
-                # more information; §4.1 lists weighted sampling support).
-                # Inverse-CDF over the precomputed cumulative weights: draw a
-                # uniform in each row's [wcum_lo, wcum_hi) span and
-                # searchsorted back to a global entry index.
-                wcum = self.madj.wcum[tname]
-                lo = np.where(base > 0, wcum[base - 1], 0.0)
-                hi = wcum[base + d - 1]
-                u = rng.random((rows.size, fanout))
-                targets = lo[:, None] + u * (hi - lo)[:, None]
-                gidx = np.searchsorted(wcum, targets, side="right")
-                offs = np.clip(gidx - base[:, None], 0, (d - 1)[:, None])
-            else:
-                # uniform with replacement: offsets in [0, deg)
-                offs = (rng.random((rows.size, fanout)) * d[:, None]).astype(np.int64)
-            flat = base[:, None] + offs
-            out_id[rows] = dst_id[flat]
-            out_ty[rows] = dst_ty[flat]
-            out_mask[rows] = True
-        return out_ty, out_id, out_mask
+        u = rng.random((ids.shape[0], fanout))
+        return self.engine.sample_batched(np.asarray(types).astype(np.int64),
+                                          np.asarray(ids).astype(np.int64),
+                                          fanout, u)
 
     def _degree_of(self, tid: int, nid: int) -> int:
-        m = self.madj.merged[NODE_TYPES[tid]]
-        if m is None:
-            return 0
-        indptr = m[0]
-        return int(indptr[nid + 1] - indptr[nid])
-
-    def _gather_feats(self, types: np.ndarray, ids: np.ndarray) -> np.ndarray:
-        flat_t = types.reshape(-1)
-        flat_i = ids.reshape(-1)
-        out = np.zeros((flat_t.shape[0], self._dim), np.float32)
-        for tid in range(len(NODE_TYPES)):
-            sel = np.nonzero(flat_t == tid)[0]
-            if sel.size:
-                out[sel] = self._feat[tid][flat_i[sel]]
-        return out.reshape(*types.shape, self._dim)
+        return self.engine.degree(tid, nid)
 
     def sample_batch(self, node_type: str, node_ids: np.ndarray,
                      rng: np.random.Generator | None = None) -> ComputeGraphBatch:
-        """Build the padded 2-hop compute-graph tile for a batch of queries.
+        """Build the padded K-hop compute-graph tile for a batch of queries.
 
         ``rng`` overrides the sampler's own (stateful) stream — the training
         pipeline passes a per-step generator keyed by step index so batches
         are a pure function of (seed, step) and the prefetching pipeline
         reproduces the synchronous one bit-for-bit.
         """
-        f1, f2 = self.cfg.fanouts
-        b = node_ids.shape[0]
-        q_type = np.full(b, NODE_TYPE_ID[node_type], np.int8)
-        q_ids = node_ids.astype(np.int32)
-
-        n1_ty, n1_id, n1_mask = self._sample_hop(q_type, q_ids, f1, rng)
-        n2_ty, n2_id, n2_mask_flat = self._sample_hop(
-            n1_ty.reshape(-1), n1_id.reshape(-1), f2, rng)
-        n2_ty = n2_ty.reshape(b, f1, f2)
-        n2_id = n2_id.reshape(b, f1, f2)
-        n2_mask = n2_mask_flat.reshape(b, f1, f2) & n1_mask[:, :, None]
-
-        return ComputeGraphBatch(
-            q_feat=self._gather_feats(q_type, q_ids),
-            q_type=q_type.astype(np.int32),
-            n1_feat=self._gather_feats(n1_ty, n1_id) * n1_mask[..., None],
-            n1_type=n1_ty.astype(np.int32),
-            n1_mask=n1_mask.astype(np.float32),
-            n2_feat=self._gather_feats(n2_ty, n2_id) * n2_mask[..., None],
-            n2_type=n2_ty.astype(np.int32),
-            n2_mask=n2_mask.astype(np.float32),
-        )
+        return self.builder.build(node_type, np.asarray(node_ids),
+                                  rng=self.rng if rng is None else rng)
 
     def sample_pair_batch(self, member_ids: np.ndarray, job_ids: np.ndarray,
                           rng: np.random.Generator | None = None):
         """(member tile, job tile) for link-prediction batches."""
+        rng = self.rng if rng is None else rng
         return (self.sample_batch("member", member_ids, rng),
                 self.sample_batch("job", job_ids, rng))
 

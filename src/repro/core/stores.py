@@ -1,0 +1,231 @@
+"""Storage primitives shared by the graph backends (DESIGN.md §2).
+
+These are the host-side stores both :class:`repro.core.engine.StreamingEngine`
+and the nearline pipeline are built from:
+
+  NoSQLStore      — dict-backed keyed store with read/write accounting
+                    (models the real store's scalar vs batched RPCs)
+  RingBuffer      — array-backed bounded neighbor rings for one edge type
+  NeighborStore   — per-edge-type rings keyed by (node_type, id)
+  EmbeddingStore  — online feature store: (node_type, id) -> (emb, time)
+
+The messaging layer (Topic/Event) stays in :mod:`repro.core.nearline`;
+stores carry no event semantics of their own.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import NODE_TYPE_ID, NODE_TYPES
+
+
+class NoSQLStore:
+    """In-memory NoSQL store with read/write accounting (I/O bottleneck
+    analysis, §5.2 challenge (c))."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._d: dict = {}
+        self.reads = 0
+        self.writes = 0
+
+    def put(self, key, value) -> None:
+        self._d[key] = value
+        self.writes += 1
+
+    def get(self, key, default=None):
+        self.reads += 1
+        return self._d.get(key, default)
+
+    def put_many(self, items) -> None:
+        """Bulk write (one RPC in the real store): items is (key, value)s."""
+        items = list(items)
+        self._d.update(items)
+        self.writes += len(items)
+
+    def multi_get(self, keys):
+        self.reads += len(keys)
+        return [self._d.get(k) for k in keys]
+
+    def __contains__(self, key):
+        return key in self._d
+
+    def __len__(self):
+        return len(self._d)
+
+
+class RingBuffer:
+    """Array-backed bounded neighbor lists for one (src_type, dst_type) edge
+    type: a [capacity, K] int32 ring per source node with a write cursor.
+
+    ``add`` is an O(1) in-place write, bulk bootstrap is a vectorized fill,
+    and batched sampling reads the backing arrays directly (no per-key dict
+    gets).  Neighbor *order* inside a row is append order until the ring
+    wraps; once it wraps, sampling is uniform over the resident set, so only
+    membership matters.
+    """
+
+    def __init__(self, name: str, max_neighbors: int, capacity: int = 1024):
+        self.name = name
+        self.K = max_neighbors
+        self.buf = np.zeros((capacity, max_neighbors), np.int32)
+        self.count = np.zeros(capacity, np.int32)
+        self.head = np.zeros(capacity, np.int32)
+        self.reads = 0
+        self.writes = 0
+
+    @property
+    def capacity(self) -> int:
+        return self.buf.shape[0]
+
+    def _ensure(self, n: int) -> None:
+        cap = self.capacity
+        if n <= cap:
+            return
+        new_cap = max(cap * 2, n)
+        self.buf = np.concatenate(
+            [self.buf, np.zeros((new_cap - cap, self.K), np.int32)])
+        self.count = np.concatenate([self.count, np.zeros(new_cap - cap, np.int32)])
+        self.head = np.concatenate([self.head, np.zeros(new_cap - cap, np.int32)])
+
+    def add(self, src_id: int, dst_id: int) -> None:
+        self._ensure(src_id + 1)
+        self.buf[src_id, self.head[src_id]] = dst_id
+        self.head[src_id] = (self.head[src_id] + 1) % self.K
+        self.count[src_id] = min(self.count[src_id] + 1, self.K)
+        self.writes += 1
+
+    def bulk_load(self, indptr: np.ndarray, indices: np.ndarray) -> None:
+        """Vectorized bootstrap from a CSR: keep the last K neighbors/node."""
+        n = len(indptr) - 1
+        self._ensure(n)
+        deg = np.diff(indptr)
+        cnt = np.minimum(deg, self.K).astype(np.int64)
+        total = int(cnt.sum())
+        rows = np.repeat(np.arange(n), cnt)
+        offs = np.zeros(n + 1, np.int64)
+        np.cumsum(cnt, out=offs[1:])
+        pos = np.arange(total) - np.repeat(offs[:-1], cnt)
+        src_idx = np.repeat(indptr[1:] - cnt, cnt) + pos
+        self.buf[rows, pos] = indices[src_idx]
+        self.count[:n] = cnt
+        self.head[:n] = cnt % self.K
+        self.writes += total
+
+    def counts(self, ids: np.ndarray) -> np.ndarray:
+        """Vectorized degree lookup; ids beyond capacity have degree 0."""
+        self.reads += len(ids)
+        out = np.zeros(len(ids), np.int64)
+        ok = ids < self.capacity
+        out[ok] = self.count[ids[ok]]
+        return out
+
+    def rows(self, ids: np.ndarray) -> np.ndarray:
+        """Vectorized [len(ids), K] row gather; out-of-capacity ids are all
+        zeros (their count is 0, so the padding is never dereferenced)."""
+        self.reads += len(ids)
+        out = np.zeros((len(ids), self.K), np.int32)
+        ok = ids < self.capacity
+        out[ok] = self.buf[ids[ok]]
+        return out
+
+    def row(self, src_id: int) -> np.ndarray:
+        self.reads += 1
+        if src_id >= self.capacity:
+            return self.buf[:0, 0]
+        return self.buf[src_id, :self.count[src_id]]
+
+
+class NeighborStore:
+    """Per-edge-type bounded neighbor rings keyed by (node_type, id).
+
+    One store monitors job neighbors per node type (paper: "multiple feature
+    stores that monitor job neighbors per node type").
+    """
+
+    def __init__(self, max_neighbors: int = 64):
+        self.stores: dict = {}
+        self.max_neighbors = max_neighbors
+
+    def _store(self, src_type: str, dst_type: str) -> RingBuffer:
+        key = (src_type, dst_type)
+        if key not in self.stores:
+            self.stores[key] = RingBuffer(f"neigh:{src_type}->{dst_type}",
+                                          self.max_neighbors)
+        return self.stores[key]
+
+    def add(self, src_type: str, src_id: int, dst_type: str, dst_id: int) -> None:
+        self._store(src_type, dst_type).add(src_id, dst_id)
+
+    def bulk_load(self, src_type: str, dst_type: str, indptr, indices) -> None:
+        self._store(src_type, dst_type).bulk_load(indptr, indices)
+
+    def _relations(self, node_type: str):
+        return [(NODE_TYPE_ID[d], st) for (s, d), st in self.stores.items()
+                if s == node_type]
+
+    def neighbors(self, node_type: str, node_id: int):
+        """Merged (dst_type_id, dst_id) neighbor list across edge types.
+
+        Entry order — relation insertion order, then ring column order — is
+        the contract shared with :meth:`sample_batched`: offset ``j`` into
+        this list and offset ``j`` of the batched path address the same
+        neighbor, which is what makes the scalar and batched joins
+        bit-identical on the same uniform stream.
+        """
+        out = []
+        for tid, st in self._relations(node_type):
+            out.extend((tid, int(i)) for i in st.row(node_id))
+        return out
+
+    def sample_batched(self, types: np.ndarray, ids: np.ndarray, fanout: int,
+                       uniforms: np.ndarray):
+        """Vectorized fixed-fanout sampling for a batch of (type, id) nodes.
+
+        types [n] int, ids [n] int, uniforms [n, fanout] in [0, 1) ->
+        (dst_ty [n, F] int32, dst_id [n, F] int32, mask [n, F] float32).
+        Draw j = floor(u · deg) indexes the merged neighbor list (see
+        :meth:`neighbors`) without ever materializing it.
+        """
+        n = len(ids)
+        out_ty = np.zeros((n, fanout), np.int32)
+        out_id = np.zeros((n, fanout), np.int32)
+        out_mask = np.zeros((n, fanout), np.float32)
+        for tid, tname in enumerate(NODE_TYPES):
+            rows = np.nonzero(types == tid)[0]
+            if rows.size == 0:
+                continue
+            rels = self._relations(tname)
+            if not rels:
+                continue
+            nid = ids[rows]
+            cnts = np.stack([st.counts(nid) for _, st in rels], axis=1)  # [m, R]
+            total = cnts.sum(axis=1)
+            has = total > 0
+            if not has.any():
+                continue
+            rows, nid, cnts, total = rows[has], nid[has], cnts[has], total[has]
+            j = (uniforms[rows] * total[:, None]).astype(np.int64)       # [m, F]
+            cum = np.cumsum(cnts, axis=1)
+            rel_idx = (j[:, :, None] >= cum[:, None, :]).sum(axis=-1)    # [m, F]
+            start = cum - cnts
+            slot = j - np.take_along_axis(start, rel_idx, axis=1)        # [m, F]
+            for r, (dtid, st) in enumerate(rels):
+                rr, ff = np.nonzero(rel_idx == r)
+                if rr.size == 0:
+                    continue
+                out_id[rows[rr], ff] = st.buf[nid[rr], slot[rr, ff]]
+                out_ty[rows[rr], ff] = dtid
+            out_mask[rows] = 1.0
+        return out_ty, out_id, out_mask
+
+
+class EmbeddingStore(NoSQLStore):
+    """Online feature store: (node_type, id) -> (embedding, refresh_time)."""
+
+    def put_embedding(self, node_type: str, node_id: int, emb: np.ndarray,
+                      t: float) -> None:
+        self.put((node_type, int(node_id)), (emb, t))
+
+    def get_embedding(self, node_type: str, node_id: int):
+        return self.get((node_type, int(node_id)))

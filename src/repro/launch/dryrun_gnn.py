@@ -25,26 +25,31 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.linksage import CONFIG
 from repro.core.encoder import encoder_apply, encoder_init
+from repro.core.engine import ComputeGraphBatch
 from repro.core.linksage import linksage_init, loss_fn
-from repro.core.sampler import ComputeGraphBatch
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import collective_bytes
 
 
 def tile_specs(cfg, batch: int):
-    f1, f2 = cfg.fanouts
+    """ShapeDtypeStructs of the padded K-hop tile at production batch."""
+    fan = tuple(cfg.fanouts)
     d = cfg.feat_dim
     f32, i32 = jnp.float32, jnp.int32
     return ComputeGraphBatch(
-        q_feat=jax.ShapeDtypeStruct((batch, d), f32),
-        q_type=jax.ShapeDtypeStruct((batch,), i32),
-        n1_feat=jax.ShapeDtypeStruct((batch, f1, d), f32),
-        n1_type=jax.ShapeDtypeStruct((batch, f1), i32),
-        n1_mask=jax.ShapeDtypeStruct((batch, f1), f32),
-        n2_feat=jax.ShapeDtypeStruct((batch, f1, f2, d), f32),
-        n2_type=jax.ShapeDtypeStruct((batch, f1, f2), i32),
-        n2_mask=jax.ShapeDtypeStruct((batch, f1, f2), f32),
+        feats=tuple(jax.ShapeDtypeStruct((batch, *fan[:k], d), f32)
+                    for k in range(len(fan) + 1)),
+        types=tuple(jax.ShapeDtypeStruct((batch, *fan[:k]), i32)
+                    for k in range(len(fan) + 1)),
+        masks=tuple(jax.ShapeDtypeStruct((batch, *fan[:k]), f32)
+                    for k in range(1, len(fan) + 1)),
     )
+
+
+def _cost_dict(compiled) -> dict:
+    # cost_analysis() returns a per-device list of dicts on newer jax
+    cost = compiled.cost_analysis() or {}
+    return cost[0] if isinstance(cost, (list, tuple)) else cost
 
 
 def main():
@@ -79,7 +84,7 @@ def main():
                       in_shardings=(pshard, tile_shardings(args.infer_batch)),
                       ).lower(params, tile)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     results["encode"] = {
         "batch": args.infer_batch, "mesh": mesh_name,
         "compile_s": time.time() - t0,
@@ -102,7 +107,7 @@ def main():
                                     tile_shardings(args.train_batch)),
                       ).lower(params, m_tile, m_tile)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     results["train"] = {
         "batch": args.train_batch, "mesh": mesh_name,
         "compile_s": time.time() - t0,

@@ -183,18 +183,14 @@ def gnn_param_pspecs(params):
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
-def gnn_tile_pspecs():
-    """Batch-dim ("data",) sharding for a padded 2-hop ComputeGraphBatch."""
-    from repro.core.sampler import ComputeGraphBatch
+def gnn_tile_pspecs(num_hops: int = 2):
+    """Batch-dim ("data",) sharding for a padded K-hop ComputeGraphBatch
+    (every array leads with the batch dim; hop/feature dims replicate)."""
+    from repro.core.engine import ComputeGraphBatch
     return ComputeGraphBatch(
-        q_feat=P("data", None),
-        q_type=P("data"),
-        n1_feat=P("data", None, None),
-        n1_type=P("data", None),
-        n1_mask=P("data", None),
-        n2_feat=P("data", None, None, None),
-        n2_type=P("data", None, None),
-        n2_mask=P("data", None, None),
+        feats=tuple(P("data", *([None] * (k + 1))) for k in range(num_hops + 1)),
+        types=tuple(P("data", *([None] * k)) for k in range(num_hops + 1)),
+        masks=tuple(P("data", *([None] * k)) for k in range(1, num_hops + 1)),
     )
 
 

@@ -5,3 +5,78 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def make_parity_case(seed, *, num_events=40, max_neighbors=64, feat_dim=8):
+    """Random small hetero graph + a random engagement-event suffix.
+
+    Returns ``(snapshot_final_graph, streaming_engine)``: the streaming
+    engine is bootstrapped from the BASE graph and then fed the suffix via
+    ``add_edge``; the snapshot graph is built directly from base+suffix
+    edge lists (suffix appended per relation, matching ring append order).
+    Per-(relation, src) degree is capped below ``max_neighbors`` by
+    construction so no ring evicts — the regime where the engine contract
+    promises bit-identical sampling (DESIGN.md §8).
+    """
+    import numpy as np
+
+    from repro.core.engine import StreamingEngine
+    from repro.core.graph import NODE_TYPES, HeteroGraph
+
+    rng = np.random.default_rng((seed, 0xE7))
+    num_nodes = {t: 1 for t in NODE_TYPES}
+    num_nodes["member"] = int(rng.integers(12, 48))
+    num_nodes["job"] = int(rng.integers(6, 24))
+    num_nodes["skill"] = int(rng.integers(3, 9))
+    features = {t: rng.normal(size=(num_nodes[t], feat_dim)).astype(np.float32)
+                for t in NODE_TYPES}
+    rels = [("member", "job"), ("job", "member"),
+            ("member", "skill"), ("skill", "member")]
+    deg: dict = {}
+
+    def admit(rel, s, d, out):
+        if deg.get((rel, s), 0) < max_neighbors - 1:
+            deg[(rel, s)] = deg.get((rel, s), 0) + 1
+            out.append((s, d))
+
+    base = {rel: [] for rel in rels}
+    for rel in rels:
+        s_t, d_t = rel
+        for _ in range(int(rng.integers(5, 70))):
+            admit(rel, int(rng.integers(0, num_nodes[s_t])),
+                  int(rng.integers(0, num_nodes[d_t])), base[rel])
+    suffix = {rel: [] for rel in rels}
+    for _ in range(num_events):
+        m = int(rng.integers(0, num_nodes["member"]))
+        j = int(rng.integers(0, num_nodes["job"]))
+        admit(("member", "job"), m, j, suffix[("member", "job")])
+        admit(("job", "member"), j, m, suffix[("job", "member")])
+
+    def graph_of(edge_lists):
+        g = HeteroGraph(num_nodes=dict(num_nodes),
+                        features={t: f.copy() for t, f in features.items()})
+        for rel in rels:
+            pairs = edge_lists[rel] or [(0, 0)]   # keep every relation present
+            src = np.array([s for s, _ in pairs])
+            dst = np.array([d for _, d in pairs])
+            g.add_edges(rel[0], rel[1], src, dst)
+        return g
+
+    streaming = StreamingEngine(feat_dim, max_neighbors=max_neighbors)
+    streaming.bootstrap_from_graph(graph_of(base))
+    for rel in rels:
+        for s, d in suffix[rel]:
+            streaming.add_edge(rel[0], s, rel[1], d)
+    final = graph_of({rel: base[rel] + suffix[rel] for rel in rels})
+    return final, streaming
+
+
+def assert_tiles_equal(ta, tb, msg=""):
+    """Bit-exact equality of two K-hop ComputeGraphBatch tiles."""
+    import numpy as np
+
+    assert len(ta.masks) == len(tb.masks)
+    for name, hop_a, hop_b in zip(ta._fields, ta, tb):
+        for k, (a, b) in enumerate(zip(hop_a, hop_b)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{msg}{name}[{k}]")

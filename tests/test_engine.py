@@ -1,0 +1,269 @@
+"""The unified graph substrate (DESIGN.md §8): snapshot/streaming backend
+parity, the shared K-hop TileBuilder, golden equivalence with the
+pre-refactor scalar join, and K=3 end-to-end."""
+import numpy as np
+import jax
+import pytest
+from dataclasses import replace
+
+from conftest import assert_tiles_equal, make_parity_case
+from repro.configs.linksage import smoke as gnn_smoke
+from repro.core import encoder as enc
+from repro.core.engine import (SnapshotEngine, StreamingEngine, TileBuilder,
+                               bucket_pow2, neighbor_weight, pad_tile,
+                               slab_width)
+from repro.core.graph import NODE_TYPES
+from repro.core.linksage import LinkSAGETrainer, _to_jnp, linksage_init
+from repro.core.nearline import Event, NearlineInference
+from repro.data import GraphGenConfig, generate_job_marketplace_graph
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return generate_job_marketplace_graph(
+        GraphGenConfig(num_members=200, num_jobs=60, seed=3))
+
+
+# ----------------------------------------------- backend parity (uniform)
+
+
+@pytest.mark.parametrize("fanouts", [(10, 5), (4, 3, 2)])
+def test_snapshot_and_streaming_build_bit_identical_tiles(small_graph, fanouts):
+    """The tentpole contract: same uniforms through either backend -> the
+    same K-hop tile, bit for bit."""
+    g, _ = small_graph
+    snap = SnapshotEngine(g)
+    stream = StreamingEngine(g.feat_dim, max_neighbors=512)
+    stream.bootstrap_from_graph(g)
+    rng = np.random.default_rng(7)
+    ids = rng.integers(0, g.num_nodes["member"], 24)
+    u = rng.random((24, slab_width(fanouts)))
+    ta = TileBuilder(snap, fanouts).build("member", ids, uniforms=u)
+    tb = TileBuilder(stream, fanouts).build("member", ids, uniforms=u)
+    assert_tiles_equal(ta, tb)
+    assert ta.fanouts == tuple(fanouts) and ta.batch_size == 24
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("fanouts", [(5, 3), (3, 2, 2)])
+def test_event_suffix_parity_deterministic(seed, fanouts):
+    """Snapshot-of-final-state vs bootstrap+live-appends (the deterministic
+    arm of the hypothesis property test, run even without hypothesis)."""
+    final, streaming = make_parity_case(seed)
+    snap = SnapshotEngine(final)
+    rng = np.random.default_rng((seed, 1))
+    n = 16
+    types = rng.integers(0, 2, n).astype(np.int64)   # member/job queries
+    ids = np.array([rng.integers(0, final.num_nodes[NODE_TYPES[t]])
+                    for t in types])
+    u = rng.random((n, slab_width(fanouts)))
+    ta = TileBuilder(snap, fanouts).build(types, ids, uniforms=u)
+    tb = TileBuilder(streaming, fanouts).build(types, ids, uniforms=u)
+    assert_tiles_equal(ta, tb, msg=f"seed={seed} ")
+
+
+# ------------------------------------- golden equivalence (scalar oracle)
+
+
+def test_khop_builder_matches_pre_refactor_scalar_join(small_graph):
+    """Golden equivalence: with fanouts (10, 5) and a fixed seed, the K-hop
+    builder on BOTH backends reproduces the pre-refactor per-key scalar
+    join bit for bit, and the encoder output is bit-identical too."""
+    g, _ = small_graph
+    cfg = replace(gnn_smoke(), feat_dim=g.feat_dim, fanouts=(10, 5))
+    params = linksage_init(jax.random.PRNGKey(0), cfg)
+    nodes = [("member", 3), ("job", 5), ("member", 3), ("skill", 2),
+             ("job", 59), ("title", 0), ("member", 199)]
+
+    def scalar_tile(seed):
+        nl = NearlineInference(cfg, params["encoder"], fanouts=(10, 5),
+                               seed=seed, join_impl="scalar")
+        nl.bootstrap_from_graph(g)
+        return nl._sequential_join(nodes)
+
+    q_ty = np.array([NODE_TYPES.index(t) for t, _ in nodes], np.int64)
+    q_id = np.array([i for _, i in nodes], np.int64)
+
+    stream = StreamingEngine(g.feat_dim)
+    stream.bootstrap_from_graph(g)
+    t_stream = TileBuilder(stream, (10, 5)).build(
+        q_ty, q_id, rng=np.random.default_rng(11))
+    t_snap = TileBuilder(SnapshotEngine(g), (10, 5)).build(
+        q_ty, q_id, rng=np.random.default_rng(11))
+    t_scalar = scalar_tile(11)
+    assert_tiles_equal(t_stream, t_scalar, msg="stream-vs-scalar ")
+    assert_tiles_equal(t_snap, t_scalar, msg="snapshot-vs-scalar ")
+
+    e_new = np.asarray(enc.encoder_apply(params["encoder"], cfg, _to_jnp(t_snap)))
+    e_old = np.asarray(enc.encoder_apply(params["encoder"], cfg, _to_jnp(t_scalar)))
+    np.testing.assert_array_equal(e_new, e_old)
+
+
+def test_scalar_join_generalizes_to_k3(small_graph):
+    """The retained baseline consumes the canonical stream at K=3 too."""
+    g, _ = small_graph
+    cfg = replace(gnn_smoke(), feat_dim=g.feat_dim).with_fanouts((4, 3, 2))
+    params = linksage_init(jax.random.PRNGKey(0), cfg)
+    nodes = [("member", 1), ("job", 2), ("skill", 0)]
+    tiles = {}
+    for impl in ("batched", "scalar"):
+        nl = NearlineInference(cfg, params["encoder"], seed=4, join_impl=impl)
+        nl.bootstrap_from_graph(g)
+        tiles[impl] = nl._sequential_join(nodes)
+    assert_tiles_equal(tiles["batched"], tiles["scalar"])
+    assert tiles["batched"].num_hops == 3
+
+
+# ----------------------------------------- degree-weighted (streaming)
+
+
+def test_streaming_degree_weighted_parity_with_snapshot(small_graph):
+    """Satellite: weighted sampling on the streaming backend.  Masks are
+    bit-identical to the snapshot engine; the picks themselves agree on all
+    but float-boundary draws (global- vs ring-local cumulative weights), and
+    both oversample hubs vs uniform."""
+    g, _ = small_graph
+    engines = {}
+    for strat in ("uniform", "degree_weighted"):
+        engines[("snap", strat)] = SnapshotEngine(g, strategy=strat)
+        e = StreamingEngine(g.feat_dim, max_neighbors=512, strategy=strat)
+        e.bootstrap_from_graph(g)
+        engines[("stream", strat)] = e
+    rng = np.random.default_rng(0)
+    n, f = 256, 32
+    types = np.zeros(n, np.int64)                   # member queries
+    ids = rng.integers(0, g.num_nodes["member"], n)
+    u = rng.random((n, f))
+    ref = engines[("snap", "uniform")]
+    out = {k: e.sample_batched(types, ids, f, u) for k, e in engines.items()}
+    for k, (ty, i, mk) in out.items():
+        np.testing.assert_array_equal(mk, out[("snap", "uniform")][2], err_msg=str(k))
+
+    def mean_deg(ty, i, mk):
+        degs = ref.counts(ty.reshape(-1).astype(np.int64),
+                          i.reshape(-1).astype(np.int64))
+        return degs[mk.reshape(-1) > 0].mean()
+
+    d_su = mean_deg(*out[("snap", "uniform")])
+    d_sw = mean_deg(*out[("snap", "degree_weighted")])
+    d_tw = mean_deg(*out[("stream", "degree_weighted")])
+    assert d_sw > 1.2 * d_su and d_tw > 1.2 * d_su
+    # pick-level parity: identical on all but (rare) float-boundary draws
+    same = (out[("snap", "degree_weighted")][1] ==
+            out[("stream", "degree_weighted")][1])
+    assert same.mean() > 0.99, same.mean()
+
+
+def test_streaming_weighted_matches_compact_merged_list_oracle(small_graph):
+    """The ring-local inverse-CDF must pick exactly what a per-node scalar
+    walk over the compact merged neighbor list (weights deg+1) picks —
+    zero-weight padding slots have zero-width spans."""
+    g, _ = small_graph
+    e = StreamingEngine(g.feat_dim, max_neighbors=512,
+                        strategy="degree_weighted")
+    e.bootstrap_from_graph(g)
+    rng = np.random.default_rng(5)
+    n, f = 48, 16
+    types = rng.integers(0, 2, n).astype(np.int64)
+    ids = rng.integers(0, g.num_nodes["job"], n)
+    u = rng.random((n, f))
+    ty, nid, mk = e.sample_batched(types, ids, f, u)
+    for r in range(n):
+        merged = e.neighbors(int(types[r]), int(ids[r]))
+        if not merged:
+            assert mk[r].sum() == 0
+            continue
+        w = np.array([neighbor_weight(
+            e._type_degrees(NODE_TYPES[t], np.array([i]))[0])
+            for t, i in merged])
+        cum = np.cumsum(w)
+        for s in range(f):
+            j = min(int(np.searchsorted(cum, u[r, s] * cum[-1], side="right")),
+                    len(merged) - 1)
+            assert (int(ty[r, s]), int(nid[r, s])) == merged[j], (r, s)
+
+
+def test_nearline_degree_weighted_serving_runs(small_graph):
+    """Weighted nearline sampling (unlocked by the shared strategy
+    machinery) serves finite embeddings end to end."""
+    g, _ = small_graph
+    cfg = replace(gnn_smoke(), feat_dim=g.feat_dim)
+    params = linksage_init(jax.random.PRNGKey(0), cfg)
+    nl = NearlineInference(cfg, params["encoder"], micro_batch=8,
+                           strategy="degree_weighted")
+    nl.bootstrap_from_graph(g)
+    for i in range(6):
+        nl.topic.publish(Event(time=float(i), kind="engagement",
+                               payload={"member_id": i, "job_id": i}))
+    nl.process()
+    emb, _ = nl.embedding_store.get_embedding("job", 3)
+    assert np.all(np.isfinite(emb))
+
+
+# --------------------------------------------------- K=3 through the stack
+
+
+def test_k3_trains_and_serves_through_shared_path(small_graph):
+    """A K=3 config runs the full loop: train (loss drops), embed_nodes
+    (no retrace across calls), and nearline serving — all through the same
+    TileBuilder code path."""
+    g, _ = small_graph
+    cfg = replace(gnn_smoke(), feat_dim=g.feat_dim).with_fanouts((4, 3, 2))
+    tr = LinkSAGETrainer(cfg, g, seed=0, prefetch=2)
+    hist = tr.train(20, batch_size=32)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    emb = tr.embed_nodes("member", np.arange(40), batch=32)
+    assert emb.shape == (40, cfg.embed_dim)
+    traces = tr.encoder_traces
+    emb2 = tr.embed_nodes("member", np.arange(40), batch=32)
+    assert tr.encoder_traces == traces
+    np.testing.assert_allclose(emb, emb2, rtol=1e-6, atol=1e-6)
+
+    nl = NearlineInference(cfg, tr.state.params["encoder"], micro_batch=8)
+    nl.bootstrap_from_graph(g)
+    nl.topic.publish(Event(time=1.0, kind="engagement",
+                           payload={"member_id": 1, "job_id": 2}))
+    nl.process()
+    emb3, _ = nl.embedding_store.get_embedding("job", 2)
+    assert np.all(np.isfinite(emb3))
+
+
+def test_streaming_trainer_sees_live_edges(small_graph):
+    """Training on the StreamingEngine: after live engagement events the
+    sampled neighborhoods (and hence batches) change — the near-realtime
+    inductive story."""
+    g, _ = small_graph
+    cfg = replace(gnn_smoke(), feat_dim=g.feat_dim)
+    eng = StreamingEngine(g.feat_dim)
+    eng.bootstrap_from_graph(g)
+    tr = LinkSAGETrainer(cfg, g, seed=0, engine=eng)
+    before = tr._build_batch(0, 32)
+    static = LinkSAGETrainer(cfg, g, seed=0)._build_batch(0, 32)
+    assert_tiles_equal(before[0], static[0], msg="pre-event ")
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        eng.add_edge("member", int(rng.integers(0, 200)),
+                     "job", int(rng.integers(0, 60)))
+    after = tr._build_batch(0, 32)     # same step -> same uniforms, new graph
+    changed = any(not np.array_equal(a, b)
+                  for a, b in zip(jax.tree.leaves(before[0]),
+                                  jax.tree.leaves(after[0])))
+    assert changed
+
+
+# ------------------------------------------------------------ tile helpers
+
+
+def test_bucket_pow2_and_pad_tile(small_graph):
+    g, _ = small_graph
+    assert bucket_pow2(1) == 8 and bucket_pow2(9) == 16
+    assert bucket_pow2(50, cap=48) == 48
+    tile = TileBuilder(SnapshotEngine(g), (3, 2)).build(
+        "member", np.arange(5), rng=np.random.default_rng(0))
+    padded = pad_tile(tile, 8)
+    assert padded.batch_size == 8
+    for m in padded.masks:
+        assert m[5:].sum() == 0
+    for x in padded.feats:
+        assert np.all(x[5:] == 0)
+    assert pad_tile(tile, 4) is tile          # never truncates

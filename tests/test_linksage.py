@@ -88,8 +88,7 @@ def test_encoder_uses_neighbor_information(small_graph):
     params = linksage_init(jax.random.PRNGKey(0), cfg)
     tile = s.sample_batch("member", np.arange(8))
     emb = enc.encoder_apply(params["encoder"], cfg, _to_jnp(tile))
-    blinded = tile._replace(n1_mask=np.zeros_like(tile.n1_mask),
-                            n2_mask=np.zeros_like(tile.n2_mask))
+    blinded = tile._replace(masks=tuple(np.zeros_like(m) for m in tile.masks))
     emb2 = enc.encoder_apply(params["encoder"], cfg, _to_jnp(blinded))
     assert float(jnp.max(jnp.abs(emb - emb2))) > 1e-4
 
@@ -149,6 +148,40 @@ def test_recall_at_k_perfect_and_zero():
     assert recall_at_k(scores, positives, k=1) == 1.0
     positives_wrong = [{3}, {2}, {1}, {0}]
     assert recall_at_k(scores, positives_wrong, k=1) == 0.0
+
+
+def test_recall_at_k_vectorized_matches_set_semantics():
+    """The vectorized recall must reproduce the per-member set-intersection
+    loop exactly — including empty sets, out-of-range positive ids (count
+    toward the denominator, never retrievable) and k > num_jobs."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n, num_jobs = int(rng.integers(1, 30)), int(rng.integers(2, 20))
+        scores = np.round(rng.normal(size=(n, num_jobs)), 1)
+        positives = [set(map(int, rng.integers(0, num_jobs + 3,
+                                               rng.integers(0, 6))))
+                     for _ in range(n)]
+        k = int(rng.integers(1, num_jobs + 5))
+        topk = np.argpartition(-scores, min(k, num_jobs - 1), axis=1)[:, :k]
+        hits, total = 0, 0
+        for i, pos in enumerate(positives):
+            if not pos:
+                continue
+            hits += len(set(topk[i].tolist()) & pos)
+            total += min(len(pos), k)
+        assert recall_at_k(scores, positives, k) == hits / max(total, 1)
+
+
+def test_auc_tie_handling():
+    """Regression: tied scores spanning a positive and a negative count as
+    half a concordant pair (average-rank convention)."""
+    # pairs: (.5+, .5-) ties -> 1/2; (.5+, .1-)=1; (.9+, .5-)=1; (.9+, .1-)=1
+    got = auc(np.array([1, 0, 1, 0]), np.array([0.5, 0.5, 0.9, 0.1]))
+    assert got == pytest.approx(3.5 / 4)
+    # all-tied scores are exactly chance, not 0 or 1
+    assert auc(np.array([1, 0, 1, 0]), np.zeros(4)) == pytest.approx(0.5)
+    # a fully tied positive block above a tied negative block is perfect
+    assert auc(np.array([1, 1, 0, 0]), np.array([2.0, 2.0, 1.0, 1.0])) == 1.0
 
 
 def test_degree_weighted_sampling(small_graph):

@@ -159,11 +159,10 @@ def test_batched_join_matches_scalar_join_same_rng(setup):
     batched, scalar = make("batched"), make("scalar")
     nodes = [("member", 3), ("job", 5), ("member", 3), ("skill", 2),
              ("job", 59), ("title", 0), ("member", 199)]
+    from conftest import assert_tiles_equal
     tile_b = batched._sequential_join(nodes)
     tile_s = scalar._sequential_join(nodes)
-    for name, a, b in zip(tile_b._fields, tile_b, tile_s):
-        np.testing.assert_array_equal(np.asarray(a, np.float32),
-                                      np.asarray(b, np.float32), err_msg=name)
+    assert_tiles_equal(tile_b, tile_s)
     # the batched path must fetch strictly fewer (deduped) feature keys
     assert batched.metrics.join_reads < scalar.metrics.join_reads
 

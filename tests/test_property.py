@@ -104,6 +104,29 @@ def test_inbatch_loss_positive_and_permutation_consistent(seed, b):
     np.testing.assert_allclose(loss, loss_p, rtol=1e-5)
 
 
+@given(seed=st.integers(0, 2**16), k=st.sampled_from([(5, 3), (3, 2, 2)]),
+       num_events=st.integers(0, 80))
+def test_snapshot_of_final_state_matches_streaming_tiles(seed, k, num_events):
+    """Random graph + random event suffix: a SnapshotEngine of the final
+    state and a StreamingEngine that lived through the events build
+    bit-identical K-hop tiles from the same uniform stream (the engine
+    contract, DESIGN.md §8)."""
+    from conftest import assert_tiles_equal, make_parity_case
+    from repro.core.engine import SnapshotEngine, TileBuilder, slab_width
+    from repro.core.graph import NODE_TYPES
+
+    final, streaming = make_parity_case(seed, num_events=num_events)
+    rng = np.random.default_rng((seed, 1))
+    n = 12
+    types = rng.integers(0, 2, n).astype(np.int64)    # member/job queries
+    ids = np.array([rng.integers(0, final.num_nodes[NODE_TYPES[t]])
+                    for t in types])
+    u = rng.random((n, slab_width(k)))
+    ta = TileBuilder(SnapshotEngine(final), k).build(types, ids, uniforms=u)
+    tb = TileBuilder(streaming, k).build(types, ids, uniforms=u)
+    assert_tiles_equal(ta, tb)
+
+
 @given(seed=st.integers(0, 2**16), n=st.integers(4, 64))
 def test_auc_is_shift_and_scale_invariant(seed, n):
     rng = np.random.default_rng(seed)

@@ -147,9 +147,13 @@ def test_gnn_param_pspecs_reject_unknown_paths():
         par.gnn_param_pspecs({"mystery": {"w": np.zeros((2, 2))}})
 
 
-def test_gnn_tile_pspecs_shard_batch_dim_only():
-    specs = par.gnn_tile_pspecs()
-    for s in specs:
+@pytest.mark.parametrize("num_hops", [2, 3])
+def test_gnn_tile_pspecs_shard_batch_dim_only(num_hops):
+    from jax.sharding import PartitionSpec as P
+    specs = par.gnn_tile_pspecs(num_hops)
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == 3 * num_hops + 2          # feats+types per hop+q, masks per hop
+    for s in leaves:
         assert s[0] == "data"
         assert all(ax is None for ax in s[1:])
 
