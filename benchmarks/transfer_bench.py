@@ -1,0 +1,191 @@
+"""Embedding-lifecycle + transfer benchmark (§5.2 serving loop, DESIGN.md §9).
+
+Three claims:
+
+  * sweep vs incremental — full-sweep ``publish_version`` throughput
+    (nodes/s) vs incremental dirty-closure drain throughput over one event
+    stream, plus the recompute amplification (closure nodes per event);
+  * parity row — the §9 contract: the incremental drain's live table is
+    BIT-IDENTICAL to an offline full sweep at the final graph state (the
+    acceptance gate tracks this row);
+  * staleness/latency tradeoff — drain cadence (every batch vs end-of-
+    window) and an age-out policy, each reporting staleness percentiles vs
+    recomputes per event.
+
+Plus the multi-surface train-step rate (all four §7 heads from one
+embedding gather).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, standard_graph
+from repro.configs.linksage import smoke as gnn_smoke
+from repro.core import encoder as enc
+from repro.core.embeddings import StalenessPolicy, tables_bitwise_equal
+from repro.core.nearline import Event, NearlineInference
+
+N_EVENTS = 192
+MICRO_BATCH = 32
+
+
+def _cfg(g):
+    from dataclasses import replace
+    return replace(gnn_smoke(), feat_dim=g.feat_dim)
+
+
+def _event_stream(g, rng, n=N_EVENTS):
+    events = []
+    base_job = g.num_nodes["job"]
+    for i in range(n):
+        t = float(i)
+        if i % 16 == 0:
+            events.append(Event(time=t, kind="job_created", payload={
+                "job_id": base_job + i,
+                "features": rng.normal(size=g.feat_dim).astype(np.float32),
+                "title": int(rng.integers(0, g.num_nodes["title"])),
+                "company": int(rng.integers(0, g.num_nodes["company"]))}))
+        else:
+            events.append(Event(time=t, kind="engagement", payload={
+                "member_id": int(rng.integers(0, g.num_nodes["member"])),
+                "job_id": int(rng.integers(0, g.num_nodes["job"]))}))
+    return events
+
+
+def _nearline(g, cfg, params, *, policy, micro_batch=MICRO_BATCH, seed=0):
+    nl = NearlineInference(cfg, params, micro_batch=micro_batch, seed=seed,
+                           policy=policy)
+    nl.bootstrap_from_graph(g)
+    return nl
+
+
+def bench_transfer_sweep_vs_incremental():
+    """Offline full-sweep vs incremental dirty-closure recompute — the two
+    lifecycle paths over the same event stream, ending bit-identical."""
+    g, _ = standard_graph(0)
+    cfg = _cfg(g)
+    params = enc.encoder_init(jax.random.PRNGKey(0), cfg)
+    events = _event_stream(g, np.random.default_rng(0))
+    policy = StalenessPolicy(closure_radius=None)   # full K-hop dependency
+
+    # incremental arm: per-micro-batch drain as events arrive; warm the
+    # steady-state jit bucket on a throwaway full micro-batch, then reset
+    # the counters so the timed region is compile-free
+    inc = _nearline(g, cfg, params, policy=policy)
+    wrng = np.random.default_rng(99)
+    for _ in range(MICRO_BATCH):
+        inc.topic.publish(Event(time=0.0, kind="engagement", payload={
+            "member_id": int(wrng.integers(0, g.num_nodes["member"])),
+            "job_id": int(wrng.integers(0, g.num_nodes["job"]))}))
+    inc.process()
+    inc.metrics = type(inc.metrics)()
+    for ev in events:
+        inc.topic.publish(ev)
+    t0 = time.perf_counter()
+    inc.process()
+    dt_inc = time.perf_counter() - t0
+    s = inc.metrics.summary()
+    emit("transfer_lifecycle_incremental", dt_inc / max(s["batches"], 1) * 1e6,
+         f"nodes_per_s={s['nodes_refreshed'] / dt_inc:.0f};"
+         f"events_per_s={len(events) / dt_inc:.0f};"
+         f"recompute_amplification={s['nodes_refreshed'] / len(events):.2f};"
+         f"staleness_p99_s={s['staleness_p99_s']:.1f}")
+
+    # offline arm: ingest the whole window, then one full sweep
+    off = _nearline(g, cfg, params, policy=policy)
+    for ev in events:
+        off.topic.publish(ev)
+    off.ingest()
+    t0 = time.perf_counter()
+    version = off.lifecycle.publish_version(clock=float(len(events)))
+    dt_off = time.perf_counter() - t0
+    swept = len(off.embedding_store.table(version))
+    emit("transfer_lifecycle_sweep", dt_off / max(swept, 1) * 1e6,
+         f"nodes_per_s={swept / dt_off:.0f};swept={swept};"
+         f"registry={len(off.lifecycle.registry)}")
+
+    # parity row (the acceptance gate): incremental live table ⊇-restricted
+    # comparison is NOT enough — key sets must match and bits must match.
+    # The incremental arm starts from a published baseline so never-dirty
+    # nodes are present in its live table too.
+    inc2 = _nearline(g, cfg, params, policy=policy)
+    off2 = _nearline(g, cfg, params, policy=policy)
+    for nl in (inc2, off2):
+        nl.lifecycle.publish_version(clock=0.0)
+        for ev in events:
+            nl.topic.publish(ev)
+    inc2.process()
+    off2.ingest()
+    v = off2.lifecycle.publish_version(clock=float(len(events)))
+    ok = tables_bitwise_equal(inc2.embedding_store.live_embeddings(),
+                              off2.embedding_store.table(v))
+    emit("transfer_lifecycle_parity", 0.0,
+         f"bitwise_identical={int(ok)};"
+         f"table_size={len(off2.embedding_store.table(v))}")
+    assert ok, "sweep/incremental parity violated"
+
+
+def bench_transfer_staleness_tradeoff():
+    """Recompute cost vs embedding freshness across drain cadences."""
+    g, _ = standard_graph(0)
+    cfg = _cfg(g)
+    params = enc.encoder_init(jax.random.PRNGKey(0), cfg)
+    arms = {
+        # endpoints only, drained as events arrive (the nearline default)
+        "endpoints_nearline": dict(policy=StalenessPolicy(), micro=8),
+        # full closure, drained as events arrive (parity-grade freshness)
+        "closure_nearline": dict(policy=StalenessPolicy(closure_radius=None),
+                                 micro=8),
+        # endpoints + 64s age-out: idle nodes refresh on staleness alone
+        "endpoints_ageout": dict(policy=StalenessPolicy(max_staleness_s=64.0),
+                                 micro=8),
+    }
+    for label, spec in arms.items():
+        nl = _nearline(g, cfg, params, policy=spec["policy"],
+                       micro_batch=spec["micro"])
+        events = _event_stream(g, np.random.default_rng(1), n=96)
+        for ev in events:
+            nl.topic.publish(ev)
+            nl.process()                    # event-time processing
+        s = nl.metrics.summary()
+        emit(f"transfer_staleness_{label}", 0.0,
+             f"recomputes_per_event={s['nodes_refreshed'] / s['events']:.2f};"
+             f"staleness_p50_s={s['staleness_p50_s']:.1f};"
+             f"staleness_p99_s={s['staleness_p99_s']:.1f}")
+
+
+def bench_transfer_multi_surface_step():
+    """Steps/s of the jitted 4-surface train step (one shared gather)."""
+    from repro.core.transfer import MultiSurfaceTrainer, surface_configs
+
+    rng = np.random.default_rng(0)
+    M, J, f, e, B = 512, 128, 32, 32, 256
+    tables = {"m_feat": rng.normal(size=(M, f)).astype(np.float32),
+              "j_feat": rng.normal(size=(J, f)).astype(np.float32),
+              "m_gnn": rng.normal(size=(M, e)).astype(np.float32),
+              "j_gnn": rng.normal(size=(J, e)).astype(np.float32),
+              "q_feat": rng.normal(size=(M, f)).astype(np.float32)}
+    pairs = (rng.integers(0, M, 4 * B), rng.integers(0, J, 4 * B))
+    labels = {n: rng.integers(0, 2, 4 * B).astype(np.float32)
+              for n in ("taj", "jymbii", "jobsearch", "ebr")}
+    mst = MultiSurfaceTrainer(surface_configs(
+        other_feat_dim=f, gnn_embed_dim=e, hidden=64, query_dim=f), seed=0)
+    mst.fit(tables, pairs, labels, epochs=1, batch_size=B)   # compile
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        mst.fit(tables, pairs, labels, epochs=1, batch_size=B)
+    dt = time.perf_counter() - t0
+    steps = reps * (4 * B // B)
+    emit("transfer_multi_surface_step", dt / steps * 1e6,
+         f"steps_per_s={steps / dt:.0f};surfaces=4;batch={B}")
+
+
+ALL_TRANSFER = [
+    bench_transfer_sweep_vs_incremental,
+    bench_transfer_staleness_tradeoff,
+    bench_transfer_multi_surface_step,
+]

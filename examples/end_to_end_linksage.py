@@ -2,11 +2,16 @@
 
   1. construct the heterogeneous job-marketplace graph (§3)
   2. train the GraphSAGE encoder–decoder on engagement link prediction (§4)
-  3. precompute member/job embeddings (offline inference)
-  4. transfer-learn downstream rankers (TAJ + JYMBII heads, §5.1) with the
-     frozen encoder, vs a no-GNN control arm (the A/B proxy)
+  3. offline full sweep: ``publish_version()`` writes every member/job
+     embedding into the versioned EmbeddingStore (§5.2)
+  4. transfer-learn ALL four product surfaces (TAJ / JYMBII / JobSearch /
+     EBR, §7) from embeddings read out of the store at that version, vs a
+     no-GNN control arm (the A/B proxy)
   5. run the nearline pipeline on a simulated event day (§5.2) and show
      fresh jobs get embeddings in seconds vs the 24 h offline batch
+  6. close the loop: a live engagement burst dirties the store, the
+     recompute queue drains, and the refreshed embeddings re-rank EBR
+     retrieval for the engaged member
 
     PYTHONPATH=src python examples/end_to_end_linksage.py
     # CI smoke: --members 120 --jobs 40 --steps 30 --ranker-epochs 2
@@ -16,12 +21,12 @@ import argparse
 import numpy as np
 
 from repro.configs.linksage import CONFIG
-from repro.core.eval import auc, retrieval_eval
-from repro.core.linksage import LinkSAGETrainer
+from repro.core.embeddings import StalenessPolicy
+from repro.core.eval import retrieval_eval
 from repro.core.nearline import Event, NearlineInference
-from repro.core.transfer import (DownstreamRanker, RankerConfig,
-                                 build_ranker_dataset)
 from repro.data import GraphGenConfig, generate_job_marketplace_graph
+from repro.core.linksage import LinkSAGETrainer
+from repro.launch.transfer import build_surface_datasets, fit_surfaces
 
 
 def main():
@@ -48,29 +53,28 @@ def main():
     hist = trainer.train(args.steps, batch_size=64)
     print(f"GNN loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
 
-    # -- 3. offline embedding precompute ------------------------------------
-    m_emb = trainer.embed_nodes("member", np.arange(args.members))
-    j_emb = trainer.embed_nodes("job", np.arange(args.jobs))
+    # -- 3. offline sweep into the versioned store --------------------------
+    lc = trainer.make_lifecycle()
+    version = lc.publish_version(clock=0.0)
+    m_emb = lc.store.gather("member", np.arange(args.members), version=version)
+    j_emb = lc.store.gather("job", np.arange(args.jobs), version=version)
     src, dst = truth["engagements"]
-    print("EBR recall@10:", retrieval_eval(m_emb, j_emb, src, dst, k=10)["recall"])
+    print(f"published v{version} ({len(lc.store.table(version))} embeddings); "
+          "raw-embedding EBR recall@10:",
+          retrieval_eval(m_emb, j_emb, src, dst, k=10)["recall"])
 
-    # -- 4. downstream rankers (frozen encoder, transfer learning) ----------
-    weak_m = (graph.features["member"] * 0.1
-              + rng.normal(size=graph.features["member"].shape)).astype(np.float32)
-    weak_j = (graph.features["job"] * 0.1
-              + rng.normal(size=graph.features["job"].shape)).astype(np.float32)
-    n = len(src)
-    pairs = (np.concatenate([src, rng.integers(0, args.members, n)]),
-             np.concatenate([dst, rng.integers(0, args.jobs, n)]))
-    labels = np.concatenate([np.ones(n), np.zeros(n)]).astype(np.float32)
-    for use_gnn in (True, False):
-        ds = build_ranker_dataset(weak_m, weak_j, m_emb, j_emb, pairs, labels,
-                                  use_gnn=use_gnn)
-        rk = DownstreamRanker(RankerConfig(name="jymbii", gnn_embed_dim=cfg.embed_dim,
-                                           other_feat_dim=64, use_gnn=use_gnn))
-        rk.fit(ds, epochs=args.ranker_epochs)
-        print(f"JYMBII ranker AUC ({'with' if use_gnn else 'no  '} GNN):",
-              f"{auc(labels, rk.score(ds)):.4f}")
+    # -- 4. downstream surfaces (frozen encoder, version-pinned reads) ------
+    pairs, labels, feat_tables = build_surface_datasets(
+        graph, truth, num_members=args.members, num_jobs=args.jobs, seed=0)
+    for arm, use_gnn in (("with GNN", True), ("control ", False)):
+        tables = (dict(feat_tables, m_gnn=m_emb, j_gnn=j_emb)
+                  if use_gnn else dict(feat_tables))
+        rep = fit_surfaces(tables, pairs, labels, embed_dim=cfg.embed_dim,
+                           feat_dim=graph.feat_dim, use_gnn=use_gnn,
+                           epochs=args.ranker_epochs,
+                           eval_truth=truth["engagements"])
+        print(f"surfaces ({arm}): "
+              + "  ".join(f"{k}={v:.4f}" for k, v in rep.items()))
 
     # -- 5. nearline day ------------------------------------------------------
     nl = NearlineInference(cfg, trainer.state.params["encoder"], micro_batch=8)
@@ -90,6 +94,35 @@ def main():
                 for i in range(12))
     print(f"fresh jobs embedded during the day: {fresh}/12 "
           "(offline daily batch: 0/12 until midnight)")
+
+    # -- 6. live-event -> dirty-set -> recompute -> re-rank -----------------
+    # an engagement burst onto one member, with the FULL dependency closure
+    # (every node whose K-hop tile changed goes through the recompute queue)
+    nl2 = NearlineInference(cfg, trainer.state.params["encoder"],
+                            micro_batch=32,
+                            policy=StalenessPolicy(closure_radius=None))
+    nl2.bootstrap_from_graph(graph)
+    nl2.lifecycle.publish_version(clock=0.0)      # v1 baseline sweep
+    member = int(src[0])
+    hot_jobs = rng.choice(args.jobs, size=5, replace=False)
+    for i, j in enumerate(hot_jobs):
+        nl2.topic.publish(Event(time=float(i), kind="engagement", payload={
+            "member_id": member, "job_id": int(j)}))
+    nl2.ingest()                                  # apply events, mark dirty
+    queued = nl2.lifecycle.pending()
+    drained = nl2.lifecycle.drain(clock=6.0)      # priority-queue recompute
+    # freeze baseline + drained updates as v2 — no re-sweep: the table IS
+    # the incremental path's output
+    v2 = nl2.embedding_store.publish()
+    m2 = nl2.embedding_store.gather("member", np.arange(args.members), version=v2)
+    j2 = nl2.embedding_store.gather("job", np.arange(args.jobs), version=v2)
+    ranks = np.argsort(-(m2[member] @ j2.T))
+    top = [int(j) for j in ranks[:10]]
+    print(f"live burst: {len(hot_jobs)} engagements on member {member} -> "
+          f"{queued} nodes dirtied (K-hop closure), {drained} recomputed "
+          f"through the priority queue; "
+          f"{sum(int(j) in top for j in hot_jobs)}/5 engaged jobs now in the "
+          f"member's EBR top-10 (v{v2} table)")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,10 @@
   encoder   — GraphSAGE mean/attention encoder (§4.2)
   decoder   — MLP / cosine / in-batch decoders + losses (§4.2)
   linksage  — model assembly + link-prediction training (§4.3)
-  transfer  — frozen encoder → downstream DNN rankers (§5.1)
+  embeddings— versioned EmbeddingStore + recompute lifecycle: dirty sets,
+              staleness policy, incremental drain / full sweep (§5.2, §9)
+  transfer  — frozen encoder → per-surface downstream DNNs: TAJ, JYMBII,
+              JobSearch, EBR registry + multi-surface training (§5.1, §7)
   nearline  — nearline inference pipeline (§5.2, Figure 4)
   eval      — offline proxies for the §7 A/B metrics
 """

@@ -38,6 +38,19 @@ def inbatch_score_matrix(m_emb, j_emb):
     return m_emb @ j_emb.T
 
 
+def inbatch_logits(cfg: GNNConfig, m_emb, j_emb):
+    """The in-batch decoder's full score grid, per decoder convention.
+
+    The cosine arm normalizes BOTH towers before scaling — the same
+    convention as :func:`pair_scores`, so the grid's diagonal agrees with
+    the aligned-pair scores (regression-pinned in tests)."""
+    if cfg.decoder == "cosine":
+        m_emb = m_emb / (jnp.linalg.norm(m_emb, axis=-1, keepdims=True) + 1e-6)
+        j_emb = j_emb / (jnp.linalg.norm(j_emb, axis=-1, keepdims=True) + 1e-6)
+        return cfg.cosine_scale * inbatch_score_matrix(m_emb, j_emb)
+    return inbatch_score_matrix(m_emb, j_emb)
+
+
 def sigmoid_ce(logits, labels):
     """Numerically-stable sigmoid cross-entropy (paper's Loss equation)."""
     zeros = jnp.zeros_like(logits)
@@ -50,9 +63,7 @@ def inbatch_loss(cfg: GNNConfig, m_emb, j_emb, pos_mask=None):
     ``pos_mask`` ([B,B] 0/1) overrides the diagonal when the batch contains
     duplicate members/jobs (y_ij from the label tuples).
     """
-    scores = inbatch_score_matrix(m_emb, j_emb)
-    if cfg.decoder == "cosine":
-        scores = cfg.cosine_scale * scores
+    scores = inbatch_logits(cfg, m_emb, j_emb)
     b = scores.shape[0]
     y = jnp.eye(b, dtype=scores.dtype) if pos_mask is None else pos_mask.astype(scores.dtype)
     return jnp.mean(sigmoid_ce(scores, y))

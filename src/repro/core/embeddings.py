@@ -1,0 +1,449 @@
+"""Versioned embedding lifecycle: the serving loop's missing middle
+(paper §5–§7, DESIGN.md §9).
+
+The paper's system claim is a *decoupled* pipeline: the GNN encoder computes
+member/job embeddings near-realtime, and downstream DNN rankers on four
+product surfaces consume them as frozen features.  Everything between the
+encoder and the rankers — versioning, staleness, and fan-out — lives here:
+
+  EmbeddingRecord    — (embedding, computed-at time, version)
+  EmbeddingStore     — the online feature store: live table + frozen
+                       published version tables (leakage-safe reads)
+  StalenessPolicy    — what gets recomputed when: dirty-closure radius,
+                       age-out threshold, per-type priority
+  RecomputeQueue     — batched priority queue of dirty nodes
+  EmbeddingLifecycle — dirty-set tracking keyed by graph events + the two
+                       recompute paths: incremental ``drain`` (nearline)
+                       and full-sweep ``publish_version`` (offline batch)
+
+Determinism contract: every recompute of node (type, id) consumes the SAME
+per-node uniform slab ``default_rng((seed, UNIFORM_SALT, tid, nid))`` — a
+pure function of the node, not of processing order or batch grouping.  The
+encoder is row-wise (bucket padding never leaks across rows), so an
+embedding's bits depend only on (params, node, graph state).  Hence the
+parity contract: with ``closure_radius=None`` (the full K-hop dependency
+radius) an incremental drain over an event stream converges to a table
+bit-identical to one full sweep at the final graph state — asserted by
+tests/test_embeddings.py and the transfer_bench parity row.  (Dirty
+closure walks the reverse-edge index, so it is exact in the append-only
+regime; a ring eviction mutates the evicting node's own ring, which the
+closure also covers.)
+"""
+from __future__ import annotations
+
+import heapq
+import time as _time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from repro.configs.linksage import GNNConfig
+from repro.core.engine import TileBuilder, bucket_pow2, pad_tile
+from repro.core.graph import NODE_TYPE_ID, NODE_TYPES
+from repro.core.stores import NoSQLStore
+
+# domain separator for the per-node recompute uniform streams (disjoint from
+# the trainer's (seed, step) and embed_nodes' (seed, 1<<24, chunk) streams)
+UNIFORM_SALT = 0x5EED
+
+
+def node_uniform_slab(seed: int, node_type: str, node_id: int,
+                      width: int) -> np.ndarray:
+    """THE per-node uniform stream: every recompute of (type, id) — scalar
+    or batched, drain or sweep — consumes this same slab, making sampled
+    neighborhoods a pure function of (seed, node, graph state)."""
+    return np.random.default_rng(
+        (seed, UNIFORM_SALT, NODE_TYPE_ID[node_type],
+         int(node_id))).random(width)
+
+
+class EmbeddingRecord(NamedTuple):
+    emb: np.ndarray
+    time: float                   # computed-at (simulated wall clock)
+    version: int                  # version the record was computed toward
+
+
+class EmbeddingStore(NoSQLStore):
+    """Versioned online feature store: (node_type, id) -> EmbeddingRecord.
+
+    The *live* table is what nearline writes into; ``publish()`` freezes it
+    as an immutable numbered version table.  Downstream consumers read via
+    ``gather(..., version=v)`` which only accepts published versions — a
+    ranker whose label window must postdate its features cannot accidentally
+    train on still-mutating embeddings (§5.1 leakage safety).
+    """
+
+    def __init__(self, name: str):
+        super().__init__(name)
+        self.version = 0                       # last published version
+        self._tables: dict[int, dict] = {}     # version -> frozen live table
+
+    # ---- writes ---------------------------------------------------------
+    def put_embedding(self, node_type: str, node_id: int, emb: np.ndarray,
+                      t: float, version: int | None = None) -> None:
+        v = self.version + 1 if version is None else int(version)
+        self.put((node_type, int(node_id)), EmbeddingRecord(emb, float(t), v))
+
+    def publish(self) -> int:
+        """Freeze the live table as the next version; returns it."""
+        self.version += 1
+        self._tables[self.version] = dict(self._d)   # records are immutable
+        return self.version
+
+    # ---- reads ----------------------------------------------------------
+    def get_embedding(self, node_type: str, node_id: int):
+        """Legacy (emb, time) view of the live record, or None."""
+        rec = self.get((node_type, int(node_id)))
+        return None if rec is None else (rec.emb, rec.time)
+
+    def record(self, node_type: str, node_id: int) -> EmbeddingRecord | None:
+        return self.get((node_type, int(node_id)))
+
+    def published_versions(self) -> list[int]:
+        return sorted(self._tables)
+
+    def table(self, version: int) -> dict:
+        if version not in self._tables:
+            raise KeyError(f"version {version} not published "
+                           f"(have {self.published_versions()})")
+        return self._tables[version]
+
+    def gather(self, node_type: str, ids, *, version: int) -> np.ndarray:
+        """[len(ids), d] embedding matrix read out of a *published* version.
+
+        Missing nodes are a hard error: a node absent from version ``v``
+        did not exist when ``v`` was computed, so silently zero-filling it
+        would leak post-window information into the consumer's features.
+        """
+        tab = self.table(version)
+        rows = []
+        for i in ids:
+            rec = tab.get((node_type, int(i)))
+            if rec is None:
+                raise KeyError(f"({node_type}, {int(i)}) missing from "
+                               f"version {version}")
+            rows.append(rec.emb)
+        self.reads += len(rows)
+        return np.stack(rows).astype(np.float32)
+
+    def live_embeddings(self) -> dict:
+        """{key: emb} snapshot of the live table (parity comparisons)."""
+        return {k: rec.emb for k, rec in self._d.items()}
+
+
+def tables_bitwise_equal(a: dict, b: dict) -> bool:
+    """Same key set and bit-identical embeddings (EmbeddingRecord values or
+    raw arrays on either side) — the parity-contract comparator."""
+    if a.keys() != b.keys():
+        return False
+    unwrap = lambda v: v.emb if isinstance(v, EmbeddingRecord) else v
+    return all(np.array_equal(unwrap(a[k]), unwrap(b[k])) for k in a)
+
+
+# ---------------------------------------------------------------- staleness
+
+
+@dataclass(frozen=True)
+class StalenessPolicy:
+    """What gets recomputed when.
+
+    ``closure_radius`` — how far an event's dirtiness propagates along
+      *reverse* edges: 0 marks only the touched endpoints (the cheap
+      eventually-consistent nearline default); ``None`` resolves to the
+      tile dependency radius ``len(fanouts)``, i.e. every node whose K-hop
+      tile could have changed — the regime where incremental drain is
+      bit-equivalent to a full sweep (the parity contract).
+    ``max_staleness_s`` — age-out refresh: ``drain(clock=...)`` re-enqueues
+      any registered node whose record is older than this even without a
+      graph event (bounds embedding age between publishes).
+    ``type_order`` — priority tie-break within one trigger time: earlier
+      types refresh first (fresh jobs are the product-critical case, §5.2).
+    """
+    closure_radius: int | None = 0
+    max_staleness_s: float = float("inf")
+    type_order: tuple = ("job", "member", "skill", "title", "company",
+                         "position")
+
+    def radius(self, num_hops: int) -> int:
+        return num_hops if self.closure_radius is None else self.closure_radius
+
+    def priority(self, node_type: str, trigger_time: float) -> tuple:
+        rank = (self.type_order.index(node_type)
+                if node_type in self.type_order else len(self.type_order))
+        return (trigger_time, rank)
+
+
+class RecomputeQueue:
+    """Batched priority queue of dirty nodes.
+
+    Min-heap on the policy priority with lazy-deletion dedup: the ``_trigger``
+    /``_prio`` maps are authoritative (earliest trigger / best priority win);
+    a heap entry is live only while its priority matches the key's current
+    best, so entries left behind by a pop cannot resurface a re-pushed key
+    ahead of genuinely older dirt.
+    """
+
+    def __init__(self):
+        self._heap: list = []
+        self._trigger: dict = {}
+        self._prio: dict = {}
+        self._seq = 0
+
+    def push(self, key, priority: tuple, trigger_time: float) -> None:
+        if key in self._trigger:
+            self._trigger[key] = min(self._trigger[key], trigger_time)
+            self._prio[key] = min(self._prio[key], priority)
+        else:
+            self._trigger[key] = trigger_time
+            self._prio[key] = priority
+        heapq.heappush(self._heap, (priority, self._seq, key))
+        self._seq += 1
+
+    def pop_batch(self, n: int) -> list:
+        """Up to ``n`` distinct (key, earliest_trigger) pairs, best first."""
+        out = []
+        while self._heap and len(out) < n:
+            prio, _, key = heapq.heappop(self._heap)
+            if self._prio.get(key) != prio:     # popped earlier, or outranked
+                continue
+            del self._prio[key]
+            out.append((key, self._trigger.pop(key)))
+        return out
+
+    def clear(self) -> None:
+        self._heap.clear()
+        self._trigger.clear()
+        self._prio.clear()
+
+    def __len__(self) -> int:
+        return len(self._trigger)
+
+    def __contains__(self, key) -> bool:
+        return key in self._trigger
+
+
+# ------------------------------------------------------------------ metrics
+
+
+@dataclass
+class LifecycleMetrics:
+    """Recompute-pipeline counters (shared by nearline as NearlineMetrics)."""
+    events_processed: int = 0
+    batches: int = 0
+    nodes_refreshed: int = 0
+    encoder_seconds: float = 0.0
+    join_seconds: float = 0.0
+    encoder_traces: int = 0                         # jit retrace count
+    staleness: list = field(default_factory=list)   # trigger -> refresh deltas
+    join_reads: int = 0
+    sweeps: int = 0                                 # publish_version calls
+
+    def summary(self) -> dict:
+        st = np.array(self.staleness) if self.staleness else np.array([0.0])
+        return {
+            "events": self.events_processed,
+            "batches": self.batches,
+            "nodes_refreshed": self.nodes_refreshed,
+            "encoder_ms_per_batch": 1e3 * self.encoder_seconds / max(self.batches, 1),
+            "join_ms_per_batch": 1e3 * self.join_seconds / max(self.batches, 1),
+            "encoder_traces": self.encoder_traces,
+            "staleness_p50_s": float(np.percentile(st, 50)),
+            "staleness_p99_s": float(np.percentile(st, 99)),
+            "join_reads": self.join_reads,
+            "sweeps": self.sweeps,
+        }
+
+
+# ---------------------------------------------------------------- lifecycle
+
+
+class EmbeddingLifecycle:
+    """Dirty-set tracking + the two recompute paths over one GraphEngine.
+
+    Owns the registry of known nodes, the reverse-edge index the dirty
+    closure walks, the priority recompute queue, and the shared batched
+    encode (TileBuilder tile -> power-of-two bucket pad -> jitted encoder).
+    ``tile_fn`` lets a caller substitute its own tile builder for the same
+    node batch (nearline passes its scalar-join oracle arm through here).
+    """
+
+    def __init__(self, cfg: GNNConfig, encoder_params, engine, *,
+                 fanouts=None, store: EmbeddingStore | None = None,
+                 policy: StalenessPolicy | None = None, micro_batch: int = 64,
+                 seed: int = 0, metrics=None, tile_fn=None,
+                 jit_encoder: bool = True):
+        self.cfg = cfg
+        self.params = encoder_params
+        self.engine = engine
+        self.fanouts = tuple(fanouts or cfg.fanouts)
+        self.builder = TileBuilder(engine, self.fanouts)
+        self.store = store if store is not None else EmbeddingStore("gnn-embeddings")
+        self.policy = policy or StalenessPolicy()
+        self.micro_batch = micro_batch
+        self.seed = seed
+        self.metrics = metrics if metrics is not None else LifecycleMetrics()
+        self.tile_fn = tile_fn or self.build_tile
+        self.jit_encoder = jit_encoder
+        self.registry: set = set()                  # known (ntype, nid) keys
+        self._rev: dict = defaultdict(set)          # key -> in-neighbor keys
+        self.queue = RecomputeQueue()
+        self._encode = self._make_encode()
+
+    # ---- registry + reverse index ---------------------------------------
+    def register(self, node_type: str, node_id: int) -> None:
+        self.registry.add((node_type, int(node_id)))
+
+    def observe_bootstrap(self, graph) -> None:
+        """Register every snapshot node and index its edges for closure."""
+        for ntype in NODE_TYPES:
+            for i in range(graph.num_nodes.get(ntype, 0)):
+                self.registry.add((ntype, i))
+        for (s, d), csr in graph.adj.items():
+            src = np.repeat(np.arange(len(csr.indptr) - 1), np.diff(csr.indptr))
+            for u, v in zip(src, csr.indices):
+                self._rev[(d, int(v))].add((s, int(u)))
+
+    def observe_edge(self, src_key, dst_key) -> None:
+        """Record a live edge src->dst (src can now sample dst's subtree)."""
+        self._rev[dst_key].add(src_key)
+
+    # ---- dirty tracking -------------------------------------------------
+    def dirty_closure(self, keys) -> set:
+        """Touched nodes plus everything within the policy radius along
+        reverse edges — the nodes whose padded tiles could have changed."""
+        seen = set(keys)
+        frontier = set(keys)
+        for _ in range(self.policy.radius(len(self.fanouts))):
+            nxt = set()
+            for k in frontier:
+                nxt |= self._rev.get(k, frozenset())
+            frontier = nxt - seen
+            if not frontier:
+                break
+            seen |= frontier
+        return seen
+
+    def mark_dirty(self, node_type: str, node_id: int, t: float) -> int:
+        """Dirty a touched node and its closure; returns #enqueued keys."""
+        keys = self.dirty_closure({(node_type, int(node_id))})
+        for (nt, ni) in keys:
+            self.registry.add((nt, ni))
+            self.queue.push((nt, ni), self.policy.priority(nt, t), t)
+        return len(keys)
+
+    def enqueue_stale(self, now: float) -> int:
+        """Age-out: enqueue registered nodes older than max_staleness_s."""
+        if not np.isfinite(self.policy.max_staleness_s):
+            return 0
+        n = 0
+        for key in self.registry:
+            if key in self.queue:
+                continue
+            rec = self._d_peek(key)
+            if rec is not None and now - rec.time > self.policy.max_staleness_s:
+                self.queue.push(key, self.policy.priority(key[0], rec.time),
+                                rec.time)
+                n += 1
+        return n
+
+    def _d_peek(self, key):
+        # raw read without inflating the store's RPC accounting
+        return self.store._d.get(key)
+
+    # ---- deterministic recompute ----------------------------------------
+    def uniform_slab(self, node_type: str, node_id: int) -> np.ndarray:
+        return node_uniform_slab(self.seed, node_type, node_id,
+                                 self.builder.slab_width)
+
+    def recompute_uniforms(self, nodes) -> np.ndarray:
+        return np.stack([self.uniform_slab(nt, ni) for nt, ni in nodes])
+
+    def build_tile(self, nodes):
+        """Default tile path: the shared K-hop TileBuilder over the engine,
+        fed the stacked per-node uniform slabs.  Join-read accounting lives
+        here (and in any substituted ``tile_fn``), not in ``encode_nodes``,
+        so a tile function that tracks its own reads is never double-counted."""
+        reads0 = self.engine.join_reads
+        q_ty = np.array([NODE_TYPE_ID[t] for t, _ in nodes], np.int64)
+        q_id = np.array([i for _, i in nodes], np.int64)
+        tile = self.builder.build(q_ty, q_id,
+                                  uniforms=self.recompute_uniforms(nodes))
+        self.metrics.join_reads += self.engine.join_reads - reads0
+        return tile
+
+    def _make_encode(self):
+        from repro.core import encoder as enc
+        cfg = self.cfg
+
+        def fn(params, tile):
+            # trace-time side effect: counts (re)compilations per bucket
+            self.metrics.encoder_traces += 1
+            return enc.encoder_apply(params, cfg, tile)
+
+        return jax.jit(fn)
+
+    def encode_nodes(self, nodes) -> np.ndarray:
+        """One batched recompute: tile_fn -> bucket pad -> encode -> [n, e]."""
+        from repro.core import encoder as enc
+        from repro.core.linksage import _to_jnp
+        t0 = _time.perf_counter()
+        tile = self.tile_fn(nodes)
+        self.metrics.join_seconds += _time.perf_counter() - t0
+        t0 = _time.perf_counter()
+        if self.jit_encoder:
+            # one compiled executable per power-of-two bucket: steady-state
+            # batches never retrace
+            tile = pad_tile(tile, bucket_pow2(len(nodes)))
+            emb = np.asarray(self._encode(self.params, _to_jnp(tile)))
+        else:
+            tile = pad_tile(tile, len(nodes) + (-len(nodes)) % 8)
+            emb = np.asarray(enc.encoder_apply(self.params, self.cfg,
+                                               _to_jnp(tile)))
+        self.metrics.encoder_seconds += _time.perf_counter() - t0
+        self.metrics.batches += 1
+        self.metrics.nodes_refreshed += len(nodes)
+        return emb[:len(nodes)]
+
+    # ---- the two recompute paths ----------------------------------------
+    def drain(self, *, clock: float = 0.0, max_nodes: int | None = None) -> int:
+        """Incremental path (NearlineInference): pop dirty nodes by priority,
+        recompute in micro-batches, write into the live table as in-flight
+        records toward the next version.  Returns #nodes refreshed."""
+        self.enqueue_stale(clock)
+        total = 0
+        while len(self.queue):
+            room = self.micro_batch if max_nodes is None else min(
+                self.micro_batch, max_nodes - total)
+            if room <= 0:
+                break
+            batch = self.queue.pop_batch(room)
+            nodes = [k for k, _ in batch]
+            emb = self.encode_nodes(nodes)
+            for r, ((nt, ni), trig) in enumerate(batch):
+                self.store.put_embedding(nt, ni, emb[r], clock,
+                                         version=self.store.version + 1)
+                self.metrics.staleness.append(clock - trig)
+            total += len(nodes)
+        return total
+
+    def publish_version(self, *, clock: float = 0.0) -> int:
+        """Full-sweep path (OfflineBatchInference): recompute EVERY registry
+        node at the current graph state, freeze the table, return the new
+        version.  The sweep supersedes all pending dirt."""
+        keys = sorted(self.registry,
+                      key=lambda k: (NODE_TYPE_ID[k[0]], k[1]))
+        for i in range(0, len(keys), self.micro_batch):
+            chunk = keys[i:i + self.micro_batch]
+            emb = self.encode_nodes(chunk)
+            for r, (nt, ni) in enumerate(chunk):
+                self.store.put_embedding(nt, ni, emb[r], clock,
+                                         version=self.store.version + 1)
+        self.queue.clear()
+        self.metrics.sweeps += 1
+        return self.store.publish()
+
+    def pending(self) -> int:
+        return len(self.queue)

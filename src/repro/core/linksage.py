@@ -296,13 +296,19 @@ class LinkSAGETrainer:
     # from the (seed, step) training streams)
     _EMBED_STREAM = 1 << 24
 
-    def embed_nodes(self, node_type: str, ids: np.ndarray, batch: int = 256):
+    def embed_nodes(self, node_type: str, ids: np.ndarray, batch: int = 256,
+                    *, store=None, clock: float = 0.0):
         """Chunked encoding of ``ids``.  Full chunks reuse one compiled
         executable of shape ``batch``; the final partial chunk is padded to
         its power-of-two bucket (capped at ``batch``) so repeated calls
         never retrace (asserted via ``encoder_traces``).  Neighborhoods are
         sampled from per-chunk RNG streams, so the same call yields the
-        same embeddings until the graph changes."""
+        same embeddings until the graph changes.
+
+        ``store`` (an :class:`repro.core.embeddings.EmbeddingStore`) writes
+        each embedding into the online store as an in-flight record toward
+        the store's next version — the trainer-side feed of the serving
+        loop."""
         out = []
         for i in range(0, len(ids), batch):
             chunk = ids[i:i + batch]
@@ -313,7 +319,45 @@ class LinkSAGETrainer:
             tile = self.builder.build(node_type, padded, rng=rng)
             emb = np.asarray(self._embed(self.state.params, _to_jnp(tile)))
             out.append(emb[:len(chunk)])
+            if store is not None:
+                for r, nid in enumerate(chunk):
+                    store.put_embedding(node_type, int(nid), out[-1][r], clock)
         return np.concatenate(out, axis=0)
+
+    def make_lifecycle(self, *, store=None, policy=None, micro_batch: int = 256,
+                       jit_encoder: bool = True):
+        """An :class:`~repro.core.embeddings.EmbeddingLifecycle` over this
+        trainer's engine and CURRENT encoder params, with every graph node
+        registered — ``publish_version()`` on it is the offline full-sweep
+        inference job feeding the downstream surfaces (DESIGN.md §9)."""
+        from repro.core.embeddings import EmbeddingLifecycle
+        lc = EmbeddingLifecycle(
+            self.cfg, self.state.params["encoder"], self.engine,
+            fanouts=self.cfg.fanouts, store=store, policy=policy,
+            micro_batch=micro_batch, seed=self.seed, jit_encoder=jit_encoder)
+        lc.observe_bootstrap(self.graph)
+        return lc
+
+    # -- checkpointing ----------------------------------------------------
+    def save_checkpoint(self, directory: str) -> str:
+        """Persist the FULL TrainState (params + optimizer moments) plus the
+        completed-step counter; restoring resumes the per-step RNG streams
+        exactly where they left off."""
+        from repro.checkpoint import save_checkpoint as _save
+        return _save(directory, self._step_count, {"state": self.state})
+
+    def restore_checkpoint(self, directory: str, step: int | None = None) -> int:
+        """Restore a :meth:`save_checkpoint` dump into this trainer (the
+        template structural check rejects mismatched configs); returns the
+        restored step counter."""
+        from repro.checkpoint import latest_step, load_checkpoint
+        if step is None:
+            step = latest_step(directory)
+            assert step is not None, f"no checkpoints under {directory}"
+        restored = load_checkpoint(directory, step, {"state": self.state})
+        self.state = restored["state"]
+        self._step_count = step
+        return step
 
 
 def _to_jnp(tile: ComputeGraphBatch) -> ComputeGraphBatch:

@@ -9,8 +9,11 @@ Faithfully reproduces the production dataflow without the JVM/Kafka stack:
                             (the evolving backend of the shared GraphEngine)
   sequential join         → the shared K-hop :class:`TileBuilder` — the SAME
                             builder the trainer samples through (DESIGN.md §8)
-  nearline GNN inference  → shape-bucketed jitted encoder on the joined tiles
-  online feature store    → :class:`EmbeddingStore` (embedding + timestamp)
+  nearline GNN inference  → the :class:`EmbeddingLifecycle`'s batched
+                            priority recompute queue draining through the
+                            shape-bucketed jitted encoder (DESIGN.md §9)
+  online feature store    → versioned :class:`EmbeddingStore`
+                            (embedding + version + computed-at timestamp)
 
 Triggers (paper): (1) a recruiter creates a job posting; (2) new neighbors
 (members who applied/saved/clicked) arrive on an existing job.  Member
@@ -18,26 +21,34 @@ embeddings refresh symmetrically on engagement/profile events.
 
 The "stateful job marketplace graph" IS the StreamingEngine: bounded
 neighbor rings + feature store, bootstrapped from a snapshot and advanced by
-live events.  Because the trainer can consume the same engine, training and
-serving share one graph semantics — the paper's near-realtime inductive
-story.  The per-key scalar join survives only as a benchmark baseline (and
-as the pre-refactor bit-exactness oracle).
+live events.  Events dirty nodes through the lifecycle's staleness policy
+(endpoints only by default; the full K-hop dependency closure under
+``StalenessPolicy(closure_radius=None)``, which makes the incremental drain
+bit-equivalent to an offline full sweep — the §9 parity contract).  Every
+recompute samples from per-node deterministic uniform streams, so refreshed
+embeddings depend on the graph state, never on event batching.  The per-key
+scalar join survives only as a benchmark baseline (and as the pre-refactor
+bit-exactness oracle).
 """
 from __future__ import annotations
 
-import time as _time
 from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
 import numpy as np
 
 from repro.configs.linksage import GNNConfig
-from repro.core.engine import (ComputeGraphBatch, StreamingEngine, TileBuilder,
-                               bucket_pow2, hop_widths, pad_tile, slab_width)
-from repro.core.graph import NODE_TYPE_ID, NODE_TYPES
-from repro.core.stores import (EmbeddingStore, NeighborStore,  # noqa: F401
-                               NoSQLStore, RingBuffer)
+from repro.core.embeddings import (EmbeddingLifecycle,  # noqa: F401
+                                   EmbeddingStore, LifecycleMetrics,
+                                   StalenessPolicy)
+from repro.core.engine import (ComputeGraphBatch, StreamingEngine,
+                               hop_widths, slab_width)
+from repro.core.graph import NODE_TYPE_ID
+from repro.core.stores import (NeighborStore, NoSQLStore,  # noqa: F401
+                               RingBuffer)
+
+# nearline shares the lifecycle's counter set (summary() included)
+NearlineMetrics = LifecycleMetrics
 
 
 # --------------------------------------------------------------- messaging
@@ -78,40 +89,16 @@ class Topic:
 # -------------------------------------------------------------- inference
 
 
-@dataclass
-class NearlineMetrics:
-    events_processed: int = 0
-    batches: int = 0
-    nodes_refreshed: int = 0
-    encoder_seconds: float = 0.0
-    join_seconds: float = 0.0
-    encoder_traces: int = 0                         # jit retrace count
-    staleness: list = field(default_factory=list)   # event.time -> refresh time deltas
-    join_reads: int = 0
-
-    def summary(self) -> dict:
-        st = np.array(self.staleness) if self.staleness else np.array([0.0])
-        return {
-            "events": self.events_processed,
-            "batches": self.batches,
-            "nodes_refreshed": self.nodes_refreshed,
-            "encoder_ms_per_batch": 1e3 * self.encoder_seconds / max(self.batches, 1),
-            "join_ms_per_batch": 1e3 * self.join_seconds / max(self.batches, 1),
-            "encoder_traces": self.encoder_traces,
-            "staleness_p50_s": float(np.percentile(st, 50)),
-            "staleness_p99_s": float(np.percentile(st, 99)),
-            "join_reads": self.join_reads,
-        }
-
-
 class NearlineInference:
-    """The nearline pipeline: poll → update the streaming engine → shared
-    K-hop tile build → encode → push embeddings (Figure 4)."""
+    """The nearline pipeline: poll → update the streaming engine → dirty the
+    lifecycle → drain its priority queue through the shared K-hop tile build
+    + bucketed encoder → versioned embedding store (Figure 4)."""
 
     def __init__(self, cfg: GNNConfig, encoder_params, *, fanouts=None,
                  micro_batch: int = 64, max_neighbors: int = 64, seed: int = 0,
                  join_impl: str = "batched", jit_encoder: bool = True,
-                 strategy: str = "uniform"):
+                 strategy: str = "uniform", policy: StalenessPolicy | None = None,
+                 store: EmbeddingStore | None = None):
         assert join_impl in ("batched", "scalar"), join_impl
         # the scalar arm is the uniform-sampling oracle; it has no weighted walk
         assert join_impl == "batched" or strategy == "uniform", (join_impl, strategy)
@@ -124,11 +111,24 @@ class NearlineInference:
         self.topic = Topic("job-marketplace-events")
         self.engine = StreamingEngine(cfg.feat_dim, max_neighbors=max_neighbors,
                                       strategy=strategy)
-        self.builder = TileBuilder(self.engine, self.fanouts)
-        self.embedding_store = EmbeddingStore("gnn-embeddings")
-        self.metrics = NearlineMetrics()
-        self.rng = np.random.default_rng(seed)
-        self._encode = self._make_encode()  # shape-bucketed jitted encoder
+        self.lifecycle = EmbeddingLifecycle(
+            cfg, encoder_params, self.engine, fanouts=self.fanouts,
+            store=store, policy=policy, micro_batch=micro_batch, seed=seed,
+            tile_fn=self._sequential_join, jit_encoder=jit_encoder)
+        self.builder = self.lifecycle.builder
+
+    # lifecycle views (store/metrics live on the lifecycle now)
+    @property
+    def embedding_store(self) -> EmbeddingStore:
+        return self.lifecycle.store
+
+    @property
+    def metrics(self) -> NearlineMetrics:
+        return self.lifecycle.metrics
+
+    @metrics.setter
+    def metrics(self, m) -> None:
+        self.lifecycle.metrics = m
 
     # engine-store views (the stores belong to the StreamingEngine now)
     @property
@@ -139,70 +139,64 @@ class NearlineInference:
     def feature_store(self) -> NoSQLStore:
         return self.engine.feature_store
 
-    # ---- bucketed jitted encoder ----------------------------------------
-    def _make_encode(self):
-        from repro.core import encoder as enc
-        cfg = self.cfg
-
-        def fn(params, tile):
-            # trace-time side effect: counts (re)compilations per bucket
-            self.metrics.encoder_traces += 1
-            return enc.encoder_apply(params, cfg, tile)
-
-        return jax.jit(fn)
-
-    @staticmethod
-    def _bucket(n: int) -> int:
-        return bucket_pow2(n)
-
     # ---- store bootstrap (initial graph snapshot load) -------------------
     def bootstrap_from_graph(self, graph) -> None:
         self.engine.bootstrap_from_graph(graph)
+        self.lifecycle.observe_bootstrap(graph)
 
     # ---- event application ----------------------------------------------
+    def _add_edge(self, src_type: str, src_id: int, dst_type: str,
+                  dst_id: int) -> None:
+        self.engine.add_edge(src_type, src_id, dst_type, dst_id)
+        self.lifecycle.observe_edge((src_type, int(src_id)),
+                                    (dst_type, int(dst_id)))
+
     def _apply_event(self, ev: Event):
         touched = []
         p = ev.payload
         if ev.kind == "job_created":
             self.engine.put_feature(NODE_TYPE_ID["job"], p["job_id"], p["features"])
+            self.lifecycle.register("job", p["job_id"])
             for attr in ("title", "company", "position", "skill"):
                 if attr in p:
-                    self.engine.add_edge("job", p["job_id"], attr, p[attr])
-                    self.engine.add_edge(attr, p[attr], "job", p["job_id"])
+                    self._add_edge("job", p["job_id"], attr, p[attr])
+                    self._add_edge(attr, p[attr], "job", p["job_id"])
             touched.append(("job", p["job_id"], ev.time))
         elif ev.kind == "engagement":                  # member saved/applied/clicked
-            self.engine.add_edge("member", p["member_id"], "job", p["job_id"])
+            # both rings change: the member gains the job AND the job gains
+            # the member ("new neighbors arrive on an existing job", §5.2) —
+            # recomputes are deterministic per node, so an unchanged ring
+            # would mean an unchanged embedding
+            self._add_edge("member", p["member_id"], "job", p["job_id"])
+            self._add_edge("job", p["job_id"], "member", p["member_id"])
             touched.append(("job", p["job_id"], ev.time))
             touched.append(("member", p["member_id"], ev.time))
         elif ev.kind == "recruiter_interaction":       # recruiter reached out
-            self.engine.add_edge("job", p["job_id"], "member", p["member_id"])
+            self._add_edge("job", p["job_id"], "member", p["member_id"])
             touched.append(("job", p["job_id"], ev.time))
         elif ev.kind == "member_update":
             self.engine.put_feature(NODE_TYPE_ID["member"], p["member_id"],
                                     p["features"])
+            self.lifecycle.register("member", p["member_id"])
             touched.append(("member", p["member_id"], ev.time))
         return touched
 
     # ---- sequential join: node -> neighbors -> neighbor features ---------
     #
     # The production path is the shared TileBuilder over the StreamingEngine
-    # (~one vectorized sample + one deduped multi_get per hop).  The scalar
-    # per-key baseline consumes the SAME uniform stream in the same order
-    # (one rng.random(slab_width) slab per query node, row-major over hops)
-    # and shares the merged-neighbor-list offset contract, so it produces
-    # bit-identical tiles from the same seed — the pre-optimization
-    # O(B·F1···FK) oracle kept for benchmarking.
+    # (~one vectorized sample + one deduped multi_get per hop).  Both arms
+    # consume the lifecycle's per-node uniform slabs (one slab per query
+    # node, row-major over hops) and share the merged-neighbor-list offset
+    # contract, so the scalar per-key baseline produces bit-identical tiles
+    # — the pre-optimization O(B·F1···FK) oracle kept for benchmarking.
 
     def _sequential_join(self, nodes) -> ComputeGraphBatch:
-        reads0 = self.engine.join_reads
         if self.join_impl == "scalar":
+            reads0 = self.engine.join_reads
             tile = self._sequential_join_scalar(nodes)
-        else:
-            q_type = np.array([NODE_TYPE_ID[t] for t, _ in nodes], np.int64)
-            q_id = np.array([i for _, i in nodes], np.int64)
-            tile = self.builder.build(q_type, q_id, rng=self.rng)
-        self.metrics.join_reads += self.engine.join_reads - reads0
-        return tile
+            self.metrics.join_reads += self.engine.join_reads - reads0
+            return tile
+        return self.lifecycle.build_tile(nodes)   # accounts its own reads
 
     def _sequential_join_scalar(self, nodes) -> ComputeGraphBatch:
         fan = self.fanouts
@@ -218,7 +212,7 @@ class NearlineInference:
             typs.append(np.zeros(shape, np.int32))
             masks.append(np.zeros(shape, np.float32))
         for r, (ntype, nid) in enumerate(nodes):
-            u = self.rng.random(slab_width(fan))
+            u = self.lifecycle.uniform_slab(ntype, nid)
             tid = NODE_TYPE_ID[ntype]
             typs[0][r] = tid
             feats[0][r] = self.engine.get_feature(tid, nid)
@@ -245,6 +239,24 @@ class NearlineInference:
         return ComputeGraphBatch(tuple(feats), tuple(typs), tuple(masks))
 
     # ---- the nearline loop ------------------------------------------------
+    def ingest(self, *, upto_time: float | None = None,
+               max_events: int = 10**9) -> int:
+        """Apply pending events to the engine and dirty the lifecycle WITHOUT
+        recomputing (the offline publish path ingests a whole window, then
+        sweeps).  Returns #events applied."""
+        total = 0
+        while total < max_events:
+            events = self.topic.poll("nearline",
+                                     min(self.micro_batch, max_events - total),
+                                     upto_time=upto_time)
+            if not events:
+                break
+            for ev in events:
+                for (ntype, nid, t) in self._apply_event(ev):
+                    self.lifecycle.mark_dirty(ntype, nid, t)
+            total += len(events)
+        return total
+
     def process(self, *, upto_time: float | None = None, max_batches: int = 10**9,
                 clock: float | None = None) -> int:
         """Drain pending events in micro-batches; returns #events handled.
@@ -253,58 +265,49 @@ class NearlineInference:
         staleness accounting); defaults to each event's own time + a small
         pipeline delay, modelling the few-seconds nearline lag.
         """
-        from repro.core.linksage import _to_jnp  # local import (cycle)
-        from repro.core import encoder as enc
-
         total = 0
         for _ in range(max_batches):
             events = self.topic.poll("nearline", self.micro_batch, upto_time=upto_time)
             if not events:
                 break
-            touched: dict = {}
             for ev in events:
                 for (ntype, nid, t) in self._apply_event(ev):
-                    touched[(ntype, nid)] = t   # newest trigger wins
-            nodes = list(touched.keys())
-            t0 = _time.perf_counter()
-            tile = self._sequential_join(nodes)
-            self.metrics.join_seconds += _time.perf_counter() - t0
-            t0 = _time.perf_counter()
-            if self.jit_encoder:
-                # pad the tile to its power-of-two bucket: one compiled
-                # executable per bucket, reused across batches — steady-state
-                # nearline batches never retrace
-                tile = pad_tile(tile, self._bucket(len(nodes)))
-                emb = np.asarray(self._encode(self.params, _to_jnp(tile)))
-            else:
-                tile = pad_tile(tile, len(nodes) + (-len(nodes)) % 8)
-                emb = np.asarray(enc.encoder_apply(self.params, self.cfg,
-                                                   _to_jnp(tile)))
-            self.metrics.encoder_seconds += _time.perf_counter() - t0
+                    self.lifecycle.mark_dirty(ntype, nid, t)
             refresh_time = (clock if clock is not None
                             else max(ev.time for ev in events) + 2.0)
-            for r, (ntype, nid) in enumerate(nodes):
-                self.embedding_store.put_embedding(ntype, nid, emb[r], refresh_time)
-                self.metrics.staleness.append(refresh_time - touched[(ntype, nid)])
+            self.lifecycle.drain(clock=refresh_time)
             self.metrics.events_processed += len(events)
-            self.metrics.batches += 1
-            self.metrics.nodes_refreshed += len(nodes)
             total += len(events)
         return total
 
 
 class OfflineBatchInference:
     """The pre-nearline baseline (§5.2): daily batch job — embeddings refresh
-    only at day boundaries, so new jobs wait up to 24 h (Table 10 control)."""
+    only at day boundaries, so new jobs wait up to 24 h (Table 10 control).
 
-    def __init__(self, nearline: NearlineInference, *, period_s: float = 86_400.0):
+    ``mode="drain"`` replays the window through the incremental path at each
+    boundary (the legacy staleness baseline); ``mode="publish"`` ingests the
+    window and runs the lifecycle's full-sweep ``publish_version`` — every
+    registered node recomputed at the boundary graph state, frozen as a
+    numbered version (the offline side of the §9 parity contract).
+    """
+
+    def __init__(self, nearline: NearlineInference, *, period_s: float = 86_400.0,
+                 mode: str = "drain"):
+        assert mode in ("drain", "publish"), mode
         self.inner = nearline
         self.period = period_s
+        self.mode = mode
         self.last_run = 0.0
 
     def maybe_run(self, now: float) -> int:
         ran = 0
         while self.last_run + self.period <= now:
             self.last_run += self.period
-            ran += self.inner.process(upto_time=self.last_run, clock=self.last_run)
+            if self.mode == "publish":
+                ran += self.inner.ingest(upto_time=self.last_run)
+                self.inner.lifecycle.publish_version(clock=self.last_run)
+            else:
+                ran += self.inner.process(upto_time=self.last_run,
+                                          clock=self.last_run)
         return ran

@@ -7,10 +7,11 @@ and the nearline pipeline are built from:
                     (models the real store's scalar vs batched RPCs)
   RingBuffer      — array-backed bounded neighbor rings for one edge type
   NeighborStore   — per-edge-type rings keyed by (node_type, id)
-  EmbeddingStore  — online feature store: (node_type, id) -> (emb, time)
 
-The messaging layer (Topic/Event) stays in :mod:`repro.core.nearline`;
-stores carry no event semantics of their own.
+The messaging layer (Topic/Event) stays in :mod:`repro.core.nearline`, and
+the versioned online :class:`repro.core.embeddings.EmbeddingStore` lives in
+the embedding-lifecycle module; these primitives carry no event or version
+semantics of their own.
 """
 from __future__ import annotations
 
@@ -218,14 +219,3 @@ class NeighborStore:
                 out_ty[rows[rr], ff] = dtid
             out_mask[rows] = 1.0
         return out_ty, out_id, out_mask
-
-
-class EmbeddingStore(NoSQLStore):
-    """Online feature store: (node_type, id) -> (embedding, refresh_time)."""
-
-    def put_embedding(self, node_type: str, node_id: int, emb: np.ndarray,
-                      t: float) -> None:
-        self.put((node_type, int(node_id)), (emb, t))
-
-    def get_embedding(self, node_type: str, node_id: int):
-        return self.get((node_type, int(node_id)))

@@ -1,23 +1,38 @@
-"""Transfer learning: frozen GNN encoder → downstream ranking DNNs (§5.1).
+"""Transfer learning: frozen GNN encoder → per-surface downstream DNNs
+(§5.1, §7).
 
-Mirrors Figure 3 (right): the downstream job-matching model concatenates the
+Mirrors Figure 3 (right): each downstream model concatenates the
 *precomputed* GNN member/job embeddings with other relevant features and
-trains its own objective; the GNN encoder is never updated here.  Each
-product surface from §7 has a head:
+trains its own objective; the GNN encoder is never updated here.  Every §7
+product surface has a real head in the :data:`SURFACES` registry:
 
-  * TAJ      — predicts recruiter interaction after an application
-  * JYMBII   — predicts qualified application (personalized recommendations)
-  * JobSearch— ranking head with a query-affinity feature
-  * EBR      — embedding-based retrieval (two-tower projection of GNN embs)
+  * taj       — Talent-Asset-Job: predicts recruiter interaction after an
+                application (MLP ranker, §7.1)
+  * jymbii    — Jobs-You-May-Be-Interested-In: predicts qualified
+                application (MLP ranker, §7.2)
+  * jobsearch — search ranking head with a query-affinity feature: the
+                query embedding is projected into GNN space and its cosine
+                against the job's GNN embedding rides along as an explicit
+                feature (§7.3)
+  * ebr       — embedding-based retrieval: a genuine two-tower projection
+                of (features ⊕ GNN embeddings), evaluated with
+                ``eval.recall_at_k`` retrieval (§7.4)
 
-To avoid label leakage (§5.1) the caller must train the GNN on engagement
-data strictly *preceding* the ranker's label window — enforced here by
-accepting the embeddings as plain arrays (whatever snapshot produced them).
+Label-leakage safety (§5.1): heads train on embeddings read out of the
+versioned :class:`repro.core.embeddings.EmbeddingStore` at an *explicit
+published version* (``store.gather(..., version=v)``) — training the GNN on
+engagement data strictly preceding the ranker's label window is enforced by
+the version pin, not by convention.  :class:`MultiSurfaceTrainer` trains all
+registered heads in one jitted step that gathers the member/job embedding
+rows from the version-pinned tables ONCE and fans them out to every head.
+
+The generic :class:`DownstreamRanker` (one MLP head over plain arrays) is
+retained as the minimal single-surface path.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import NamedTuple
 
 import jax
@@ -28,6 +43,9 @@ from repro import nn
 from repro.optim import adamw_init, adamw_update
 
 
+# ------------------------------------------------------------ generic head
+
+
 @dataclass(frozen=True)
 class RankerConfig:
     name: str = "jymbii"
@@ -36,6 +54,8 @@ class RankerConfig:
     hidden: int = 256
     use_gnn: bool = True             # ablation switch (the A/B control arm)
     num_hidden_layers: int = 2
+    query_dim: int = 0               # jobsearch: width of the query feature
+    tower_dim: int = 64              # ebr: retrieval embedding width
 
 
 def ranker_init(key, cfg: RankerConfig):
@@ -129,3 +149,256 @@ def build_ranker_dataset(member_feat, job_feat, m_gnn, j_gnn, pairs, labels,
         ds["m_gnn"] = m_gnn[m_idx].astype(np.float32)
         ds["j_gnn"] = j_gnn[j_idx].astype(np.float32)
     return ds
+
+
+# --------------------------------------------------------- surface registry
+#
+# A surface is a stateless head definition: init(key, cfg) -> params and
+# apply(params, cfg, batch) -> logits over a gathered per-pair batch with
+# keys m_feat/j_feat [B, f], m_gnn/j_gnn [B, e] and (jobsearch) q_feat
+# [B, q].  Losses are sigmoid-CE against batch["label"]; EBR additionally
+# exposes its towers for recall@k retrieval evaluation.
+
+
+SURFACES: dict = {}
+
+
+def register_surface(cls):
+    SURFACES[cls.name] = cls()
+    return cls
+
+
+class Surface:
+    """Base: the MLP ranker over concat(features, GNN embeddings)."""
+
+    name = "base"
+
+    def init(self, key, cfg: RankerConfig):
+        return ranker_init(key, cfg)
+
+    def apply(self, params, cfg: RankerConfig, batch):
+        return ranker_apply(params, cfg, batch["m_feat"], batch["j_feat"],
+                            batch.get("m_gnn"), batch.get("j_gnn"))
+
+    def loss(self, params, cfg: RankerConfig, batch):
+        return _bce(self.apply(params, cfg, batch), batch["label"])
+
+
+@register_surface
+class TAJSurface(Surface):
+    """Talent-Asset-Job: recruiter-interaction-after-application (§7.1)."""
+    name = "taj"
+
+
+@register_surface
+class JYMBIISurface(Surface):
+    """Jobs-You-May-Be-Interested-In: qualified application (§7.2)."""
+    name = "jymbii"
+
+
+@register_surface
+class JobSearchSurface(Surface):
+    """Search ranking with a query-affinity feature (§7.3): the query is
+    projected into the job-embedding space and its cosine against the job
+    tower rides along as an explicit scalar feature.  The control arm
+    (use_gnn=False) computes the affinity against the raw job features, so
+    the ablation isolates the GNN signal rather than the feature's shape."""
+
+    name = "jobsearch"
+
+    def init(self, key, cfg: RankerConfig):
+        assert cfg.query_dim > 0, "jobsearch needs query_dim"
+        k1, k2 = jax.random.split(key)
+        d_in = (2 * cfg.other_feat_dim + cfg.query_dim + 1
+                + (2 * cfg.gnn_embed_dim if cfg.use_gnn else 0))
+        ks = jax.random.split(k1, cfg.num_hidden_layers + 1)
+        layers = []
+        d = d_in
+        for i in range(cfg.num_hidden_layers):
+            layers.append(nn.dense_init(ks[i], d, cfg.hidden, use_bias=True))
+            d = cfg.hidden
+        target = cfg.gnn_embed_dim if cfg.use_gnn else cfg.other_feat_dim
+        return {"layers": layers, "out": nn.dense_init(ks[-1], d, 1, use_bias=True),
+                "query_proj": nn.dense_init(k2, cfg.query_dim, target)}
+
+    def apply(self, params, cfg: RankerConfig, batch):
+        q = nn.dense_apply(params["query_proj"], batch["q_feat"])
+        target = batch["j_gnn"] if cfg.use_gnn else batch["j_feat"]
+        affinity = (jnp.sum(q * target, axis=-1)
+                    / (jnp.linalg.norm(q, axis=-1)
+                       * jnp.linalg.norm(target, axis=-1) + 1e-6))
+        parts = [batch["m_feat"], batch["j_feat"], batch["q_feat"],
+                 affinity[..., None]]
+        if cfg.use_gnn:
+            parts += [batch["m_gnn"], batch["j_gnn"]]
+        x = jnp.concatenate(parts, axis=-1)
+        for layer in params["layers"]:
+            x = jax.nn.gelu(nn.dense_apply(layer, x))
+        return nn.dense_apply(params["out"], x)[..., 0]
+
+
+@register_surface
+class EBRSurface(Surface):
+    """Embedding-based retrieval (§7.4): a genuine two-tower projection —
+    member tower over (member features ⊕ member GNN emb), job tower over
+    (job features ⊕ job GNN emb) — trained on engagement labels via the
+    dot-product score and evaluated with ``eval.recall_at_k``."""
+
+    name = "ebr"
+
+    def _tower_init(self, key, d_in, cfg: RankerConfig):
+        k1, k2 = jax.random.split(key)
+        return {"h": nn.dense_init(k1, d_in, cfg.hidden, use_bias=True),
+                "out": nn.dense_init(k2, cfg.hidden, cfg.tower_dim, use_bias=True)}
+
+    @staticmethod
+    def _tower_apply(tp, x):
+        return nn.dense_apply(tp["out"], jax.nn.gelu(nn.dense_apply(tp["h"], x)))
+
+    def init(self, key, cfg: RankerConfig):
+        d_in = cfg.other_feat_dim + (cfg.gnn_embed_dim if cfg.use_gnn else 0)
+        k1, k2 = jax.random.split(key)
+        return {"m_tower": self._tower_init(k1, d_in, cfg),
+                "j_tower": self._tower_init(k2, d_in, cfg)}
+
+    def towers(self, params, cfg: RankerConfig, m_in, j_in):
+        """(member inputs [M, d_in], job inputs [J, d_in]) -> the retrieval
+        vectors ([M, t], [J, t]); score(i, j) = m_vec_i · j_vec_j."""
+        return (self._tower_apply(params["m_tower"], m_in),
+                self._tower_apply(params["j_tower"], j_in))
+
+    @staticmethod
+    def tower_inputs(cfg: RankerConfig, feat, gnn):
+        return (jnp.concatenate([feat, gnn], axis=-1) if cfg.use_gnn else feat)
+
+    def apply(self, params, cfg: RankerConfig, batch):
+        m_vec, j_vec = self.towers(
+            params, cfg,
+            self.tower_inputs(cfg, batch["m_feat"], batch.get("m_gnn")),
+            self.tower_inputs(cfg, batch["j_feat"], batch.get("j_gnn")))
+        return jnp.sum(m_vec * j_vec, axis=-1)
+
+
+def surface_configs(names=None, **overrides) -> dict:
+    """Per-surface RankerConfigs with shared overrides applied; jobsearch
+    defaults its query_dim to the member feature width if unset."""
+    names = tuple(names or SURFACES)
+    out = {}
+    for name in names:
+        cfg = replace(RankerConfig(name=name), **overrides)
+        if name == "jobsearch" and cfg.query_dim == 0:
+            cfg = replace(cfg, query_dim=cfg.other_feat_dim)
+        out[name] = cfg
+    return out
+
+
+# ------------------------------------------------- multi-surface training
+
+
+class MultiSurfaceTrainer:
+    """All registered surface heads trained together over version-pinned
+    embedding tables.
+
+    The jitted step takes the per-node tables (member/job features, GNN
+    embeddings from ``EmbeddingStore.gather(..., version=v)``, query
+    features) plus an index batch, gathers each table's rows ONCE, and
+    feeds the shared gathered batch to every head — one embedding gather
+    serving four surfaces, the §5.1 "decoupled encoder, many consumers"
+    dataflow in one XLA program.
+    """
+
+    def __init__(self, cfgs: dict, seed: int = 0):
+        self.cfgs = dict(cfgs)
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(self.cfgs))
+        params = {name: SURFACES[name].init(k, cfg)
+                  for k, (name, cfg) in zip(keys, self.cfgs.items())}
+        self.state = RankerState(params, adamw_init(params))
+        self._step_cache: dict = {}
+
+    # tables: m_feat [M,f], j_feat [J,f], m_gnn [M,e], j_gnn [J,e],
+    #         q_feat [M,q] (jobsearch's query table, member-aligned)
+    def _gathered_batch(self, tables, m_idx, j_idx):
+        b = {"m_feat": tables["m_feat"][m_idx], "j_feat": tables["j_feat"][j_idx]}
+        if "m_gnn" in tables:
+            b["m_gnn"] = tables["m_gnn"][m_idx]        # THE shared gather
+            b["j_gnn"] = tables["j_gnn"][j_idx]
+        if "q_feat" in tables:
+            b["q_feat"] = tables["q_feat"][m_idx]
+        return b
+
+    def _make_step(self, lr: float):
+        cfg_items = tuple(self.cfgs.items())
+
+        def step(state, tables, m_idx, j_idx, labels):
+            def lf(p):
+                shared = self._gathered_batch(tables, m_idx, j_idx)
+                per = {}
+                for name, cfg in cfg_items:
+                    batch = dict(shared, label=labels[name])
+                    per[name] = SURFACES[name].loss(p[name], cfg, batch)
+                total = sum(per.values())
+                return total, per
+
+            (_, per), grads = jax.value_and_grad(lf, has_aux=True)(state.params)
+            params, opt = adamw_update(state.params, grads, state.opt, lr=lr,
+                                       weight_decay=1e-4)
+            return RankerState(params, opt), per
+
+        return jax.jit(step)
+
+    def _get_step(self, lr: float):
+        if lr not in self._step_cache:
+            self._step_cache[lr] = self._make_step(lr)
+        return self._step_cache[lr]
+
+    def fit(self, tables: dict, pairs, labels: dict, *, epochs: int = 5,
+            batch_size: int = 256, lr: float = 1e-3, seed: int = 0):
+        """``pairs`` = (m_idx [N], j_idx [N]); ``labels[name]`` = [N] per
+        surface.  Returns the per-surface loss history."""
+        m_idx, j_idx = (np.asarray(pairs[0]), np.asarray(pairs[1]))
+        n = len(m_idx)
+        assert n > 0, "fit needs at least one pair"
+        batch_size = min(batch_size, n)     # small datasets still take steps
+        dev_tables = {k: jnp.asarray(v) for k, v in tables.items()}
+        labels = {k: np.asarray(v, np.float32) for k, v in labels.items()}
+        step = self._get_step(lr)
+        rng = np.random.default_rng(seed)
+        history = {name: [] for name in self.cfgs}
+        for _ in range(epochs):
+            order = rng.permutation(n)
+            for i in range(0, n - batch_size + 1, batch_size):
+                idx = order[i:i + batch_size]
+                lb = {k: jnp.asarray(v[idx]) for k, v in labels.items()}
+                self.state, per = step(self.state, dev_tables,
+                                       jnp.asarray(m_idx[idx]),
+                                       jnp.asarray(j_idx[idx]), lb)
+                for name, l in per.items():
+                    history[name].append(float(l))
+        return history
+
+    def score(self, tables: dict, pairs, batch_size: int = 2048) -> dict:
+        """Per-surface logits for explicit (m_idx, j_idx) pairs."""
+        m_idx, j_idx = (np.asarray(pairs[0]), np.asarray(pairs[1]))
+        dev_tables = {k: jnp.asarray(v) for k, v in tables.items()}
+        out = {name: [] for name in self.cfgs}
+        for i in range(0, len(m_idx), batch_size):
+            batch = self._gathered_batch(dev_tables,
+                                         jnp.asarray(m_idx[i:i + batch_size]),
+                                         jnp.asarray(j_idx[i:i + batch_size]))
+            for name, cfg in self.cfgs.items():
+                out[name].append(np.asarray(
+                    SURFACES[name].apply(self.state.params[name], cfg, batch)))
+        return {name: np.concatenate(v) for name, v in out.items()}
+
+    def ebr_vectors(self, tables: dict):
+        """Full member/job retrieval vectors from the EBR two-tower head."""
+        cfg = self.cfgs["ebr"]
+        ebr = SURFACES["ebr"]
+
+        def dev(key):
+            return jnp.asarray(tables[key]) if key in tables else None
+
+        m_in = ebr.tower_inputs(cfg, dev("m_feat"), dev("m_gnn"))
+        j_in = ebr.tower_inputs(cfg, dev("j_feat"), dev("j_gnn"))
+        m_vec, j_vec = ebr.towers(self.state.params["ebr"], cfg, m_in, j_in)
+        return np.asarray(m_vec), np.asarray(j_vec)

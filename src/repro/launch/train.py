@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import parallel as par
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.configs import get_config, get_smoke_config
 from repro.data.lm_data import SyntheticTokenStream
 from repro.launch.mesh import make_local_mesh, make_production_mesh
@@ -64,6 +64,10 @@ def gnn_main(args):
     mesh = jax.make_mesh((ndev,), ("data",))
     tr = LinkSAGETrainer(cfg, g, seed=0, prefetch=args.prefetch, mesh=mesh,
                          engine=engine)
+    if args.resume:
+        step0 = tr.restore_checkpoint(args.resume)
+        print(f"resumed full TrainState (params + opt) at step {step0} "
+              f"from {args.resume}")
     print(f"arch=linksage devices={ndev} batch={batch} "
           f"backend={args.graph_backend} fanouts={cfg.fanouts} "
           f"prefetch={args.prefetch} graph={g.census()['nodes']}")
@@ -85,6 +89,9 @@ def gnn_main(args):
         hist2 = tr.train(max(args.steps // 5, 1), batch_size=batch, lr=args.lr)
         print(f"after {n_events} live events: loss {hist2[-1]['loss']:.4f} "
               "(training continued on the evolved store)")
+    if args.checkpoint_dir:
+        path = tr.save_checkpoint(args.checkpoint_dir)
+        print(f"full TrainState checkpoint saved to {path}")
 
 
 def main():
@@ -97,7 +104,11 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="save the full TrainState (params + opt) here at exit")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="restore the latest full-TrainState checkpoint from "
+                         "DIR before training (structural template check)")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="GNN sampler pipeline depth (0 = synchronous)")
     ap.add_argument("--graph-backend", choices=("snapshot", "streaming"),
@@ -127,6 +138,14 @@ def main():
     print(f"arch={cfg.name} params={param_count(params):,} "
           f"mesh={dict(mesh.shape)}")
     opt = adamw_init(params)
+    step0 = 0
+    if args.resume:
+        step0 = latest_step(args.resume)
+        assert step0 is not None, f"no checkpoints under {args.resume}"
+        restored = load_checkpoint(args.resume, step0,
+                                   {"params": params, "opt": opt})
+        params, opt = restored["params"], restored["opt"]
+        print(f"resumed params + opt at step {step0} from {args.resume}")
 
     pspecs = par.param_pspecs(cfg, params, mesh)
     pshard = par.shardings_of(pspecs, mesh)
@@ -156,8 +175,11 @@ def main():
             print(f"step {i:4d} loss {float(m['loss']):.4f} "
                   f"({time.time() - t0:.0f}s)")
     if args.checkpoint_dir:
-        save_checkpoint(args.checkpoint_dir, args.steps, params)
-        print("checkpoint saved")
+        # cumulative step label: a resumed run must not overwrite the
+        # checkpoint it resumed from
+        save_checkpoint(args.checkpoint_dir, step0 + args.steps,
+                        {"params": params, "opt": opt})
+        print(f"full checkpoint (params + opt) saved at step {step0 + args.steps}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,163 @@
+"""Transfer launcher: ``python -m repro.launch.transfer [--smoke]``.
+
+The full §5–§7 serving loop as one job:
+
+  1. train the LinkSAGE encoder on engagement link prediction (§4)
+  2. ``publish_version()`` — the offline full-sweep inference job writes
+     every member/job embedding into the versioned EmbeddingStore (§5.2)
+  3. fit ALL four product-surface heads (TAJ / JYMBII / JobSearch / EBR)
+     from embeddings read out of the store at that explicit version, via
+     the jitted multi-surface step sharing one embedding gather (§5.1, §7)
+  4. repeat with ``use_gnn=False`` (the A/B control arm) and print the
+     GNN-vs-control report: AUC per ranking surface, recall@k for EBR
+
+The report's EBR row is the acceptance gate: the two-tower head with GNN
+embeddings must beat the feature-only control on recall@k.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.eval import auc, recall_at_k
+from repro.core.linksage import LinkSAGETrainer
+from repro.core.transfer import MultiSurfaceTrainer, surface_configs
+from repro.data import GraphGenConfig, generate_job_marketplace_graph
+
+
+def build_surface_datasets(graph, truth, *, num_members, num_jobs, seed=0):
+    """Per-surface label table over one shared pair list (so the multi-
+    surface step's single gather genuinely serves every head).
+
+    Pairs: the positive engagement edges plus an equal number of random
+    pairs.  Labels per surface:
+      jymbii    — qualified application: 1 on engagement edges
+      taj       — recruiter interaction after application: Bernoulli in the
+                  ground-truth match quality (recruiters reach out to good
+                  matches; §7.1)
+      jobsearch — relevance of the job to the member's *query*: the
+                  engagement label again, with the query feature table
+                  (noisy member intent) riding along
+      ebr       — retrieval positives: the engagement label
+    """
+    rng = np.random.default_rng(seed)
+    src, dst = truth["engagements"]
+    n = len(src)
+    m_idx = np.concatenate([src, rng.integers(0, num_members, n)]).astype(np.int32)
+    j_idx = np.concatenate([dst, rng.integers(0, num_jobs, n)]).astype(np.int32)
+    eng_label = np.concatenate([np.ones(n), np.zeros(n)]).astype(np.float32)
+
+    logit = truth["match_logit"](m_idx, j_idx)
+    p_recruiter = 1.0 / (1.0 + np.exp(-(2.0 * logit - 2.0)))
+    taj_label = (rng.random(len(m_idx)) < p_recruiter).astype(np.float32)
+
+    labels = {"jymbii": eng_label, "taj": taj_label,
+              "jobsearch": eng_label, "ebr": eng_label}
+
+    # weak "other features" (production rankers already have features; the
+    # GNN adds the graph signal they lack) + the search-query table
+    weak_m = (graph.features["member"] * 0.1
+              + rng.normal(size=graph.features["member"].shape)).astype(np.float32)
+    weak_j = (graph.features["job"] * 0.1
+              + rng.normal(size=graph.features["job"].shape)).astype(np.float32)
+    q_feat = (graph.features["member"]
+              + 0.5 * rng.normal(size=graph.features["member"].shape)).astype(np.float32)
+    return (m_idx, j_idx), labels, {"m_feat": weak_m, "j_feat": weak_j,
+                                    "q_feat": q_feat}
+
+
+def fit_surfaces(tables, pairs, labels, *, embed_dim, feat_dim, use_gnn,
+                 epochs, eval_truth, seed=0, k=10):
+    """Fit one MultiSurfaceTrainer arm; returns {surface: metric}."""
+    cfgs = surface_configs(other_feat_dim=feat_dim, gnn_embed_dim=embed_dim,
+                           use_gnn=use_gnn, hidden=128,
+                           query_dim=tables["q_feat"].shape[1])
+    mst = MultiSurfaceTrainer(cfgs, seed=seed)
+    n = len(pairs[0])
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n)
+    tr_idx, te_idx = order[:int(0.8 * n)], order[int(0.8 * n):]
+    tr_pairs = (pairs[0][tr_idx], pairs[1][tr_idx])
+    te_pairs = (pairs[0][te_idx], pairs[1][te_idx])
+    mst.fit(tables, tr_pairs, {k_: v[tr_idx] for k_, v in labels.items()},
+            epochs=epochs, seed=seed)
+    scores = mst.score(tables, te_pairs)
+    report = {name: auc(labels[name][te_idx], s)
+              for name, s in scores.items() if name != "ebr"}
+
+    # EBR: genuine retrieval over the full corpus, not pair scoring
+    src, dst = eval_truth
+    m_vec, j_vec = mst.ebr_vectors(tables)
+    positives = [set() for _ in range(m_vec.shape[0])]
+    for m, j in zip(src, dst):
+        positives[m].add(int(j))
+    members = np.array([i for i, p in enumerate(positives) if p])
+    report["ebr"] = recall_at_k((m_vec @ j_vec.T)[members],
+                                [positives[i] for i in members], k=k)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--members", type=int, default=600)
+    ap.add_argument("--jobs", type=int, default=180)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--epochs", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.members, args.jobs = min(args.members, 200), min(args.jobs, 60)
+        args.steps, args.epochs = min(args.steps, 60), min(args.epochs, 3)
+
+    from dataclasses import replace
+    from repro.configs.linksage import CONFIG
+    cfg = replace(CONFIG, hidden_dim=64, embed_dim=64, fanouts=(8, 4))
+
+    graph, truth = generate_job_marketplace_graph(
+        GraphGenConfig(num_members=args.members, num_jobs=args.jobs,
+                       seed=args.seed))
+    print(f"graph: {graph.census()['total_edges']} edges")
+
+    # 1. GNN training ------------------------------------------------------
+    tr = LinkSAGETrainer(cfg, graph, seed=args.seed)
+    hist = tr.train(args.steps, batch_size=64)
+    print(f"GNN loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    # 2. offline sweep into the versioned store ----------------------------
+    lc = tr.make_lifecycle()
+    version = lc.publish_version(clock=0.0)
+    print(f"published version {version}: "
+          f"{len(lc.store.table(version))} embeddings "
+          f"({lc.metrics.batches} sweep batches)")
+
+    # 3./4. per-surface fit, GNN arm vs control arm ------------------------
+    pairs, labels, feat_tables = build_surface_datasets(
+        graph, truth, num_members=args.members, num_jobs=args.jobs,
+        seed=args.seed)
+    m_gnn = lc.store.gather("member", np.arange(args.members), version=version)
+    j_gnn = lc.store.gather("job", np.arange(args.jobs), version=version)
+
+    report = {}
+    for arm, tables in (("gnn", dict(feat_tables, m_gnn=m_gnn, j_gnn=j_gnn)),
+                        ("control", dict(feat_tables))):
+        report[arm] = fit_surfaces(
+            tables, pairs, labels, embed_dim=cfg.embed_dim,
+            feat_dim=graph.feat_dim, use_gnn=(arm == "gnn"),
+            epochs=args.epochs, seed=args.seed,
+            eval_truth=truth["engagements"])
+
+    print(f"\n{'surface':<10} {'metric':<9} {'gnn':>8} {'control':>8} {'lift':>8}")
+    for name in report["gnn"]:
+        metric = "recall@10" if name == "ebr" else "auc"
+        g, c = report["gnn"][name], report["control"][name]
+        print(f"{name:<10} {metric:<9} {g:>8.4f} {c:>8.4f} {g - c:>+8.4f}")
+    ebr_ok = report["gnn"]["ebr"] > report["control"]["ebr"]
+    print(f"\nEBR acceptance (gnn > control on recall@10): "
+          f"{'PASS' if ebr_ok else 'FAIL'}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,289 @@
+"""The versioned embedding lifecycle (DESIGN.md §9): store versioning,
+staleness policy, dirty closure, the priority recompute queue, and the
+sweep-vs-incremental bit-parity contract."""
+import numpy as np
+import jax
+import pytest
+from dataclasses import replace
+
+from repro.configs.linksage import smoke as gnn_smoke
+from repro.core import encoder as enc
+from repro.core.embeddings import (EmbeddingLifecycle, EmbeddingRecord,
+                                   EmbeddingStore, RecomputeQueue,
+                                   StalenessPolicy, node_uniform_slab,
+                                   tables_bitwise_equal)
+from repro.core.nearline import Event, NearlineInference
+from repro.data import GraphGenConfig, generate_job_marketplace_graph
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g, truth = generate_job_marketplace_graph(
+        GraphGenConfig(num_members=120, num_jobs=40, seed=5))
+    cfg = replace(gnn_smoke(), feat_dim=g.feat_dim)
+    params = enc.encoder_init(jax.random.PRNGKey(0), cfg)
+    return g, cfg, params
+
+
+def _event_stream(g, rng, n=60):
+    """Engagements + fresh job postings (the two §5.2 trigger kinds)."""
+    events = []
+    base_job = g.num_nodes["job"]
+    for i in range(n):
+        if i % 12 == 0:
+            events.append(Event(time=float(i), kind="job_created", payload={
+                "job_id": base_job + i,
+                "features": rng.normal(size=g.feat_dim).astype(np.float32),
+                "title": int(rng.integers(0, g.num_nodes["title"])),
+                "skill": int(rng.integers(0, g.num_nodes["skill"]))}))
+        else:
+            events.append(Event(time=float(i), kind="engagement", payload={
+                "member_id": int(rng.integers(0, g.num_nodes["member"])),
+                "job_id": int(rng.integers(0, g.num_nodes["job"]))}))
+    return events
+
+
+# ----------------------------------------------------------------- store
+
+
+def test_store_versioning_and_gather():
+    st = EmbeddingStore("t")
+    st.put_embedding("job", 1, np.ones(4, np.float32), 1.0)
+    rec = st.record("job", 1)
+    assert isinstance(rec, EmbeddingRecord)
+    assert rec.version == 1 and rec.time == 1.0       # in-flight toward v1
+    assert st.get_embedding("job", 1)[1] == 1.0       # legacy (emb, t) view
+    v1 = st.publish()
+    assert v1 == 1 and st.published_versions() == [1]
+    # live writes after publish do not mutate the frozen table
+    st.put_embedding("job", 1, 2 * np.ones(4, np.float32), 2.0)
+    assert np.all(st.table(1)[("job", 1)].emb == 1.0)
+    got = st.gather("job", [1], version=1)
+    assert got.shape == (1, 4) and np.all(got == 1.0)
+
+
+def test_store_gather_is_leakage_safe():
+    """Reads require an explicit PUBLISHED version; unpublished versions and
+    nodes missing from the version are hard errors."""
+    st = EmbeddingStore("t")
+    st.put_embedding("job", 1, np.ones(4, np.float32), 1.0)
+    with pytest.raises(KeyError):
+        st.gather("job", [1], version=1)              # not published yet
+    st.publish()
+    with pytest.raises(KeyError):
+        st.gather("job", [2], version=1)              # node not in v1
+    assert st.gather("job", [1], version=1).shape == (1, 4)
+
+
+def test_tables_bitwise_equal_comparator():
+    a = {("job", 1): np.float32([1.0, 2.0])}
+    assert tables_bitwise_equal(a, {("job", 1): np.float32([1.0, 2.0])})
+    assert not tables_bitwise_equal(
+        a, {("job", 1): np.float32([1.0, np.nextafter(np.float32(2.0),
+                                                      np.float32(3.0))])})
+    assert not tables_bitwise_equal(a, {})
+
+
+# --------------------------------------------------------------- queue
+
+
+def test_recompute_queue_priority_and_dedup():
+    q = RecomputeQueue()
+    pol = StalenessPolicy()
+    q.push(("member", 1), pol.priority("member", 5.0), 5.0)
+    q.push(("job", 2), pol.priority("job", 5.0), 5.0)
+    q.push(("job", 3), pol.priority("job", 1.0), 1.0)
+    # re-push of an existing key keeps the EARLIEST trigger
+    q.push(("job", 2), pol.priority("job", 0.5), 0.5)
+    assert len(q) == 3
+    batch = q.pop_batch(2)
+    # oldest trigger first; jobs outrank members at equal time
+    assert batch[0] == (("job", 2), 0.5)
+    assert batch[1] == (("job", 3), 1.0)
+    assert q.pop_batch(10) == [(("member", 1), 5.0)]
+    assert len(q) == 0 and q.pop_batch(4) == []
+
+
+def test_recompute_queue_repush_after_pop_keeps_order():
+    """Regression: a key re-pushed AFTER being popped must rank at its new
+    priority — stale heap entries from before the pop must not resurface
+    it ahead of genuinely older dirt."""
+    q = RecomputeQueue()
+    pol = StalenessPolicy()
+    q.push(("job", 1), pol.priority("job", 1.0), 1.0)
+    q.push(("job", 1), pol.priority("job", 2.0), 2.0)   # stale entry stays
+    assert q.pop_batch(1) == [(("job", 1), 1.0)]
+    q.push(("job", 9), pol.priority("job", 10.0), 10.0)
+    q.push(("job", 1), pol.priority("job", 50.0), 50.0)
+    assert q.pop_batch(2) == [(("job", 9), 10.0), (("job", 1), 50.0)]
+
+
+def test_staleness_policy_radius_and_priority():
+    assert StalenessPolicy().radius(2) == 0
+    assert StalenessPolicy(closure_radius=None).radius(3) == 3
+    assert StalenessPolicy(closure_radius=1).radius(3) == 1
+    pol = StalenessPolicy()
+    assert pol.priority("job", 1.0) < pol.priority("member", 1.0)
+    assert pol.priority("member", 1.0) < pol.priority("job", 2.0)
+
+
+# ------------------------------------------------------------ lifecycle
+
+
+def test_per_node_uniform_slabs_are_order_independent():
+    a = node_uniform_slab(7, "member", 3, 20)
+    assert np.array_equal(a, node_uniform_slab(7, "member", 3, 20))
+    assert not np.array_equal(a, node_uniform_slab(7, "member", 4, 20))
+    assert not np.array_equal(a, node_uniform_slab(8, "member", 3, 20))
+
+
+def test_dirty_closure_radius(setup):
+    g, cfg, params = setup
+    nl = NearlineInference(cfg, params, seed=0,
+                           policy=StalenessPolicy(closure_radius=None))
+    nl.bootstrap_from_graph(g)
+    lc = nl.lifecycle
+    # radius 0 == the touched node itself
+    lc.policy = StalenessPolicy(closure_radius=0)
+    assert lc.dirty_closure({("member", 3)}) == {("member", 3)}
+    # radius K grows monotonically and stays a superset
+    lc.policy = StalenessPolicy(closure_radius=1)
+    c1 = lc.dirty_closure({("member", 3)})
+    lc.policy = StalenessPolicy(closure_radius=None)   # K = len(fanouts)
+    cK = lc.dirty_closure({("member", 3)})
+    assert {("member", 3)} < c1 <= cK
+    # closure contains exactly the reverse-reachable ball: every node with
+    # an edge INTO member 3 is in c1
+    assert lc._rev[("member", 3)] <= c1
+
+
+def test_drain_writes_inflight_records_and_staleness(setup):
+    g, cfg, params = setup
+    nl = NearlineInference(cfg, params, micro_batch=16, seed=0)
+    nl.bootstrap_from_graph(g)
+    nl.topic.publish(Event(time=4.0, kind="engagement",
+                           payload={"member_id": 2, "job_id": 3}))
+    nl.process(clock=6.5)
+    rec = nl.embedding_store.record("job", 3)
+    assert rec.version == 1 and rec.time == 6.5       # toward 1st publish
+    assert nl.metrics.staleness[-2:] == [2.5, 2.5]    # 6.5 - 4.0, both ends
+    v = nl.lifecycle.publish_version(clock=7.0)
+    assert v == 1
+    assert nl.embedding_store.record("job", 3).version == 1
+
+
+def test_drain_order_does_not_change_bits(setup):
+    """Two pipelines, same events in different micro-batch groupings, end
+    with bit-identical live embeddings — per-node uniform streams plus the
+    full dependency closure (radius 0 is only eventually-consistent: a
+    node's last recompute could predate a neighbor-ring change)."""
+    g, cfg, params = setup
+    rng = np.random.default_rng(2)
+    events = _event_stream(g, rng, n=24)
+
+    def run(micro):
+        nl = NearlineInference(cfg, params, micro_batch=micro, seed=9,
+                               policy=StalenessPolicy(closure_radius=None))
+        nl.bootstrap_from_graph(g)
+        for ev in events:
+            nl.topic.publish(ev)
+        nl.process()
+        return nl.embedding_store.live_embeddings()
+
+    assert tables_bitwise_equal(run(4), run(16))
+
+
+def test_publish_sweep_covers_registry_and_new_nodes(setup):
+    g, cfg, params = setup
+    nl = NearlineInference(cfg, params, micro_batch=32, seed=0)
+    nl.bootstrap_from_graph(g)
+    new_job = g.num_nodes["job"] + 7
+    nl.topic.publish(Event(time=1.0, kind="job_created", payload={
+        "job_id": new_job, "features": np.ones(g.feat_dim, np.float32),
+        "title": 1}))
+    nl.ingest()
+    v = nl.lifecycle.publish_version(clock=2.0)
+    table = nl.embedding_store.table(v)
+    assert len(table) == sum(g.num_nodes.values()) + 1
+    assert ("job", new_job) in table
+    assert nl.lifecycle.pending() == 0                 # sweep supersedes dirt
+
+
+def test_ageout_policy_recomputes_without_events(setup):
+    g, cfg, params = setup
+    nl = NearlineInference(cfg, params, micro_batch=64, seed=0,
+                           policy=StalenessPolicy(max_staleness_s=10.0))
+    nl.bootstrap_from_graph(g)
+    nl.topic.publish(Event(time=0.0, kind="engagement",
+                           payload={"member_id": 0, "job_id": 0}))
+    nl.process(clock=1.0)
+    t0 = nl.embedding_store.record("job", 0).time
+    # a later unrelated event, processed past the age-out horizon, drags the
+    # stale record back through the queue
+    nl.topic.publish(Event(time=20.0, kind="engagement",
+                           payload={"member_id": 5, "job_id": 6}))
+    nl.process(clock=22.0)
+    assert nl.embedding_store.record("job", 0).time == 22.0 != t0
+
+
+# ------------------------------------------------- the parity contract
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sweep_vs_incremental_bit_parity(setup, seed):
+    """THE §9 contract: over one event stream, incremental dirty-closure
+    drains converge to a live table bit-identical to one offline full sweep
+    at the final graph state."""
+    g, cfg, params = setup
+    events = _event_stream(g, np.random.default_rng((seed, 1)), n=60)
+    policy = StalenessPolicy(closure_radius=None)
+
+    def make():
+        nl = NearlineInference(cfg, params, micro_batch=8, seed=13,
+                               policy=policy)
+        nl.bootstrap_from_graph(g)
+        nl.lifecycle.publish_version(clock=0.0)   # shared v1 baseline
+        for ev in events:
+            nl.topic.publish(ev)
+        return nl
+
+    inc = make()
+    inc.process()                                  # drain per micro-batch
+    off = make()
+    off.ingest()                                   # apply all, no recompute
+    v = off.lifecycle.publish_version(clock=99.0)  # one sweep at final state
+
+    assert v == 2
+    assert tables_bitwise_equal(inc.embedding_store.live_embeddings(),
+                                off.embedding_store.table(v))
+
+
+def test_offline_batch_publish_mode_produces_versions(setup):
+    from repro.core.nearline import OfflineBatchInference
+    g, cfg, params = setup
+    nl = NearlineInference(cfg, params, micro_batch=64, seed=0)
+    nl.bootstrap_from_graph(g)
+    off = OfflineBatchInference(nl, period_s=10.0, mode="publish")
+    for i in range(4):
+        nl.topic.publish(Event(time=2.0 + 10.0 * i, kind="engagement",
+                               payload={"member_id": i, "job_id": i}))
+    ran = off.maybe_run(now=25.0)                  # two day boundaries
+    assert ran == 2                                # events at t=2, t=12 only
+    assert nl.embedding_store.published_versions() == [1, 2]
+    # boundary tables differ where the second window touched the graph
+    # (the t=12 engagement grew job 1's ring between v1 and v2)
+    t1, t2 = nl.embedding_store.table(1), nl.embedding_store.table(2)
+    assert not np.array_equal(t1[("job", 1)].emb, t2[("job", 1)].emb)
+
+
+def test_trainer_embed_nodes_writes_store(setup):
+    from repro.core.linksage import LinkSAGETrainer
+    g, cfg, params = setup
+    tr = LinkSAGETrainer(cfg, g, seed=0)
+    store = EmbeddingStore("trainer-out")
+    emb = tr.embed_nodes("member", np.arange(10), store=store, clock=3.0)
+    assert len(store) == 10
+    rec = store.record("member", 4)
+    assert np.array_equal(rec.emb, emb[4]) and rec.time == 3.0
+    v = store.publish()
+    assert np.array_equal(store.gather("member", [4], version=v)[0], emb[4])

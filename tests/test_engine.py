@@ -67,8 +67,12 @@ def test_event_suffix_parity_deterministic(seed, fanouts):
 
 def test_khop_builder_matches_pre_refactor_scalar_join(small_graph):
     """Golden equivalence: with fanouts (10, 5) and a fixed seed, the K-hop
-    builder on BOTH backends reproduces the pre-refactor per-key scalar
-    join bit for bit, and the encoder output is bit-identical too."""
+    builder on BOTH backends reproduces the per-key scalar join bit for
+    bit, and the encoder output is bit-identical too.  Both consume the
+    canonical per-node recompute slabs (`embeddings.node_uniform_slab`) —
+    the stream every lifecycle recompute path draws from."""
+    from repro.core.embeddings import node_uniform_slab
+
     g, _ = small_graph
     cfg = replace(gnn_smoke(), feat_dim=g.feat_dim, fanouts=(10, 5))
     params = linksage_init(jax.random.PRNGKey(0), cfg)
@@ -83,13 +87,14 @@ def test_khop_builder_matches_pre_refactor_scalar_join(small_graph):
 
     q_ty = np.array([NODE_TYPES.index(t) for t, _ in nodes], np.int64)
     q_id = np.array([i for _, i in nodes], np.int64)
+    u = np.stack([node_uniform_slab(11, t, i, slab_width((10, 5)))
+                  for t, i in nodes])
 
     stream = StreamingEngine(g.feat_dim)
     stream.bootstrap_from_graph(g)
-    t_stream = TileBuilder(stream, (10, 5)).build(
-        q_ty, q_id, rng=np.random.default_rng(11))
-    t_snap = TileBuilder(SnapshotEngine(g), (10, 5)).build(
-        q_ty, q_id, rng=np.random.default_rng(11))
+    t_stream = TileBuilder(stream, (10, 5)).build(q_ty, q_id, uniforms=u)
+    t_snap = TileBuilder(SnapshotEngine(g), (10, 5)).build(q_ty, q_id,
+                                                           uniforms=u)
     t_scalar = scalar_tile(11)
     assert_tiles_equal(t_stream, t_scalar, msg="stream-vs-scalar ")
     assert_tiles_equal(t_snap, t_scalar, msg="snapshot-vs-scalar ")

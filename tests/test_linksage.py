@@ -212,3 +212,21 @@ def test_degree_weighted_sampling(small_graph):
         return np.mean(degs)
 
     assert mean_deg(wei) > mean_deg(uni)
+
+
+def test_inbatch_cosine_normalizes_both_towers():
+    """Regression (satellite): the in-batch cosine arm must score the SAME
+    normalized cosine as pair_scores — the grid diagonal and the aligned
+    pair scores agree, and logits are bounded by the scale."""
+    cfg = replace(gnn_smoke(), decoder="cosine")
+    m = 5.0 * jax.random.normal(jax.random.PRNGKey(0), (8, cfg.embed_dim))
+    j = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (8, cfg.embed_dim))
+    grid = dec.inbatch_logits(cfg, m, j)
+    diag = jnp.diagonal(grid)
+    aligned = dec.pair_scores({}, cfg, m, j)
+    np.testing.assert_allclose(np.asarray(diag), np.asarray(aligned),
+                               rtol=1e-5, atol=1e-5)
+    # cosine logits are |s| <= cosine_scale; the old unnormalized arm blew
+    # far past it on mismatched tower norms
+    assert float(jnp.max(jnp.abs(grid))) <= cfg.cosine_scale * (1 + 1e-5)
+    assert np.isfinite(float(dec.inbatch_loss(cfg, m, j)))

@@ -33,6 +33,53 @@ def test_topic_offsets_are_per_consumer():
     assert t.lag("a") == 0
 
 
+def test_topic_lag_tracks_each_consumer_independently():
+    t = Topic("x")
+    for i in range(4):
+        t.publish(Event(time=float(i), kind="engagement", payload={}))
+    t.poll("a", 1)
+    assert t.lag("a") == 3
+    assert t.lag("b") == 4          # never-polled consumer lags the full log
+    t.publish(Event(time=9.0, kind="engagement", payload={}))
+    assert t.lag("a") == 4 and t.lag("b") == 5
+    t.poll("a", 100)
+    assert t.lag("a") == 0 and t.lag("b") == 5
+
+
+def test_topic_poll_upto_time_boundary():
+    """``upto_time`` is inclusive, and events past it stay unconsumed (the
+    consumer offset only advances over what was actually returned)."""
+    t = Topic("x")
+    for i in range(5):
+        t.publish(Event(time=float(i), kind="engagement", payload={}))
+    got = t.poll("c", 10, upto_time=2.0)
+    assert [ev.time for ev in got] == [0.0, 1.0, 2.0]   # t == upto included
+    assert t.lag("c") == 2
+    # a poll entirely beyond the horizon returns nothing and holds position
+    assert t.poll("c", 10, upto_time=2.5) == []
+    assert t.lag("c") == 2
+    assert [ev.time for ev in t.poll("c", 10)] == [3.0, 4.0]
+    assert t.lag("c") == 0
+
+
+def test_nearline_metrics_summary_counters():
+    from repro.core.nearline import NearlineMetrics
+    m = NearlineMetrics()
+    empty = m.summary()                 # no div-by-zero on a fresh pipeline
+    assert empty["events"] == 0 and empty["encoder_ms_per_batch"] == 0.0
+    assert empty["staleness_p50_s"] == 0.0 and empty["sweeps"] == 0
+    m.events_processed, m.batches, m.nodes_refreshed = 10, 4, 7
+    m.encoder_seconds, m.join_seconds, m.encoder_traces = 0.8, 0.4, 2
+    m.staleness, m.join_reads, m.sweeps = [1.0, 3.0], 55, 1
+    s = m.summary()
+    assert s["events"] == 10 and s["batches"] == 4 and s["nodes_refreshed"] == 7
+    assert s["encoder_ms_per_batch"] == pytest.approx(200.0)
+    assert s["join_ms_per_batch"] == pytest.approx(100.0)
+    assert s["encoder_traces"] == 2 and s["join_reads"] == 55 and s["sweeps"] == 1
+    assert s["staleness_p50_s"] == pytest.approx(2.0)
+    assert s["staleness_p99_s"] == pytest.approx(np.percentile([1.0, 3.0], 99))
+
+
 def test_nosql_store_counts_io():
     s = NoSQLStore("t")
     s.put("k", 1)
