@@ -24,6 +24,7 @@ from benchmarks.common import emit, standard_graph
 from repro.configs.linksage import CONFIG as GNN_CONFIG
 from repro.core import encoder as enc
 from repro.core.nearline import Event, NearlineInference
+from repro.data import marketplace_event_stream
 
 N_EVENTS = 512
 MICRO_BATCH = 64
@@ -31,22 +32,8 @@ MICRO_BATCH = 64
 
 def _event_stream(g, rng):
     """Engagements + fresh job postings, the two §5.2 trigger kinds."""
-    events = []
-    base_job = g.num_nodes["job"]
-    for i in range(N_EVENTS):
-        t = float(i)
-        if i % 16 == 0:
-            events.append(Event(time=t, kind="job_created", payload={
-                "job_id": base_job + i,
-                "features": rng.normal(size=g.feat_dim).astype(np.float32),
-                "title": int(rng.integers(0, g.num_nodes["title"])),
-                "company": int(rng.integers(0, g.num_nodes["company"])),
-                "skill": int(rng.integers(0, g.num_nodes["skill"]))}))
-        else:
-            events.append(Event(time=t, kind="engagement", payload={
-                "member_id": int(rng.integers(0, g.num_nodes["member"])),
-                "job_id": int(rng.integers(0, g.num_nodes["job"]))}))
-    return events
+    return marketplace_event_stream(g, rng, N_EVENTS,
+                                    attrs=("title", "company", "skill"))
 
 
 def _replay(g, cfg, params, events, *, join_impl, jit_encoder):

@@ -10,9 +10,9 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="substring filter on benchmark name")
     ap.add_argument("--quick", action="store_true",
                     help="graph census + engine + kernel + nearline + "
-                         "train-pipeline + embedding-lifecycle/transfer "
-                         "benchmarks only (skips the slow GNN-training "
-                         "tables; CI mode)")
+                         "train-pipeline + embedding-lifecycle/transfer + "
+                         "serving benchmarks only (skips the slow "
+                         "GNN-training tables; CI mode)")
     ap.add_argument("--skip-slow", action="store_true",
                     help="deprecated alias of --quick")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -22,16 +22,18 @@ def main() -> None:
     from benchmarks.engine_bench import ALL_ENGINE
     from benchmarks.kernels_bench import ALL_KERNELS
     from benchmarks.nearline_bench import ALL_NEARLINE
+    from benchmarks.serving_bench import ALL_SERVING
     from benchmarks.tables import ALL_TABLES
     from benchmarks.train_bench import ALL_TRAIN
     from benchmarks.transfer_bench import ALL_TRANSFER
 
     benches = (list(ALL_TABLES) + list(ALL_ENGINE) + list(ALL_KERNELS)
-               + list(ALL_NEARLINE) + list(ALL_TRAIN) + list(ALL_TRANSFER))
+               + list(ALL_NEARLINE) + list(ALL_TRAIN) + list(ALL_TRANSFER)
+               + list(ALL_SERVING))
     if args.skip_slow or args.quick:
         benches = [b for b in benches if b.__name__ == "bench_graph_construction"]
         benches += (list(ALL_ENGINE) + list(ALL_KERNELS) + list(ALL_NEARLINE)
-                    + list(ALL_TRAIN) + list(ALL_TRANSFER))
+                    + list(ALL_TRAIN) + list(ALL_TRANSFER) + list(ALL_SERVING))
     if args.only:
         benches = [b for b in benches if args.only in b.__name__]
 

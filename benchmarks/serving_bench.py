@@ -1,0 +1,194 @@
+"""Online-serving benchmark (DESIGN.md §10): partition quality, the
+sharded-vs-single bit-parity gate, dynamic batching vs sequential scoring,
+shard scaling, and the result cache.
+
+Rows:
+
+  * serving_partition_{hash,greedy} — edge-cut fraction + balance of the
+    two partitioners over the standard graph;
+  * serving_parity_p{1,2,4} — THE acceptance gate: after the same
+    bootstrap + event stream, the union of the P shard stores is
+    bit-identical to the single-engine ``NearlineInference`` live table,
+    and the router's scatter-gather embeddings match bit-for-bit;
+  * serving_batched / serving_sequential — the same Poisson request trace
+    through the DynamicBatcher (max_batch=16) vs the unbatched baseline
+    (max_batch=1), both identically warmed: events/s + p50/p95/p99 + SLO
+    violation rate (at least the batched arm must win on events/s);
+  * serving_shards_p{1,2,4} — batched throughput vs shard count with the
+    remote-resolution fraction (the scatter-gather fan-out cost);
+  * serving_cache — ResultCache arm: hit rate + throughput on a re-played
+    trace (hits return bit-identical embeddings, so this is pure win).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, standard_graph
+from repro.configs.linksage import smoke as gnn_smoke
+from repro.core import encoder as enc
+from repro.core.embeddings import StalenessPolicy, tables_bitwise_equal
+from repro.core.nearline import NearlineInference
+from repro.data import marketplace_event_stream
+from repro.core.partition import GraphPartitioner
+from repro.serving import (BatchPolicy, LoadConfig, LoadGenerator, ResultCache,
+                           ShardedNearline, serve_trace)
+
+N_EVENTS = 96
+N_REQUESTS = 128
+MICRO_BATCH = 32
+SEED = 13
+
+
+def _cfg(g):
+    from dataclasses import replace
+    return replace(gnn_smoke(), feat_dim=g.feat_dim)
+
+
+def _params(cfg):
+    import jax
+    return enc.encoder_init(jax.random.PRNGKey(0), cfg)
+
+
+def _event_stream(g, rng, n=N_EVENTS):
+    return marketplace_event_stream(g, rng, n)
+
+
+def _cluster(g, cfg, params, P, *, strategy="hash", policy=None):
+    part = GraphPartitioner(P, strategy)
+    if strategy == "greedy":
+        part.fit(g)
+    cl = ShardedNearline(cfg, params, part, micro_batch=MICRO_BATCH,
+                         seed=SEED, policy=policy)
+    cl.bootstrap_from_graph(g)
+    return cl
+
+
+def _requests(g, *, n=N_REQUESTS, rate=2000.0, candidates=4, seed=1):
+    gen = LoadGenerator(LoadConfig(rate_hz=rate, num_requests=n,
+                                   candidates=candidates, seed=seed),
+                        num_members=g.num_nodes["member"],
+                        num_jobs=g.num_nodes["job"])
+    return gen.requests()
+
+
+def bench_serving_partition_quality():
+    """Hash vs greedy edge-cut over the standard graph."""
+    g, _ = standard_graph(0)
+    for strategy in ("hash", "greedy"):
+        part = GraphPartitioner(4, strategy)
+        if strategy == "greedy":
+            part.fit(g)
+        s = part.cut_stats(g)
+        emit(f"serving_partition_{strategy}", 0.0,
+             f"shards=4;cut_fraction={s['cut_fraction']:.3f};"
+             f"balance={s['balance']:.2f}")
+
+
+def bench_serving_parity():
+    """The §10 acceptance gate: P ∈ {1, 2, 4} sharded stores and router
+    reads are bit-identical to the single-engine nearline path."""
+    g, _ = standard_graph(0)
+    cfg = _cfg(g)
+    params = _params(cfg)
+    events = _event_stream(g, np.random.default_rng(0))
+    policy = StalenessPolicy(closure_radius=None)
+
+    nl = NearlineInference(cfg, params, micro_batch=MICRO_BATCH, seed=SEED,
+                           policy=policy)
+    nl.bootstrap_from_graph(g)
+    for ev in events:
+        nl.topic.publish(ev)
+    nl.process()
+    golden = nl.embedding_store.live_embeddings()
+
+    probe = [("member", 3), ("job", 7), ("member", 11), ("job", 0)]
+    golden_probe = nl.lifecycle.encode_nodes(probe)
+
+    for P in (1, 2, 4):
+        cl = _cluster(g, cfg, params, P, policy=policy)
+        for ev in events:
+            cl.topic.publish(ev)
+        cl.process()
+        ok_table = tables_bitwise_equal(golden, cl.live_embeddings())
+        from repro.serving import Router
+        emb = Router(cl).resolve_embeddings(probe)
+        ok_router = all(np.array_equal(golden_probe[i], emb[k])
+                        for i, k in enumerate(probe))
+        emit(f"serving_parity_p{P}", 0.0,
+             f"bitwise_identical={int(ok_table and ok_router)};"
+             f"table={int(ok_table)};router={int(ok_router)};"
+             f"remote_frac={cl.remote_fraction():.3f}")
+        assert ok_table and ok_router, f"P={P} sharded parity violated"
+
+
+def bench_serving_batched_vs_sequential():
+    """Dynamic micro-batching vs one-request-at-a-time scoring, identically
+    warmed; the batched arm must win on events/s."""
+    g, _ = standard_graph(0)
+    cfg = _cfg(g)
+    params = _params(cfg)
+    cl = _cluster(g, cfg, params, 2)
+    reqs = _requests(g)
+    arms = {"batched": BatchPolicy(max_batch=16, max_wait_s=0.02),
+            "sequential": BatchPolicy(max_batch=1, max_wait_s=0.0)}
+    rps = {}
+    for name, pol in arms.items():
+        serve_trace(cl, reqs, policy=pol)        # warm the jit buckets
+        rep, _, _ = serve_trace(cl, reqs, policy=pol)
+        s = rep.summary()
+        rps[name] = s["throughput_rps"]
+        emit(f"serving_{name}", 1e6 / max(s["throughput_rps"], 1e-9),
+             f"events_per_s={s['throughput_rps']:.0f};"
+             f"p50_ms={s['latency_p50_ms']:.1f};"
+             f"p95_ms={s['latency_p95_ms']:.1f};"
+             f"p99_ms={s['latency_p99_ms']:.1f};"
+             f"slo_violation={s['slo_violation_rate']:.2f};"
+             f"occupancy={s['occupancy_mean']:.2f}")
+    assert rps["batched"] > rps["sequential"], rps
+
+
+def bench_serving_shard_scaling():
+    """Batched throughput vs shard count + the remote-row fraction."""
+    g, _ = standard_graph(0)
+    cfg = _cfg(g)
+    params = _params(cfg)
+    reqs = _requests(g)
+    pol = BatchPolicy(max_batch=16, max_wait_s=0.02)
+    for P in (1, 2, 4):
+        cl = _cluster(g, cfg, params, P)
+        serve_trace(cl, reqs, policy=pol)        # warm
+        rep, _, _ = serve_trace(cl, reqs, policy=pol)
+        s = rep.summary()
+        emit(f"serving_shards_p{P}", 1e6 / max(s["throughput_rps"], 1e-9),
+             f"events_per_s={s['throughput_rps']:.0f};"
+             f"p99_ms={s['latency_p99_ms']:.1f};"
+             f"remote_frac={cl.remote_fraction():.3f}")
+
+
+def bench_serving_cache():
+    """ResultCache on a re-played trace: hit rate + throughput vs cold."""
+    g, _ = standard_graph(0)
+    cfg = _cfg(g)
+    params = _params(cfg)
+    cl = _cluster(g, cfg, params, 2)
+    reqs = _requests(g)
+    pol = BatchPolicy(max_batch=16, max_wait_s=0.02)
+    serve_trace(cl, reqs, policy=pol)            # warm jit, no cache
+    cold, _, _ = serve_trace(cl, reqs, policy=pol)
+    cache = ResultCache(8192)
+    serve_trace(cl, reqs, policy=pol, cache=cache)      # populate
+    warm, _, router = serve_trace(cl, reqs, policy=pol, cache=cache)
+    emit("serving_cache", 1e6 / max(warm.throughput_rps, 1e-9),
+         f"hit_rate={cache.hit_rate():.2f};"
+         f"events_per_s={warm.throughput_rps:.0f};"
+         f"cold_events_per_s={cold.throughput_rps:.0f};"
+         f"entries={len(cache)}")
+
+
+ALL_SERVING = [
+    bench_serving_partition_quality,
+    bench_serving_parity,
+    bench_serving_batched_vs_sequential,
+    bench_serving_shard_scaling,
+    bench_serving_cache,
+]

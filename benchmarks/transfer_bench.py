@@ -27,6 +27,7 @@ from repro.configs.linksage import smoke as gnn_smoke
 from repro.core import encoder as enc
 from repro.core.embeddings import StalenessPolicy, tables_bitwise_equal
 from repro.core.nearline import Event, NearlineInference
+from repro.data import marketplace_event_stream
 
 N_EVENTS = 192
 MICRO_BATCH = 32
@@ -38,21 +39,7 @@ def _cfg(g):
 
 
 def _event_stream(g, rng, n=N_EVENTS):
-    events = []
-    base_job = g.num_nodes["job"]
-    for i in range(n):
-        t = float(i)
-        if i % 16 == 0:
-            events.append(Event(time=t, kind="job_created", payload={
-                "job_id": base_job + i,
-                "features": rng.normal(size=g.feat_dim).astype(np.float32),
-                "title": int(rng.integers(0, g.num_nodes["title"])),
-                "company": int(rng.integers(0, g.num_nodes["company"]))}))
-        else:
-            events.append(Event(time=t, kind="engagement", payload={
-                "member_id": int(rng.integers(0, g.num_nodes["member"])),
-                "job_id": int(rng.integers(0, g.num_nodes["job"]))}))
-    return events
+    return marketplace_event_stream(g, rng, n)
 
 
 def _nearline(g, cfg, params, *, policy, micro_batch=MICRO_BATCH, seed=0):

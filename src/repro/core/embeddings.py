@@ -133,6 +133,17 @@ class EmbeddingStore(NoSQLStore):
         """{key: emb} snapshot of the live table (parity comparisons)."""
         return {k: rec.emb for k, rec in self._d.items()}
 
+    def summary(self) -> dict:
+        """Store-side counters (the online-feature-store view of the same
+        accounting the lifecycle's ``LifecycleMetrics.summary`` reports)."""
+        return {
+            "live_records": len(self),
+            "published_versions": len(self._tables),
+            "latest_version": self.version,
+            "reads": self.reads,
+            "writes": self.writes,
+        }
+
 
 def tables_bitwise_equal(a: dict, b: dict) -> bool:
     """Same key set and bit-identical embeddings (EmbeddingRecord values or
@@ -240,6 +251,9 @@ class LifecycleMetrics:
     staleness: list = field(default_factory=list)   # trigger -> refresh deltas
     join_reads: int = 0
     sweeps: int = 0                                 # publish_version calls
+    queue_depth_peak: int = 0                       # high-water recompute queue
+    cache_hits: int = 0                             # serving ResultCache reads
+    cache_misses: int = 0
 
     def summary(self) -> dict:
         st = np.array(self.staleness) if self.staleness else np.array([0.0])
@@ -254,7 +268,21 @@ class LifecycleMetrics:
             "staleness_p99_s": float(np.percentile(st, 99)),
             "join_reads": self.join_reads,
             "sweeps": self.sweeps,
+            "queue_depth_peak": self.queue_depth_peak,
+            "cache_hit_rate": (self.cache_hits
+                               / max(self.cache_hits + self.cache_misses, 1)),
         }
+
+
+def index_reverse_edges(graph, rev: dict) -> None:
+    """Index a snapshot's edges src->dst as ``rev[dst] ∋ src`` — the ONE
+    reverse-edge walk both the single lifecycle and the sharded cluster
+    bootstrap their dirty-closure index from.  ``rev`` may be a plain dict
+    or a defaultdict(set); missing keys are created."""
+    for (s, d), csr in graph.adj.items():
+        src = np.repeat(np.arange(len(csr.indptr) - 1), np.diff(csr.indptr))
+        for u, v in zip(src, csr.indices):
+            rev.setdefault((d, int(v)), set()).add((s, int(u)))
 
 
 # ---------------------------------------------------------------- lifecycle
@@ -301,22 +329,22 @@ class EmbeddingLifecycle:
         for ntype in NODE_TYPES:
             for i in range(graph.num_nodes.get(ntype, 0)):
                 self.registry.add((ntype, i))
-        for (s, d), csr in graph.adj.items():
-            src = np.repeat(np.arange(len(csr.indptr) - 1), np.diff(csr.indptr))
-            for u, v in zip(src, csr.indices):
-                self._rev[(d, int(v))].add((s, int(u)))
+        index_reverse_edges(graph, self._rev)
 
     def observe_edge(self, src_key, dst_key) -> None:
         """Record a live edge src->dst (src can now sample dst's subtree)."""
         self._rev[dst_key].add(src_key)
 
     # ---- dirty tracking -------------------------------------------------
-    def dirty_closure(self, keys) -> set:
-        """Touched nodes plus everything within the policy radius along
-        reverse edges — the nodes whose padded tiles could have changed."""
+    def dirty_closure(self, keys, radius: int | None = None) -> set:
+        """Touched nodes plus everything within ``radius`` (default: the
+        policy radius) along reverse edges — the nodes whose padded tiles
+        could have changed."""
         seen = set(keys)
         frontier = set(keys)
-        for _ in range(self.policy.radius(len(self.fanouts))):
+        if radius is None:
+            radius = self.policy.radius(len(self.fanouts))
+        for _ in range(radius):
             nxt = set()
             for k in frontier:
                 nxt |= self._rev.get(k, frozenset())
@@ -326,12 +354,20 @@ class EmbeddingLifecycle:
             seen |= frontier
         return seen
 
+    def enqueue_dirty(self, key, t: float) -> None:
+        """Register + queue ONE dirty key and bump the queue-depth peak —
+        the shared enqueue step of both the single-engine ``mark_dirty``
+        and the sharded cluster's owner-routed marking."""
+        self.registry.add(key)
+        self.queue.push(key, self.policy.priority(key[0], t), t)
+        self.metrics.queue_depth_peak = max(self.metrics.queue_depth_peak,
+                                            len(self.queue))
+
     def mark_dirty(self, node_type: str, node_id: int, t: float) -> int:
         """Dirty a touched node and its closure; returns #enqueued keys."""
         keys = self.dirty_closure({(node_type, int(node_id))})
-        for (nt, ni) in keys:
-            self.registry.add((nt, ni))
-            self.queue.push((nt, ni), self.policy.priority(nt, t), t)
+        for key in keys:
+            self.enqueue_dirty(key, t)
         return len(keys)
 
     def enqueue_stale(self, now: float) -> int:
@@ -413,6 +449,8 @@ class EmbeddingLifecycle:
         recompute in micro-batches, write into the live table as in-flight
         records toward the next version.  Returns #nodes refreshed."""
         self.enqueue_stale(clock)
+        self.metrics.queue_depth_peak = max(self.metrics.queue_depth_peak,
+                                            len(self.queue))
         total = 0
         while len(self.queue):
             room = self.micro_batch if max_nodes is None else min(

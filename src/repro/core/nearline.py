@@ -86,6 +86,91 @@ class Topic:
         return len(self.log) - self.offsets[consumer]
 
 
+def apply_marketplace_event(ev: Event, *, put_feature, add_edge, register):
+    """THE §5.2 event semantics, shared by the single-engine nearline path
+    and the sharded serving cluster (one definition, zero tier drift).
+
+    ``put_feature(tid, nid, feat)`` / ``add_edge(src_t, src_i, dst_t,
+    dst_i)`` / ``register(ntype, nid)`` are the write primitives of the
+    hosting tier; returns the ``(ntype, nid, time)`` touched list whose
+    entries the caller marks dirty.
+    """
+    touched = []
+    p = ev.payload
+    if ev.kind == "job_created":
+        put_feature(NODE_TYPE_ID["job"], p["job_id"], p["features"])
+        register("job", p["job_id"])
+        for attr in ("title", "company", "position", "skill"):
+            if attr in p:
+                add_edge("job", p["job_id"], attr, p[attr])
+                add_edge(attr, p[attr], "job", p["job_id"])
+        touched.append(("job", p["job_id"], ev.time))
+    elif ev.kind == "engagement":                  # member saved/applied/clicked
+        # both rings change: the member gains the job AND the job gains
+        # the member ("new neighbors arrive on an existing job", §5.2) —
+        # recomputes are deterministic per node, so an unchanged ring
+        # would mean an unchanged embedding
+        add_edge("member", p["member_id"], "job", p["job_id"])
+        add_edge("job", p["job_id"], "member", p["member_id"])
+        touched.append(("job", p["job_id"], ev.time))
+        touched.append(("member", p["member_id"], ev.time))
+    elif ev.kind == "recruiter_interaction":       # recruiter reached out
+        add_edge("job", p["job_id"], "member", p["member_id"])
+        touched.append(("job", p["job_id"], ev.time))
+    elif ev.kind == "member_update":
+        put_feature(NODE_TYPE_ID["member"], p["member_id"], p["features"])
+        register("member", p["member_id"])
+        touched.append(("member", p["member_id"], ev.time))
+    return touched
+
+
+# the modelled few-seconds pipeline delay between an event's own time and
+# the nearline refresh that processes it (staleness accounting default)
+NEARLINE_LAG_S = 2.0
+
+
+def poll_and_apply(topic: Topic, consumer: str, micro_batch: int, apply_event,
+                   mark_dirty, *, upto_time: float | None = None,
+                   max_events: int = 10**9) -> int:
+    """THE ingest loop (poll → apply → dirty, NO recompute), shared by the
+    single-engine and sharded tiers; returns #events applied."""
+    total = 0
+    while total < max_events:
+        events = topic.poll(consumer, min(micro_batch, max_events - total),
+                            upto_time=upto_time)
+        if not events:
+            break
+        for ev in events:
+            for (ntype, nid, t) in apply_event(ev):
+                mark_dirty(ntype, nid, t)
+        total += len(events)
+    return total
+
+
+def poll_and_process(topic: Topic, consumer: str, micro_batch: int,
+                     apply_event, mark_dirty, drain, *,
+                     upto_time: float | None = None,
+                     max_batches: int = 10**9,
+                     clock: float | None = None) -> int:
+    """THE nearline loop (poll → apply → dirty → drain per micro-batch),
+    shared by both tiers.  ``drain(refresh_time)`` is called once per event
+    batch; ``clock`` overrides the default event-time + NEARLINE_LAG_S
+    refresh stamp.  Returns #events handled."""
+    total = 0
+    for _ in range(max_batches):
+        events = topic.poll(consumer, micro_batch, upto_time=upto_time)
+        if not events:
+            break
+        for ev in events:
+            for (ntype, nid, t) in apply_event(ev):
+                mark_dirty(ntype, nid, t)
+        refresh = (clock if clock is not None
+                   else max(ev.time for ev in events) + NEARLINE_LAG_S)
+        drain(refresh)
+        total += len(events)
+    return total
+
+
 # -------------------------------------------------------------- inference
 
 
@@ -152,34 +237,9 @@ class NearlineInference:
                                     (dst_type, int(dst_id)))
 
     def _apply_event(self, ev: Event):
-        touched = []
-        p = ev.payload
-        if ev.kind == "job_created":
-            self.engine.put_feature(NODE_TYPE_ID["job"], p["job_id"], p["features"])
-            self.lifecycle.register("job", p["job_id"])
-            for attr in ("title", "company", "position", "skill"):
-                if attr in p:
-                    self._add_edge("job", p["job_id"], attr, p[attr])
-                    self._add_edge(attr, p[attr], "job", p["job_id"])
-            touched.append(("job", p["job_id"], ev.time))
-        elif ev.kind == "engagement":                  # member saved/applied/clicked
-            # both rings change: the member gains the job AND the job gains
-            # the member ("new neighbors arrive on an existing job", §5.2) —
-            # recomputes are deterministic per node, so an unchanged ring
-            # would mean an unchanged embedding
-            self._add_edge("member", p["member_id"], "job", p["job_id"])
-            self._add_edge("job", p["job_id"], "member", p["member_id"])
-            touched.append(("job", p["job_id"], ev.time))
-            touched.append(("member", p["member_id"], ev.time))
-        elif ev.kind == "recruiter_interaction":       # recruiter reached out
-            self._add_edge("job", p["job_id"], "member", p["member_id"])
-            touched.append(("job", p["job_id"], ev.time))
-        elif ev.kind == "member_update":
-            self.engine.put_feature(NODE_TYPE_ID["member"], p["member_id"],
-                                    p["features"])
-            self.lifecycle.register("member", p["member_id"])
-            touched.append(("member", p["member_id"], ev.time))
-        return touched
+        return apply_marketplace_event(
+            ev, put_feature=self.engine.put_feature, add_edge=self._add_edge,
+            register=self.lifecycle.register)
 
     # ---- sequential join: node -> neighbors -> neighbor features ---------
     #
@@ -244,40 +304,24 @@ class NearlineInference:
         """Apply pending events to the engine and dirty the lifecycle WITHOUT
         recomputing (the offline publish path ingests a whole window, then
         sweeps).  Returns #events applied."""
-        total = 0
-        while total < max_events:
-            events = self.topic.poll("nearline",
-                                     min(self.micro_batch, max_events - total),
-                                     upto_time=upto_time)
-            if not events:
-                break
-            for ev in events:
-                for (ntype, nid, t) in self._apply_event(ev):
-                    self.lifecycle.mark_dirty(ntype, nid, t)
-            total += len(events)
-        return total
+        return poll_and_apply(self.topic, "nearline", self.micro_batch,
+                              self._apply_event, self.lifecycle.mark_dirty,
+                              upto_time=upto_time, max_events=max_events)
 
     def process(self, *, upto_time: float | None = None, max_batches: int = 10**9,
                 clock: float | None = None) -> int:
         """Drain pending events in micro-batches; returns #events handled.
 
         ``clock`` is the simulated wall time when processing happens (for
-        staleness accounting); defaults to each event's own time + a small
-        pipeline delay, modelling the few-seconds nearline lag.
+        staleness accounting); defaults to each event's own time + the
+        NEARLINE_LAG_S pipeline delay, modelling the few-seconds lag.
         """
-        total = 0
-        for _ in range(max_batches):
-            events = self.topic.poll("nearline", self.micro_batch, upto_time=upto_time)
-            if not events:
-                break
-            for ev in events:
-                for (ntype, nid, t) in self._apply_event(ev):
-                    self.lifecycle.mark_dirty(ntype, nid, t)
-            refresh_time = (clock if clock is not None
-                            else max(ev.time for ev in events) + 2.0)
-            self.lifecycle.drain(clock=refresh_time)
-            self.metrics.events_processed += len(events)
-            total += len(events)
+        total = poll_and_process(
+            self.topic, "nearline", self.micro_batch, self._apply_event,
+            self.lifecycle.mark_dirty,
+            lambda refresh: self.lifecycle.drain(clock=refresh),
+            upto_time=upto_time, max_batches=max_batches, clock=clock)
+        self.metrics.events_processed += total
         return total
 
 

@@ -1,0 +1,320 @@
+"""Graph partitioning for the online serving tier (DESIGN.md §10).
+
+LiGNN-style serving shards the graph horizontally: every node has exactly
+one *owner* shard holding its neighbor rings, features, and embedding
+record, and a K-hop tile build scatter-gathers per-node queries across
+owners.  This module is the partitioning substrate:
+
+  GraphPartitioner — the ownership map: ``hash`` (stateless, any id) or
+                     ``greedy`` (degree-ordered edge-cut minimization over
+                     a snapshot, hash fallback for unseen nodes)
+  ShardedEngine    — P per-shard :class:`StreamingEngine`s behind the ONE
+                     :class:`GraphEngine` protocol: queries are grouped by
+                     owner, answered shard-locally, and scattered back
+  ShardView        — a shard-pinned engine view that counts how many rows
+                     each query resolved remotely (the cross-shard traffic
+                     a real deployment pays network for)
+
+Cross-shard neighbor-resolution contract: a node's ring content is a pure
+function of the per-(relation, src) event subsequence, and routing by the
+*source* node preserves exactly that subsequence per owner — so every
+per-node query (``counts`` / ``sample_batched`` / ``gather_features``)
+returns bit-identical results to a single un-sharded StreamingEngine fed
+the same bootstrap + event stream.  The only global state is the relation
+*insertion order* (the merged-neighbor offset contract of DESIGN.md §2):
+``bootstrap_from_graph`` therefore registers every snapshot relation in
+every shard, in snapshot order, even where a shard owns no sources —
+zero-count relations contribute zero-width spans, so the padding is free.
+Parity then holds whenever live events only add edges of relation types
+present at bootstrap (the same append-only regime as §8/§9).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import NODE_TYPE_ID, NODE_TYPES, HeteroGraph
+from repro.core.engine import StreamingEngine
+
+STRATEGIES = ("hash", "greedy")
+
+# splitmix-style multipliers for the stateless ownership hash
+_H1, _H2 = np.int64(0x9E3779B1), np.int64(0x85EBCA77)
+
+
+def _hash_shard(tids: np.ndarray, nids: np.ndarray, num_shards: int) -> np.ndarray:
+    """Vectorized deterministic (type, id) -> shard hash (any id, any time)."""
+    with np.errstate(over="ignore"):
+        h = tids.astype(np.int64) * _H1 + nids.astype(np.int64) * _H2
+        h ^= h >> np.int64(15)
+        h *= np.int64(0x27D4EB2F)
+        h ^= h >> np.int64(13)
+    return (h % num_shards + num_shards) % num_shards
+
+
+class GraphPartitioner:
+    """The node-ownership map over P shards.
+
+    ``hash`` needs no fitting and covers ids that do not exist yet (fresh
+    jobs arriving on the event stream).  ``greedy`` fits an edge-cut
+    minimizing assignment over a snapshot graph: nodes in descending merged-
+    degree order each go to the shard holding most of their already-placed
+    neighbors, subject to a balance cap of ``balance_slack`` x the ideal
+    shard size; nodes never seen by ``fit`` fall back to the hash map, so
+    the partitioner stays total over the open world.
+    """
+
+    def __init__(self, num_shards: int, strategy: str = "hash", *,
+                 balance_slack: float = 1.15):
+        assert num_shards >= 1, num_shards
+        assert strategy in STRATEGIES, strategy
+        self.num_shards = int(num_shards)
+        self.strategy = strategy
+        self.balance_slack = float(balance_slack)
+        self._assigned: dict = {}          # (tid, nid) -> shard (greedy fit)
+        self._dense: dict = {}             # tid -> [n] owner array (greedy fit)
+
+    # ---- ownership ------------------------------------------------------
+    def shard_of(self, node_type: str | int, node_id: int) -> int:
+        tid = NODE_TYPE_ID[node_type] if isinstance(node_type, str) else int(node_type)
+        nid = int(node_id)
+        arr = self._dense.get(tid)
+        if arr is not None and 0 <= nid < len(arr):
+            return int(arr[nid])
+        return int(_hash_shard(np.array([tid]), np.array([nid]),
+                               self.num_shards)[0])
+
+    def shard_array(self, tids: np.ndarray, nids: np.ndarray) -> np.ndarray:
+        """Vectorized ownership for flat (tid, nid) arrays: hash everywhere,
+        overridden by the dense fitted owner arrays where they cover."""
+        tids = np.asarray(tids)
+        nids = np.asarray(nids)
+        out = _hash_shard(tids, nids, self.num_shards)
+        for tid, arr in self._dense.items():
+            sel = (tids == tid) & (nids < len(arr))
+            if sel.any():
+                out[sel] = arr[nids[sel]]
+        return out.astype(np.int64)
+
+    # ---- fitting --------------------------------------------------------
+    def fit(self, graph: HeteroGraph) -> "GraphPartitioner":
+        """Fit the assignment over a snapshot (no-op for ``hash``).
+        Refitting replaces the previous assignment wholesale."""
+        if self.strategy == "hash":
+            return self
+        self._assigned.clear()
+        self._dense.clear()
+        adj: dict = {}
+        deg: dict = {}
+        for (s, d), csr in graph.adj.items():
+            s_tid, d_tid = NODE_TYPE_ID[s], NODE_TYPE_ID[d]
+            src = np.repeat(np.arange(len(csr.indptr) - 1), np.diff(csr.indptr))
+            for u, v in zip(src, csr.indices):
+                a, b = (s_tid, int(u)), (d_tid, int(v))
+                adj.setdefault(a, []).append(b)
+                adj.setdefault(b, []).append(a)
+                deg[a] = deg.get(a, 0) + 1
+                deg[b] = deg.get(b, 0) + 1
+        every = [(t, i) for tname, t in NODE_TYPE_ID.items()
+                 for i in range(graph.num_nodes.get(tname, 0))]
+        total = len(every)
+        cap = max(1, int(np.ceil(total / self.num_shards * self.balance_slack)))
+        sizes = np.zeros(self.num_shards, np.int64)
+        # high-degree nodes first: they anchor their neighborhoods
+        order = sorted(every, key=lambda k: (-deg.get(k, 0), k))
+        for key in order:
+            votes = np.zeros(self.num_shards, np.float64)
+            for nb in adj.get(key, ()):
+                s = self._assigned.get(nb)
+                if s is not None:
+                    votes[s] += 1.0
+            # cap math guarantees an open shard: P·cap ≥ total placements
+            open_ = sizes < cap
+            votes[~open_] = -np.inf
+            # tie-break toward the least-loaded open shard, then shard index
+            best = np.lexsort((np.arange(self.num_shards), sizes, -votes))[0]
+            self._assigned[key] = int(best)
+            sizes[best] += 1
+        # dense per-type owner arrays: the hot-path lookup is a vectorized
+        # take, never a per-row dict probe
+        for tname, tid in NODE_TYPE_ID.items():
+            n = graph.num_nodes.get(tname, 0)
+            if n:
+                self._dense[tid] = np.array(
+                    [self._assigned[(tid, i)] for i in range(n)], np.int64)
+        self._assigned.clear()             # the dense arrays are the map now
+        return self
+
+    # ---- diagnostics ----------------------------------------------------
+    def cut_stats(self, graph: HeteroGraph) -> dict:
+        """Edge-cut fraction + shard balance over a snapshot."""
+        cut = total = 0
+        for (s, d), csr in graph.adj.items():
+            src = np.repeat(np.arange(len(csr.indptr) - 1), np.diff(csr.indptr))
+            so = self.shard_array(np.full(len(src), NODE_TYPE_ID[s]), src)
+            do = self.shard_array(np.full(len(src), NODE_TYPE_ID[d]), csr.indices)
+            cut += int((so != do).sum())
+            total += len(src)
+        sizes = np.zeros(self.num_shards, np.int64)
+        for tname, tid in NODE_TYPE_ID.items():
+            n = graph.num_nodes.get(tname, 0)
+            if n:
+                owners = self.shard_array(np.full(n, tid), np.arange(n))
+                sizes += np.bincount(owners, minlength=self.num_shards)
+        mean = sizes.mean() if sizes.sum() else 1.0
+        return {"cut_fraction": cut / max(total, 1),
+                "cut_edges": cut, "total_edges": total,
+                "shard_sizes": sizes.tolist(),
+                "balance": float(sizes.max() / max(mean, 1e-9))}
+
+
+# ------------------------------------------------------------------ engine
+
+
+class ShardedEngine:
+    """P shard-local :class:`StreamingEngine`s behind one GraphEngine.
+
+    Reads group the flat (type, id) rows by owner shard, answer each group
+    on that shard's local stores, and scatter results back into row order;
+    writes route by the *source* node.  Because every store operation is
+    per-source-node, the composite is bit-identical to a single engine (see
+    the module docstring for the relation-order caveat).
+    """
+
+    def __init__(self, feat_dim: int, partitioner: GraphPartitioner, *,
+                 max_neighbors: int = 64, strategy: str = "uniform"):
+        self.feat_dim = feat_dim
+        self.partitioner = partitioner
+        self.shards = [StreamingEngine(feat_dim, max_neighbors=max_neighbors,
+                                       strategy=strategy)
+                       for _ in range(partitioner.num_shards)]
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def join_reads(self) -> int:
+        return sum(sh.join_reads for sh in self.shards)
+
+    # ---- writes ---------------------------------------------------------
+    def bootstrap_from_graph(self, graph: HeteroGraph) -> None:
+        """Per-shard restricted bootstrap: every shard registers EVERY
+        snapshot relation (in snapshot order — the merged-offset contract),
+        loaded with only the rows whose source it owns; features go to
+        their owner's store."""
+        part = self.partitioner
+        for ntype in NODE_TYPES:
+            feats = graph.features[ntype]
+            n = feats.shape[0]
+            if n == 0:
+                continue
+            tid = NODE_TYPE_ID[ntype]
+            owners = part.shard_array(np.full(n, tid), np.arange(n))
+            for p in range(self.num_shards):
+                ids = np.nonzero(owners == p)[0]
+                self.shards[p].feature_store.put_many(
+                    ((tid, int(i)), feats[i]) for i in ids)
+        for (s, d), csr in graph.adj.items():
+            n = len(csr.indptr) - 1
+            deg = np.diff(csr.indptr)
+            owners = part.shard_array(np.full(n, NODE_TYPE_ID[s]), np.arange(n))
+            for p in range(self.num_shards):
+                keep = owners == p
+                cnt = np.where(keep, deg, 0)
+                indptr_p = np.zeros(n + 1, np.int64)
+                np.cumsum(cnt, out=indptr_p[1:])
+                indices_p = csr.indices[np.repeat(keep, deg)]
+                self.shards[p].neighbor_store.bulk_load(s, d, indptr_p, indices_p)
+
+    def add_edge(self, src_type: str, src_id: int, dst_type: str,
+                 dst_id: int) -> None:
+        p = self.partitioner.shard_of(src_type, src_id)
+        self.shards[p].add_edge(src_type, src_id, dst_type, dst_id)
+
+    def put_feature(self, tid: int, nid: int, feat: np.ndarray) -> None:
+        p = self.partitioner.shard_of(tid, nid)
+        self.shards[p].put_feature(tid, nid, feat)
+
+    # ---- reads (scatter by owner, gather by row) ------------------------
+    def get_feature(self, tid: int, nid: int) -> np.ndarray:
+        return self.shards[self.partitioner.shard_of(tid, nid)].get_feature(tid, nid)
+
+    def neighbors(self, tid: int, nid: int):
+        return self.shards[self.partitioner.shard_of(tid, nid)].neighbors(tid, nid)
+
+    def _owner_groups(self, types: np.ndarray, ids: np.ndarray):
+        owners = self.partitioner.shard_array(types, ids)
+        for p in range(self.num_shards):
+            sel = np.nonzero(owners == p)[0]
+            if sel.size:
+                yield p, sel
+
+    def counts(self, types: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        out = np.zeros(len(ids), np.int64)
+        for p, sel in self._owner_groups(types, ids):
+            out[sel] = self.shards[p].counts(types[sel], ids[sel])
+        return out
+
+    def sample_batched(self, types: np.ndarray, ids: np.ndarray, fanout: int,
+                       uniforms: np.ndarray):
+        n = ids.shape[0]
+        out_ty = np.zeros((n, fanout), np.int32)
+        out_id = np.zeros((n, fanout), np.int32)
+        out_mask = np.zeros((n, fanout), np.float32)
+        for p, sel in self._owner_groups(types, ids):
+            t, i, m = self.shards[p].sample_batched(types[sel], ids[sel],
+                                                    fanout, uniforms[sel])
+            out_ty[sel], out_id[sel], out_mask[sel] = t, i, m
+        return out_ty, out_id, out_mask
+
+    def gather_features(self, types: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        flat_t = types.reshape(-1).astype(np.int64)
+        flat_i = ids.reshape(-1).astype(np.int64)
+        out = np.zeros((flat_t.shape[0], self.feat_dim), np.float32)
+        for p, sel in self._owner_groups(flat_t, flat_i):
+            out[sel] = self.shards[p].gather_features(flat_t[sel], flat_i[sel])
+        return out.reshape(*types.shape, self.feat_dim)
+
+
+class ShardView:
+    """A shard-pinned view of a :class:`ShardedEngine`.
+
+    Implements the same GraphEngine protocol by delegating to the composite
+    engine, while accounting how many query rows resolved on the home shard
+    vs remotely — the scatter-gather fan-out a deployment pays network RPCs
+    for.  Each shard's :class:`EmbeddingLifecycle` builds tiles through its
+    own view, so remote-resolution cost is attributable per shard.
+    """
+
+    def __init__(self, engine: ShardedEngine, home: int):
+        self.inner = engine
+        self.home = int(home)
+        self.local_rows = 0
+        self.remote_rows = 0
+
+    @property
+    def feat_dim(self) -> int:
+        return self.inner.feat_dim
+
+    @property
+    def join_reads(self) -> int:
+        return self.inner.join_reads
+
+    def _account(self, types, ids) -> None:
+        owners = self.inner.partitioner.shard_array(
+            np.asarray(types).reshape(-1), np.asarray(ids).reshape(-1))
+        local = int((owners == self.home).sum())
+        self.local_rows += local
+        self.remote_rows += owners.size - local
+
+    def counts(self, types, ids):
+        self._account(types, ids)
+        return self.inner.counts(types, ids)
+
+    def sample_batched(self, types, ids, fanout, uniforms):
+        self._account(types, ids)
+        return self.inner.sample_batched(types, ids, fanout, uniforms)
+
+    def gather_features(self, types, ids):
+        self._account(types, ids)
+        return self.inner.gather_features(types, ids)

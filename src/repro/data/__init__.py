@@ -1,9 +1,12 @@
-from repro.data.synthetic_graph import GraphGenConfig, generate_job_marketplace_graph
+from repro.data.synthetic_graph import (GraphGenConfig,
+                                        generate_job_marketplace_graph,
+                                        marketplace_event_stream)
 from repro.data.lm_data import synthetic_lm_batch, SyntheticTokenStream
 
 __all__ = [
     "GraphGenConfig",
     "generate_job_marketplace_graph",
+    "marketplace_event_stream",
     "synthetic_lm_batch",
     "SyntheticTokenStream",
 ]

@@ -197,3 +197,30 @@ def strip_skill_nodes(graph: HeteroGraph) -> HeteroGraph:
     g = HeteroGraph(num_nodes=dict(graph.num_nodes), features=dict(graph.features))
     g.adj = {k: v for k, v in graph.adj.items() if "skill" not in k}
     return g
+
+
+def marketplace_event_stream(graph, rng, n, *, job_every: int = 16,
+                             attrs=("title", "company")):
+    """THE synthetic §5.2 event mix every bench/test/launcher replay uses:
+    every ``job_every``-th event posts a fresh job (random features + one
+    attribute edge per name in ``attrs``), the rest are random member→job
+    engagements.  One definition, so workload arms differ only by their
+    (n, job_every, attrs) parameters — never by drifting payload shapes.
+    """
+    from repro.core.nearline import Event   # lazy: data stays core-free
+
+    events = []
+    base_job = graph.num_nodes["job"]
+    for i in range(n):
+        if i % job_every == 0:
+            payload = {"job_id": base_job + i,
+                       "features": rng.normal(size=graph.feat_dim).astype(np.float32)}
+            for a in attrs:
+                payload[a] = int(rng.integers(0, graph.num_nodes[a]))
+            events.append(Event(time=float(i), kind="job_created",
+                                payload=payload))
+        else:
+            events.append(Event(time=float(i), kind="engagement", payload={
+                "member_id": int(rng.integers(0, graph.num_nodes["member"])),
+                "job_id": int(rng.integers(0, graph.num_nodes["job"]))}))
+    return events

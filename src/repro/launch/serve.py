@@ -1,0 +1,156 @@
+"""Serving launcher: ``python -m repro.launch.serve [--smoke]``.
+
+The online serving tier (DESIGN.md §10) as one job:
+
+  1. build the job-marketplace graph and (optionally) train the encoder
+  2. partition it into P shards (hash or greedy edge-cut) and bootstrap a
+     :class:`ShardedNearline` cluster — one engine + lifecycle per shard
+  3. replay a warm-up event burst through the nearline loop (rings move,
+     dirty sets drain) so the cluster serves a LIVE graph
+  4. fire an open-loop Poisson request trace through the DynamicBatcher +
+     shard-aware Router (+ ResultCache) and print the SLO report
+  5. (``--check-parity``) assert the sharded scatter-gather path is
+     bit-identical to a single-engine ``NearlineInference`` on the same
+     events — the §10 acceptance gate
+
+Smoke: ``--smoke`` caps everything to CI-toy sizes (P=2, ~200 requests).
+"""
+from __future__ import annotations
+
+import argparse
+from dataclasses import replace
+
+import numpy as np
+
+from repro.configs.linksage import CONFIG
+from repro.core.embeddings import StalenessPolicy, tables_bitwise_equal
+from repro.core.nearline import NearlineInference
+from repro.core.partition import GraphPartitioner
+from repro.data import (GraphGenConfig, generate_job_marketplace_graph,
+                        marketplace_event_stream)
+from repro.serving import (BatchPolicy, LoadConfig, LoadGenerator, ResultCache,
+                           ShardedNearline, serve_trace)
+
+
+def make_event_burst(g, rng, n):
+    """A §5.2-shaped warm-up stream: fresh jobs + engagements."""
+    return marketplace_event_stream(g, rng, n, job_every=10)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-toy sizes: P=2 shards, ~200 requests")
+    ap.add_argument("--members", type=int, default=600)
+    ap.add_argument("--jobs", type=int, default=180)
+    ap.add_argument("--steps", type=int, default=0,
+                    help="GNN train steps (0 = random encoder params; the "
+                         "serving tier is parameter-agnostic)")
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--partition", choices=("hash", "greedy"), default="greedy")
+    ap.add_argument("--requests", type=int, default=1024)
+    ap.add_argument("--rate", type=float, default=500.0, help="arrivals/s")
+    ap.add_argument("--candidates", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--max-wait-ms", type=float, default=20.0)
+    ap.add_argument("--slo-ms", type=float, default=100.0)
+    ap.add_argument("--events", type=int, default=200,
+                    help="warm-up nearline event burst size")
+    ap.add_argument("--cache", type=int, default=4096,
+                    help="ResultCache capacity (0 disables)")
+    ap.add_argument("--check-parity", action="store_true",
+                    help="assert sharded == single-engine bit parity")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.members, args.jobs = min(args.members, 200), min(args.jobs, 60)
+        args.shards = min(args.shards, 2)
+        args.requests = min(args.requests, 200)
+        args.events = min(args.events, 80)
+        args.check_parity = True
+
+    rng = np.random.default_rng(args.seed)
+    cfg = replace(CONFIG, hidden_dim=64, embed_dim=64, fanouts=(8, 4))
+
+    # 1. graph (+ optional training) ---------------------------------------
+    graph, _ = generate_job_marketplace_graph(
+        GraphGenConfig(num_members=args.members, num_jobs=args.jobs,
+                       seed=args.seed))
+    print(f"graph: {graph.census()['total_edges']} edges")
+    if args.steps > 0:
+        from repro.core.linksage import LinkSAGETrainer
+        tr = LinkSAGETrainer(cfg, graph, seed=args.seed)
+        hist = tr.train(args.steps, batch_size=64)
+        params = tr.state.params["encoder"]
+        print(f"GNN loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+    else:
+        import jax
+        from repro.core import encoder as enc
+        params = enc.encoder_init(jax.random.PRNGKey(args.seed), cfg)
+
+    # 2. partition + cluster ----------------------------------------------
+    part = GraphPartitioner(args.shards, args.partition).fit(graph)
+    stats = part.cut_stats(graph)
+    print(f"partition: P={args.shards} strategy={args.partition} "
+          f"cut_fraction={stats['cut_fraction']:.3f} "
+          f"balance={stats['balance']:.2f} sizes={stats['shard_sizes']}")
+    policy = StalenessPolicy(closure_radius=None)
+    cluster = ShardedNearline(cfg, params, part, micro_batch=32,
+                              seed=args.seed, policy=policy)
+    cluster.bootstrap_from_graph(graph)
+
+    # 3. warm-up nearline burst --------------------------------------------
+    events = make_event_burst(graph, rng, args.events)
+    for ev in events:
+        cluster.topic.publish(ev)
+    cluster.process()
+    agg = cluster.aggregate_metrics()
+    print(f"nearline burst: {args.events} events -> "
+          f"{agg.nodes_refreshed} nodes refreshed in {agg.batches} batches "
+          f"(queue peak {agg.queue_depth_peak}, "
+          f"remote rows {cluster.remote_fraction():.1%})")
+
+    if args.check_parity:
+        nl = NearlineInference(cfg, params, micro_batch=32, seed=args.seed,
+                               policy=policy)
+        nl.bootstrap_from_graph(graph)
+        for ev in events:
+            nl.topic.publish(ev)
+        nl.process()
+        ok = tables_bitwise_equal(nl.embedding_store.live_embeddings(),
+                                  cluster.live_embeddings())
+        print(f"parity (sharded == single-engine, bitwise): "
+              f"{'PASS' if ok else 'FAIL'}")
+        assert ok, "sharded/single-engine parity violated"
+
+    # 4. request traffic ----------------------------------------------------
+    gen = LoadGenerator(
+        LoadConfig(rate_hz=args.rate, num_requests=args.requests,
+                   candidates=args.candidates, seed=args.seed),
+        num_members=args.members, num_jobs=args.jobs)
+    reqs = gen.requests()
+    pol = BatchPolicy(max_batch=args.max_batch,
+                      max_wait_s=args.max_wait_ms * 1e-3)
+    cache = ResultCache(args.cache) if args.cache else None
+    serve_trace(cluster, reqs, policy=pol, cache=None,
+                slo_ms=args.slo_ms)                      # warm the jit buckets
+    report, batcher, router = serve_trace(cluster, reqs, policy=pol,
+                                          cache=cache, slo_ms=args.slo_ms)
+    s = report.summary()
+    print(f"\nserved {s['completed']} requests "
+          f"({s['shed']} shed) in {s['batches']} batches "
+          f"(occupancy {s['occupancy_mean']:.2f})")
+    print(f"throughput: {s['throughput_rps']:.1f} req/s at rate {args.rate}/s")
+    print(f"latency: p50={s['latency_p50_ms']:.1f}ms "
+          f"p95={s['latency_p95_ms']:.1f}ms p99={s['latency_p99_ms']:.1f}ms")
+    print(f"SLO {args.slo_ms:.0f}ms violation rate: "
+          f"{s['slo_violation_rate']:.1%}")
+    if cache is not None:
+        print(f"cache: hit_rate={router.cache.hit_rate():.1%} "
+              f"size={len(router.cache)} "
+              f"invalidations={router.cache.invalidations}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

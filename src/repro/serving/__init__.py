@@ -1,0 +1,9 @@
+"""Online serving subsystem (DESIGN.md §10): sharded graph partitions, a
+dynamic micro-batching request server, and an open-loop load-generator
+harness with latency SLOs."""
+from repro.serving.batcher import (BatchPolicy, BatcherMetrics,  # noqa: F401
+                                   DynamicBatcher, ScoreRequest)
+from repro.serving.cluster import ShardedNearline  # noqa: F401
+from repro.serving.loadgen import (LoadConfig, LoadGenerator,  # noqa: F401
+                                   SLOReport, serve_trace, simulate_open_loop)
+from repro.serving.router import ResultCache, Router  # noqa: F401

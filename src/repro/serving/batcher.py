@@ -1,0 +1,126 @@
+"""Dynamic micro-batching for the scoring request path (DESIGN.md §10).
+
+Concurrent scoring traffic arrives one request at a time, but the encoder
+is only efficient on batches — and the bucketed jit path (§5) compiles one
+executable per power-of-two batch bucket.  :class:`DynamicBatcher` is the
+standard serving answer: a bounded FIFO queue drained under a
+max-batch-size / max-wait-time policy, so a batch fires as soon as it is
+full OR its oldest request has waited ``max_wait_s`` — the classic latency
+/ throughput knob (max_batch=1, max_wait=0 degenerates to the unbatched
+sequential baseline the benchmark compares against).
+
+The batcher is clock-agnostic: callers pass simulated ``now`` timestamps
+(the load generator owns the clock), so policies are testable without wall
+time.  Downstream the popped batch flows into ``encode_nodes``'s existing
+power-of-two bucket pad — the batcher never creates a new jit shape, hence
+zero new retraces.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BatchPolicy:
+    """max_batch — coalesce at most this many requests per encoder call;
+    max_wait_s — deadline: fire a partial batch once the OLDEST queued
+    request has waited this long; max_queue — bounded admission: submits
+    past this depth are shed (load-shedding beats unbounded tail latency)."""
+    max_batch: int = 32
+    max_wait_s: float = 0.05
+    max_queue: int = 1024
+
+
+@dataclass
+class ScoreRequest:
+    """One scoring call: rank ``job_ids`` for ``member_id`` (the TAJ/JYMBII
+    request shape: one seeker, a small candidate set)."""
+    time: float                    # arrival (simulated seconds)
+    member_id: int
+    job_ids: tuple
+
+    def keys(self) -> list:
+        return ([("member", int(self.member_id))]
+                + [("job", int(j)) for j in self.job_ids])
+
+
+@dataclass
+class BatcherMetrics:
+    submitted: int = 0
+    shed: int = 0                                    # rejected at max_queue
+    batches: int = 0
+    coalesced: int = 0                               # requests popped in batches
+    queue_depth_peak: int = 0
+    occupancy: list = field(default_factory=list)    # batch fill / max_batch
+
+    def summary(self) -> dict:
+        occ = np.array(self.occupancy) if self.occupancy else np.array([0.0])
+        return {
+            "submitted": self.submitted,
+            "shed": self.shed,
+            "batches": self.batches,
+            "coalesced": self.coalesced,
+            "queue_depth_peak": self.queue_depth_peak,
+            "occupancy_mean": float(occ.mean()),
+            "requests_per_batch": self.coalesced / max(self.batches, 1),
+        }
+
+
+class DynamicBatcher:
+    """Bounded queue + (max_batch, max_wait) coalescing policy."""
+
+    def __init__(self, policy: BatchPolicy | None = None):
+        self.policy = policy or BatchPolicy()
+        self._q: deque = deque()
+        self.metrics = BatcherMetrics()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def submit(self, req: ScoreRequest) -> bool:
+        """Admit a request; False = shed (queue at max_queue)."""
+        self.metrics.submitted += 1
+        if len(self._q) >= self.policy.max_queue:
+            self.metrics.shed += 1
+            return False
+        self._q.append(req)
+        self.metrics.queue_depth_peak = max(self.metrics.queue_depth_peak,
+                                            len(self._q))
+        return True
+
+    def full(self) -> bool:
+        return len(self._q) >= self.policy.max_batch
+
+    def head_time(self) -> float | None:
+        return self._q[0].time if self._q else None
+
+    def deadline(self) -> float | None:
+        """Simulated time the current head batch MUST fire by (oldest
+        arrival + max_wait), or None when idle."""
+        return None if not self._q else self._q[0].time + self.policy.max_wait_s
+
+    def trigger_time(self) -> float | None:
+        """Earliest time the policy lets a batch fire: a full batch fires
+        immediately (at the arrival completing it), a partial one at its
+        deadline."""
+        if not self._q:
+            return None
+        if self.full():
+            # the arrival that completed the batch is the latest of the
+            # first max_batch entries (FIFO: that is entry max_batch-1)
+            return self._q[self.policy.max_batch - 1].time
+        return self.deadline()
+
+    def pop_batch(self) -> list:
+        """Dequeue up to ``max_batch`` requests as one tile-bound batch
+        (the caller owns the clock and decides WHEN via trigger_time)."""
+        n = min(len(self._q), self.policy.max_batch)
+        batch = [self._q.popleft() for _ in range(n)]
+        if batch:
+            self.metrics.batches += 1
+            self.metrics.coalesced += n
+            self.metrics.occupancy.append(n / self.policy.max_batch)
+        return batch

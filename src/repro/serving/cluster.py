@@ -1,0 +1,216 @@
+"""The sharded serving cluster: P graph partitions, each its own engine +
+embedding lifecycle (DESIGN.md §10).
+
+:class:`ShardedNearline` is the horizontally-partitioned counterpart of
+:class:`repro.core.nearline.NearlineInference`: one
+:class:`~repro.core.partition.ShardedEngine` holds the partitioned graph
+state, and each shard runs its OWN :class:`EmbeddingLifecycle` (registry,
+recompute queue, store, jitted encoder replica) over a shard-pinned
+:class:`~repro.core.partition.ShardView` — tile builds resolve cross-shard
+neighbors through the composite engine while the view accounts the remote
+fan-out.  Event semantics are the shared
+:func:`~repro.core.nearline.apply_marketplace_event` (zero drift vs the
+single-engine tier); the dirty closure walks ONE cluster-wide reverse-edge
+index and routes each dirty key to its owner's queue.
+
+Parity contract (the acceptance gate): because every per-node store
+operation routes to the node's owner, and every recompute consumes the
+same per-node uniform slab, the union of the P shard stores after the same
+bootstrap + event stream is BIT-IDENTICAL to the single-shard
+``NearlineInference`` store — for any P and any partitioning strategy.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+
+from repro.configs.linksage import GNNConfig
+from repro.core.embeddings import (EmbeddingLifecycle, EmbeddingStore,
+                                   LifecycleMetrics, StalenessPolicy,
+                                   index_reverse_edges)
+from repro.core.graph import NODE_TYPE_ID, NODE_TYPES
+from repro.core.nearline import (Event, Topic, apply_marketplace_event,
+                                 poll_and_apply, poll_and_process)
+from repro.core.partition import GraphPartitioner, ShardedEngine, ShardView
+
+
+class ShardedNearline:
+    """P-shard nearline pipeline: poll → route writes by owner → dirty the
+    owners' lifecycles through one shared closure index → drain every
+    shard's priority queue."""
+
+    def __init__(self, cfg: GNNConfig, encoder_params,
+                 partitioner: GraphPartitioner, *, fanouts=None,
+                 micro_batch: int = 64, max_neighbors: int = 64, seed: int = 0,
+                 policy: StalenessPolicy | None = None,
+                 jit_encoder: bool = True):
+        self.cfg = cfg
+        self.partitioner = partitioner
+        self.micro_batch = micro_batch
+        self.topic = Topic("job-marketplace-events")
+        self.engine = ShardedEngine(cfg.feat_dim, partitioner,
+                                    max_neighbors=max_neighbors)
+        self._rev: dict = defaultdict(set)      # ONE cluster-wide closure index
+        self.caches: list = []                  # ResultCaches to dirty-invalidate
+        self.events_processed = 0               # cluster-level (shards see batches)
+        # counters folded in from caches retired via detach_cache, so the
+        # roll-up keeps their traffic after serve_trace auto-closes them
+        self.retired_cache_hits = 0
+        self.retired_cache_misses = 0
+        self.views: list[ShardView] = []
+        self.shards: list[EmbeddingLifecycle] = []
+        for p in range(partitioner.num_shards):
+            view = ShardView(self.engine, p)
+            lc = EmbeddingLifecycle(
+                cfg, encoder_params, view, fanouts=fanouts,
+                store=EmbeddingStore(f"gnn-embeddings-shard{p}"),
+                policy=policy, micro_batch=micro_batch, seed=seed,
+                jit_encoder=jit_encoder)
+            lc._rev = self._rev                 # shared: closure sees all edges
+            self.views.append(view)
+            self.shards.append(lc)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    def owner(self, node_type: str, node_id: int) -> EmbeddingLifecycle:
+        return self.shards[self.partitioner.shard_of(node_type, node_id)]
+
+    # ---- bootstrap ------------------------------------------------------
+    def bootstrap_from_graph(self, graph) -> None:
+        self.engine.bootstrap_from_graph(graph)
+        for ntype in NODE_TYPES:
+            n = graph.num_nodes.get(ntype, 0)
+            if not n:
+                continue
+            owners = self.partitioner.shard_array(
+                np.full(n, NODE_TYPE_ID[ntype]), np.arange(n))
+            for i in range(n):
+                self.shards[owners[i]].registry.add((ntype, i))
+        index_reverse_edges(graph, self._rev)
+
+    # ---- event application ----------------------------------------------
+    def _add_edge(self, src_type: str, src_id: int, dst_type: str,
+                  dst_id: int) -> None:
+        self.engine.add_edge(src_type, src_id, dst_type, dst_id)
+        self._rev[(dst_type, int(dst_id))].add((src_type, int(src_id)))
+
+    def _register(self, node_type: str, node_id: int) -> None:
+        self.owner(node_type, node_id).register(node_type, node_id)
+
+    def _apply_event(self, ev: Event):
+        return apply_marketplace_event(
+            ev, put_feature=self.engine.put_feature, add_edge=self._add_edge,
+            register=self._register)
+
+    def mark_dirty(self, node_type: str, node_id: int, t: float) -> int:
+        """Closure over the shared reverse index, each key routed to its
+        owner shard's queue; attached ResultCaches drop the dirty keys.
+
+        Cache coherence is NOT a policy knob: caches are invalidated over
+        the FULL K-hop dependency ball even when the recompute policy runs
+        a cheaper radius (radius 0 makes the *store* eventually consistent
+        by design, but a cache hit must always equal a fresh recompute —
+        the router's bit-identity contract)."""
+        lc0 = self.shards[0]
+        touched = {(node_type, int(node_id))}
+        keys = lc0.dirty_closure(touched)
+        for key in keys:
+            self.owner(*key).enqueue_dirty(key, t)
+        if self.caches:
+            full = (keys if lc0.policy.closure_radius is None else
+                    lc0.dirty_closure(touched, radius=len(lc0.fanouts)))
+            for cache in self.caches:
+                cache.invalidate(full)
+        return len(keys)
+
+    # ---- the serving loop ------------------------------------------------
+    def ingest(self, *, upto_time: float | None = None,
+               max_events: int = 10**9) -> int:
+        """Apply pending events and dirty owners WITHOUT recomputing."""
+        return poll_and_apply(self.topic, "sharded-nearline", self.micro_batch,
+                              self._apply_event, self.mark_dirty,
+                              upto_time=upto_time, max_events=max_events)
+
+    def drain(self, *, clock: float = 0.0, max_nodes: int | None = None) -> int:
+        """Drain every shard's queue (shard order is irrelevant: recomputes
+        are per-node deterministic)."""
+        return sum(lc.drain(clock=clock, max_nodes=max_nodes)
+                   for lc in self.shards)
+
+    def process(self, *, upto_time: float | None = None,
+                max_batches: int = 10**9, clock: float | None = None) -> int:
+        """Poll → apply → dirty → drain, in micro-batches (the P-shard
+        instance of the one shared nearline loop)."""
+        total = poll_and_process(
+            self.topic, "sharded-nearline", self.micro_batch,
+            self._apply_event, self.mark_dirty,
+            lambda refresh: self.drain(clock=refresh),
+            upto_time=upto_time, max_batches=max_batches, clock=clock)
+        self.events_processed += total
+        return total
+
+    def publish_version(self, *, clock: float = 0.0) -> int:
+        """Full sweep on every shard; all shard stores advance to the same
+        version number (each sweeps only its owned registry)."""
+        versions = {lc.publish_version(clock=clock) for lc in self.shards}
+        assert len(versions) == 1, f"shard versions diverged: {versions}"
+        return versions.pop()
+
+    # ---- reads across shards --------------------------------------------
+    def record(self, node_type: str, node_id: int):
+        return self.owner(node_type, node_id).store.record(node_type, node_id)
+
+    def live_embeddings(self) -> dict:
+        """Union of the shard stores' live tables (the parity comparator:
+        owners partition the key space, so the union is disjoint)."""
+        out: dict = {}
+        for lc in self.shards:
+            out.update(lc.store.live_embeddings())
+        return out
+
+    def pending(self) -> int:
+        return sum(lc.pending() for lc in self.shards)
+
+    def aggregate_metrics(self) -> LifecycleMetrics:
+        """Cluster-wide counter roll-up (sums; queue-depth peak is a max)."""
+        agg = LifecycleMetrics()
+        agg.events_processed = self.events_processed
+        agg.join_reads = self.engine.join_reads    # engine-wide, not per-shard
+        for lc in self.shards:
+            m = lc.metrics
+            agg.batches += m.batches
+            agg.nodes_refreshed += m.nodes_refreshed
+            agg.encoder_seconds += m.encoder_seconds
+            agg.join_seconds += m.join_seconds
+            agg.encoder_traces += m.encoder_traces
+            agg.staleness.extend(m.staleness)
+            agg.sweeps += m.sweeps
+            agg.queue_depth_peak = max(agg.queue_depth_peak, m.queue_depth_peak)
+        agg.cache_hits = self.retired_cache_hits
+        agg.cache_misses = self.retired_cache_misses
+        for cache in self.caches:          # attached serving caches
+            fh, fm = getattr(cache, "_folded", (0, 0))
+            agg.cache_hits += cache.metrics.cache_hits - fh
+            agg.cache_misses += cache.metrics.cache_misses - fm
+        return agg
+
+    def detach_cache(self, cache) -> None:
+        """Remove a cache from the invalidation fan-out, folding its not-
+        yet-folded hit/miss counters into the cluster roll-up (a cache can
+        attach/detach repeatedly — e.g. serve_trace replays — without
+        double counting)."""
+        fh, fm = getattr(cache, "_folded", (0, 0))
+        self.retired_cache_hits += cache.metrics.cache_hits - fh
+        self.retired_cache_misses += cache.metrics.cache_misses - fm
+        cache._folded = (cache.metrics.cache_hits, cache.metrics.cache_misses)
+        self.caches = [c for c in self.caches if c is not cache]
+
+    def remote_fraction(self) -> float:
+        """Fraction of query rows shards resolved off-home (the scatter-
+        gather network cost a real deployment would pay)."""
+        local = sum(v.local_rows for v in self.views)
+        remote = sum(v.remote_rows for v in self.views)
+        return remote / max(local + remote, 1)

@@ -1,0 +1,162 @@
+"""Open-loop Poisson load generation + latency-SLO accounting
+(DESIGN.md §10).
+
+The generator draws request arrivals from a Poisson process (exponential
+inter-arrival gaps, deterministic per seed) and replays them through a
+:class:`DynamicBatcher` + :class:`Router` on a SIMULATED clock — open
+loop: arrivals never wait for completions, so queueing delay is visible
+(the closed-loop mistake of measuring latency at the server's own pace
+hides exactly the tail the SLO cares about).
+
+One simulated inference worker serves batches.  A batch fires at
+``max(policy trigger, worker-free time)`` — a full batch as soon as the
+worker can take it, a partial one at its deadline — and its service time
+is the MEASURED wall time of the real scatter-gather scoring call (or a
+caller-fixed constant for deterministic tests), mapped 1:1 into simulated
+seconds.  Per-request latency = completion − arrival; the report carries
+throughput, p50/p95/p99, SLO-violation rate (shed requests count as
+violations), and batch occupancy.
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serving.batcher import BatchPolicy, DynamicBatcher, ScoreRequest
+
+_INF = float("inf")
+
+
+@dataclass(frozen=True)
+class LoadConfig:
+    rate_hz: float = 200.0         # open-loop Poisson arrival rate
+    num_requests: int = 256
+    candidates: int = 8            # jobs scored per request
+    seed: int = 0
+
+
+class LoadGenerator:
+    """Deterministic Poisson request trace over a member/job id space."""
+
+    def __init__(self, cfg: LoadConfig, *, num_members: int, num_jobs: int):
+        self.cfg = cfg
+        self.num_members = num_members
+        self.num_jobs = num_jobs
+
+    def requests(self) -> list:
+        c = self.cfg
+        rng = np.random.default_rng((c.seed, 0x10AD))
+        times = np.cumsum(rng.exponential(1.0 / c.rate_hz, c.num_requests))
+        members = rng.integers(0, self.num_members, c.num_requests)
+        jobs = rng.integers(0, self.num_jobs, (c.num_requests, c.candidates))
+        return [ScoreRequest(time=float(times[i]), member_id=int(members[i]),
+                             job_ids=tuple(int(j) for j in jobs[i]))
+                for i in range(c.num_requests)]
+
+
+@dataclass
+class SLOReport:
+    completed: int = 0
+    shed: int = 0
+    batches: int = 0
+    throughput_rps: float = 0.0    # completed / simulated makespan
+    latency_p50_ms: float = 0.0
+    latency_p95_ms: float = 0.0
+    latency_p99_ms: float = 0.0
+    slo_ms: float = 0.0
+    slo_violation_rate: float = 0.0
+    occupancy_mean: float = 0.0
+    latencies_s: list = field(default_factory=list, repr=False)
+
+    def summary(self) -> dict:
+        return {k: getattr(self, k) for k in
+                ("completed", "shed", "batches", "throughput_rps",
+                 "latency_p50_ms", "latency_p95_ms", "latency_p99_ms",
+                 "slo_ms", "slo_violation_rate", "occupancy_mean")}
+
+
+def simulate_open_loop(router, batcher: DynamicBatcher, requests, *,
+                       slo_ms: float = 50.0,
+                       service_s: float | None = None) -> SLOReport:
+    """Event-driven replay of an arrival trace through batcher + router.
+
+    The loop interleaves two event kinds in simulated-time order: request
+    arrivals (enqueue) and batch firings (dequeue + score).  A batch fires
+    at ``max(trigger, worker_free)`` where the policy trigger is "full →
+    now, partial → oldest + max_wait"; firing before the next arrival
+    keeps causality (a batch never contains a request that arrived after
+    it fired).  ``service_s`` fixes the per-batch service time for
+    deterministic tests; None measures the real scoring call.
+    """
+    requests = sorted(requests, key=lambda r: r.time)
+    lat: list = []
+    occ0 = len(batcher.metrics.occupancy)
+    shed0 = batcher.metrics.shed           # report deltas on reused batchers
+    free = 0.0
+    i = 0
+
+    def fire(t: float) -> None:
+        nonlocal free
+        start = max(t, free)
+        batch = batcher.pop_batch()
+        if not batch:
+            return
+        if service_s is None:
+            w0 = _time.perf_counter()
+            router.score_batch(batch)
+            svc = _time.perf_counter() - w0
+        else:
+            router.score_batch(batch)
+            svc = service_s
+        done = start + svc
+        free = done
+        lat.extend(done - r.time for r in batch)
+
+    while i < len(requests) or len(batcher):
+        nxt = requests[i].time if i < len(requests) else _INF
+        trig = batcher.trigger_time()
+        if trig is not None and max(trig, free) <= nxt:
+            fire(max(trig, free))           # includes the final partial drain
+            continue
+        batcher.submit(requests[i])
+        i += 1
+
+    shed = batcher.metrics.shed - shed0
+    lat_arr = np.array(lat) if lat else np.array([0.0])
+    first = requests[0].time if requests else 0.0
+    makespan = max(free - first, 1e-9)
+    slo_s = slo_ms * 1e-3
+    violations = int((lat_arr > slo_s).sum()) + shed
+    occ = batcher.metrics.occupancy[occ0:]
+    return SLOReport(
+        completed=len(lat),
+        shed=shed,
+        batches=len(occ),
+        throughput_rps=len(lat) / makespan,
+        latency_p50_ms=float(np.percentile(lat_arr, 50) * 1e3),
+        latency_p95_ms=float(np.percentile(lat_arr, 95) * 1e3),
+        latency_p99_ms=float(np.percentile(lat_arr, 99) * 1e3),
+        slo_ms=slo_ms,
+        slo_violation_rate=violations / max(len(lat) + shed, 1),
+        occupancy_mean=float(np.mean(occ)) if occ else 0.0,
+        latencies_s=lat,
+    )
+
+
+def serve_trace(cluster, requests, *, policy: BatchPolicy | None = None,
+                cache=None, slo_ms: float = 50.0,
+                service_s: float | None = None):
+    """One-call harness: build batcher + router over a cluster, replay a
+    trace, return (report, batcher, router).  The router is closed before
+    returning (its cache detaches from the cluster's invalidation fan-out),
+    so repeated traces over one long-lived cluster do not accumulate dead
+    caches."""
+    from repro.serving.router import Router
+    batcher = DynamicBatcher(policy)
+    router = Router(cluster, cache=cache)
+    report = simulate_open_loop(router, batcher, requests, slo_ms=slo_ms,
+                                service_s=service_s)
+    router.close()
+    return report, batcher, router

@@ -1,0 +1,147 @@
+"""Shard-aware request routing: scatter-gather scoring with a version-
+pinned result cache (DESIGN.md §10).
+
+A scoring batch needs the CURRENT embedding of every node it touches.  The
+:class:`Router` resolves them in three steps: (1) :class:`ResultCache`
+lookup — entries are pinned to the owner store's in-flight version and are
+dropped the moment the lifecycle dirty-set touches their node, so a cache
+hit is always bit-identical to a fresh recompute; (2) misses scatter by
+owner shard and recompute through each shard's existing bucketed jitted
+``encode_nodes`` (zero new retraces — the batcher feeds the same pow2
+buckets nearline drains use); (3) results gather back into request order
+and each request scores ``member · jobsᵀ``.
+
+Determinism: resolution never depends on cache state — a hit returns the
+same bits a miss would recompute (per-node uniform slabs, row-wise
+encoder), so the scatter-gather scores are bit-identical to a single-shard
+``NearlineInference`` encoding the same nodes, for any P and any cache
+hit pattern.  That is the §10 parity gate.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core.embeddings import LifecycleMetrics
+
+
+class ResultCache:
+    """LRU embedding cache keyed by (node_type, id), version-pinned.
+
+    Every entry records the owner store's in-flight version at compute
+    time; a ``get`` with a different pin misses (and evicts — the entry can
+    never become valid again).  The owning cluster invalidates dirty keys
+    on every ``mark_dirty``, so entries only survive while a recompute of
+    their node would return the same bits.  Hit/miss counters live in a
+    shared :class:`LifecycleMetrics` (the same schema nearline reports).
+    """
+
+    def __init__(self, capacity: int = 4096,
+                 metrics: LifecycleMetrics | None = None):
+        self.capacity = int(capacity)
+        self._d: OrderedDict = OrderedDict()    # key -> (emb, version)
+        self.metrics = metrics if metrics is not None else LifecycleMetrics()
+        self.invalidations = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    def get(self, key, *, version: int):
+        ent = self._d.get(key)
+        if ent is None or ent[1] != version:
+            if ent is not None:                 # stale pin: drop for good
+                del self._d[key]
+            self.metrics.cache_misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.metrics.cache_hits += 1
+        return ent[0]
+
+    def put(self, key, emb: np.ndarray, *, version: int) -> None:
+        self._d[key] = (emb, int(version))
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def invalidate(self, keys) -> int:
+        """Drop entries for dirty keys; returns #entries removed."""
+        n = 0
+        for key in keys:
+            if self._d.pop(key, None) is not None:
+                n += 1
+        self.invalidations += n
+        return n
+
+    def hit_rate(self) -> float:
+        m = self.metrics
+        return m.cache_hits / max(m.cache_hits + m.cache_misses, 1)
+
+
+class Router:
+    """Scatter-gather scoring over a :class:`ShardedNearline` cluster."""
+
+    def __init__(self, cluster, *, cache: ResultCache | None = None):
+        self.cluster = cluster
+        self.cache = cache
+        if cache is not None and not any(c is cache for c in cluster.caches):
+            cluster.caches.append(cache)        # dirty-set invalidation hook
+
+    def close(self) -> None:
+        """Detach the cache from the cluster's invalidation fan-out (its
+        hit/miss counters fold into the cluster roll-up).  Call when
+        retiring a router on a long-lived cluster — otherwise every
+        mark_dirty keeps invalidating (and retaining) the dead cache.  The
+        cache stays readable (counters, entries); it just stops receiving
+        invalidations, so do not resolve through it afterwards."""
+        if self.cache is not None:
+            self.cluster.detach_cache(self.cache)
+
+    def _inflight_version(self, key) -> int:
+        # the version the owner's next write would carry (the cache pin)
+        return self.cluster.owner(*key).store.version + 1
+
+    def resolve_embeddings(self, keys) -> dict:
+        """{key: emb} for a deduped key list: cache hits + per-owner-shard
+        recompute of the misses through the shard's bucketed encoder."""
+        out: dict = {}
+        misses: list = []
+        for key in keys:
+            emb = (self.cache.get(key, version=self._inflight_version(key))
+                   if self.cache is not None else None)
+            if emb is None:
+                misses.append(key)
+            else:
+                out[key] = emb
+        by_shard: dict = {}
+        for key in misses:
+            by_shard.setdefault(self.cluster.partitioner.shard_of(*key),
+                                []).append(key)
+        for p, shard_keys in sorted(by_shard.items()):
+            emb = self.cluster.shards[p].encode_nodes(shard_keys)
+            for r, key in enumerate(shard_keys):
+                out[key] = emb[r]
+                if self.cache is not None:
+                    self.cache.put(key, emb[r],
+                                   version=self._inflight_version(key))
+        return out
+
+    def score_batch(self, requests) -> list:
+        """Score a coalesced request batch; returns one [len(job_ids)]
+        score vector per request (dot products in embedding space)."""
+        seen: dict = {}
+        for req in requests:
+            for key in req.keys():
+                seen[key] = None
+        emb = self.resolve_embeddings(list(seen))
+        scores = []
+        for req in requests:
+            m = emb[("member", int(req.member_id))]
+            J = np.stack([emb[("job", int(j))] for j in req.job_ids])
+            scores.append(J @ m)
+        return scores

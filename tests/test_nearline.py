@@ -80,6 +80,47 @@ def test_nearline_metrics_summary_counters():
     assert s["staleness_p99_s"] == pytest.approx(np.percentile([1.0, 3.0], 99))
 
 
+def test_nearline_metrics_queue_and_cache_counters():
+    """The serving-shared counters: queue-depth peak and cache hit rate
+    flow through summary() with exact accounting."""
+    from repro.core.nearline import NearlineMetrics
+    m = NearlineMetrics()
+    s = m.summary()
+    assert s["queue_depth_peak"] == 0 and s["cache_hit_rate"] == 0.0
+    m.queue_depth_peak = 7
+    m.cache_hits, m.cache_misses = 3, 1
+    s = m.summary()
+    assert s["queue_depth_peak"] == 7
+    assert s["cache_hit_rate"] == pytest.approx(0.75)
+
+
+def test_queue_depth_peak_tracks_high_water_mark(setup):
+    """mark_dirty raises the peak; draining does not reset it."""
+    g, truth, cfg, tr = setup
+    nl = NearlineInference(cfg, tr.state.params["encoder"], micro_batch=64)
+    nl.bootstrap_from_graph(g)
+    for i in range(5):
+        nl.topic.publish(Event(time=1.0, kind="engagement",
+                               payload={"member_id": i, "job_id": i}))
+    nl.process()
+    s = nl.metrics.summary()
+    # 5 engagements dirty 5 members + 5 jobs before one drain
+    assert s["queue_depth_peak"] == 10
+    assert nl.lifecycle.pending() == 0                 # drained, peak kept
+
+
+def test_embedding_store_summary_counters():
+    st = EmbeddingStore("t")
+    st.put_embedding("job", 1, np.ones(4, np.float32), 1.0)
+    st.put_embedding("member", 2, np.ones(4, np.float32), 1.0)
+    v = st.publish()
+    st.gather("job", [1], version=v)
+    s = st.summary()
+    assert s["live_records"] == 2 and s["published_versions"] == 1
+    assert s["latest_version"] == 1
+    assert s["writes"] == 2 and s["reads"] == 1
+
+
 def test_nosql_store_counts_io():
     s = NoSQLStore("t")
     s.put("k", 1)

@@ -1,0 +1,165 @@
+"""Graph partitioning + sharded engine (DESIGN.md §10): ownership maps,
+edge-cut quality, and the cross-shard neighbor-resolution bit-parity
+contract."""
+import numpy as np
+import pytest
+
+from conftest import assert_tiles_equal, make_parity_case
+from repro.core.engine import StreamingEngine, TileBuilder
+from repro.core.graph import NODE_TYPE_ID, NODE_TYPES
+from repro.core.partition import (GraphPartitioner, ShardedEngine, ShardView,
+                                  _hash_shard)
+from repro.data import GraphGenConfig, generate_job_marketplace_graph
+
+
+@pytest.fixture(scope="module")
+def graph():
+    g, _ = generate_job_marketplace_graph(
+        GraphGenConfig(num_members=150, num_jobs=50, seed=7))
+    return g
+
+
+# ------------------------------------------------------------ partitioner
+
+
+def test_hash_partitioner_is_deterministic_and_total():
+    part = GraphPartitioner(4, "hash")
+    for tid in range(len(NODE_TYPES)):
+        for nid in (0, 1, 17, 10**6, 10**9):
+            s = part.shard_of(tid, nid)
+            assert 0 <= s < 4
+            assert s == part.shard_of(NODE_TYPES[tid], nid)   # name == id
+    # vectorized path agrees with the scalar path
+    tids = np.repeat(np.arange(6), 50)
+    nids = np.tile(np.arange(50), 6)
+    arr = part.shard_array(tids, nids)
+    assert all(arr[i] == part.shard_of(int(tids[i]), int(nids[i]))
+               for i in range(len(arr)))
+
+
+def test_hash_partitioner_spreads_load():
+    owners = _hash_shard(np.zeros(4096, np.int64), np.arange(4096), 8)
+    counts = np.bincount(owners, minlength=8)
+    assert counts.min() > 0
+    assert counts.max() / counts.mean() < 1.4
+
+
+def test_greedy_partitioner_beats_hash_on_edge_cut(graph):
+    hashed = GraphPartitioner(4, "hash")
+    greedy = GraphPartitioner(4, "greedy").fit(graph)
+    h, g = hashed.cut_stats(graph), greedy.cut_stats(graph)
+    assert g["cut_fraction"] < h["cut_fraction"]
+    assert g["balance"] <= greedy.balance_slack + 1e-9
+    assert sum(g["shard_sizes"]) == sum(graph.num_nodes.values())
+
+
+def test_greedy_falls_back_to_hash_for_unseen_nodes(graph):
+    greedy = GraphPartitioner(2, "greedy").fit(graph)
+    hashed = GraphPartitioner(2, "hash")
+    unseen = graph.num_nodes["job"] + 12345
+    assert greedy.shard_of("job", unseen) == hashed.shard_of("job", unseen)
+
+
+# --------------------------------------------------------- sharded engine
+
+
+def _sharded_of(graph, P, *, strategy="hash"):
+    part = GraphPartitioner(P, strategy)
+    if strategy == "greedy":
+        part.fit(graph)
+    eng = ShardedEngine(graph.feat_dim, part, max_neighbors=64)
+    eng.bootstrap_from_graph(graph)
+    return eng
+
+
+@pytest.mark.parametrize("P,strategy", [(1, "hash"), (3, "hash"), (2, "greedy")])
+def test_sharded_engine_bit_parity_with_single_engine(P, strategy):
+    """Same bootstrap + event suffix, same uniforms → bit-identical K-hop
+    tiles from the composite and the un-sharded engine."""
+    final_graph, _ = make_parity_case(3, num_events=30)
+    part = GraphPartitioner(P, strategy)
+    if strategy == "greedy":
+        part.fit(final_graph)
+    sharded = ShardedEngine(final_graph.feat_dim, part, max_neighbors=64)
+    sharded.bootstrap_from_graph(final_graph)
+    snap = StreamingEngine(final_graph.feat_dim, max_neighbors=64)
+    snap.bootstrap_from_graph(final_graph)
+
+    rng = np.random.default_rng(5)
+    q_ty = np.array([0, 1, 0, 2, 1, 0], np.int64)
+    q_id = np.array([3, 1, 7, 0, 2, 11], np.int64)
+    for fanouts in [(4, 3), (3, 2, 2)]:
+        b_single = TileBuilder(snap, fanouts)
+        b_sharded = TileBuilder(sharded, fanouts)
+        uniforms = rng.random((len(q_id), b_single.slab_width))
+        assert_tiles_equal(b_single.build(q_ty, q_id, uniforms=uniforms),
+                           b_sharded.build(q_ty, q_id, uniforms=uniforms),
+                           msg=f"P={P} fanouts={fanouts} ")
+
+
+def test_sharded_engine_parity_after_live_events(graph):
+    """add_edge routed by source owner keeps per-node rings bit-identical."""
+    single = StreamingEngine(graph.feat_dim, max_neighbors=64)
+    single.bootstrap_from_graph(graph)
+    sharded = _sharded_of(graph, 3)
+    rng = np.random.default_rng(11)
+    for _ in range(60):
+        m = int(rng.integers(0, graph.num_nodes["member"]))
+        j = int(rng.integers(0, graph.num_nodes["job"]))
+        for eng in (single, sharded):
+            eng.add_edge("member", m, "job", j)
+            eng.add_edge("job", j, "member", m)
+    ty = np.concatenate([np.zeros(40, np.int64), np.ones(20, np.int64)])
+    ids = np.concatenate([rng.integers(0, graph.num_nodes["member"], 40),
+                          rng.integers(0, graph.num_nodes["job"], 20)])
+    assert np.array_equal(single.counts(ty, ids), sharded.counts(ty, ids))
+    u = rng.random((60, 5))
+    for a, b in zip(single.sample_batched(ty, ids, 5, u),
+                    sharded.sample_batched(ty, ids, 5, u)):
+        assert np.array_equal(a, b)
+    assert np.array_equal(single.gather_features(ty, ids),
+                          sharded.gather_features(ty, ids))
+
+
+def test_sharded_engine_feature_writes_route_to_owner(graph):
+    sharded = _sharded_of(graph, 4)
+    part = sharded.partitioner
+    new_id = graph.num_nodes["job"] + 5
+    feat = np.full(graph.feat_dim, 3.0, np.float32)
+    sharded.put_feature(NODE_TYPE_ID["job"], new_id, feat)
+    owner = part.shard_of("job", new_id)
+    assert (NODE_TYPE_ID["job"], new_id) in sharded.shards[owner].feature_store
+    for p in range(4):
+        if p != owner:
+            assert (NODE_TYPE_ID["job"], new_id) not in sharded.shards[p].feature_store
+    assert np.array_equal(sharded.get_feature(NODE_TYPE_ID["job"], new_id), feat)
+
+
+def test_shard_view_accounts_local_vs_remote_rows(graph):
+    sharded = _sharded_of(graph, 2)
+    view = ShardView(sharded, home=0)
+    ty = np.zeros(30, np.int64)
+    ids = np.arange(30)
+    view.counts(ty, ids)
+    owners = sharded.partitioner.shard_array(ty, ids)
+    assert view.local_rows == int((owners == 0).sum())
+    assert view.remote_rows == int((owners != 0).sum())
+    assert view.local_rows + view.remote_rows == 30
+    # join_reads flows through the composite accounting
+    before = view.join_reads
+    view.gather_features(ty, ids)
+    assert view.join_reads > before
+
+
+def test_sharded_join_reads_match_single_engine(graph):
+    """The deduped multi_get accounting is preserved: unique keys partition
+    by owner, so total reads are identical."""
+    single = StreamingEngine(graph.feat_dim, max_neighbors=64)
+    single.bootstrap_from_graph(graph)
+    sharded = _sharded_of(graph, 3)
+    ty = np.zeros(64, np.int64)
+    ids = np.concatenate([np.arange(32), np.arange(32)])   # dupes dedupe
+    r0s, r0p = single.join_reads, sharded.join_reads
+    single.gather_features(ty, ids)
+    sharded.gather_features(ty, ids)
+    assert single.join_reads - r0s == sharded.join_reads - r0p == 32

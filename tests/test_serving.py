@@ -1,0 +1,347 @@
+"""The online serving subsystem (DESIGN.md §10): sharded cluster parity
+vs the single-engine nearline path, dynamic batching policy, the version-
+pinned result cache, scatter-gather routing, and the open-loop SLO
+harness."""
+import numpy as np
+import jax
+import pytest
+from dataclasses import replace
+
+from repro.configs.linksage import smoke as gnn_smoke
+from repro.core import encoder as enc
+from repro.core.embeddings import StalenessPolicy, tables_bitwise_equal
+from repro.core.nearline import Event, NearlineInference
+from repro.core.partition import GraphPartitioner
+from repro.serving import (BatchPolicy, DynamicBatcher, LoadConfig,
+                           LoadGenerator, ResultCache, Router, ScoreRequest,
+                           ShardedNearline, serve_trace, simulate_open_loop)
+from repro.data import (GraphGenConfig, generate_job_marketplace_graph,
+                        marketplace_event_stream)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g, truth = generate_job_marketplace_graph(
+        GraphGenConfig(num_members=120, num_jobs=40, seed=5))
+    cfg = replace(gnn_smoke(), feat_dim=g.feat_dim)
+    params = enc.encoder_init(jax.random.PRNGKey(0), cfg)
+    return g, cfg, params
+
+
+def _event_stream(g, rng, n=40):
+    return marketplace_event_stream(g, rng, n, job_every=12,
+                                    attrs=("title", "skill"))
+
+
+def _cluster(g, cfg, params, P, *, strategy="hash", policy=None, seed=13):
+    part = GraphPartitioner(P, strategy)
+    if strategy == "greedy":
+        part.fit(g)
+    cl = ShardedNearline(cfg, params, part, micro_batch=8, seed=seed,
+                         policy=policy)
+    cl.bootstrap_from_graph(g)
+    return cl
+
+
+# ------------------------------------------------- THE §10 parity gate
+
+
+@pytest.mark.parametrize("P,strategy", [(1, "hash"), (2, "hash"),
+                                        (4, "hash"), (2, "greedy")])
+def test_sharded_cluster_bit_parity_with_single_nearline(setup, P, strategy):
+    """Same bootstrap + event stream: the union of the P shard stores is
+    bit-identical to the single-engine NearlineInference live table."""
+    g, cfg, params = setup
+    events = _event_stream(g, np.random.default_rng(2))
+    policy = StalenessPolicy(closure_radius=None)
+
+    nl = NearlineInference(cfg, params, micro_batch=8, seed=13, policy=policy)
+    nl.bootstrap_from_graph(g)
+    cl = _cluster(g, cfg, params, P, strategy=strategy, policy=policy)
+    for ev in events:
+        nl.topic.publish(ev)
+        cl.topic.publish(ev)
+    nl.process()
+    cl.process()
+    assert tables_bitwise_equal(nl.embedding_store.live_embeddings(),
+                                cl.live_embeddings())
+    assert cl.pending() == nl.lifecycle.pending() == 0
+
+
+def test_router_scatter_gather_matches_single_engine_bits(setup):
+    """Router-resolved embeddings == single-lifecycle encode, bit for bit,
+    with and without the cache in the path."""
+    g, cfg, params = setup
+    nl = NearlineInference(cfg, params, micro_batch=8, seed=13)
+    nl.bootstrap_from_graph(g)
+    cl = _cluster(g, cfg, params, 3)
+    keys = [("member", 3), ("job", 7), ("member", 55), ("job", 0),
+            ("member", 119)]
+    golden = nl.lifecycle.encode_nodes(keys)
+    router = Router(cl, cache=ResultCache(64))
+    for _ in range(2):                       # second pass: all cache hits
+        emb = router.resolve_embeddings(keys)
+        for i, k in enumerate(keys):
+            assert np.array_equal(golden[i], emb[k]), k
+    assert router.cache.metrics.cache_hits == len(keys)
+
+
+def test_cluster_routes_dirty_closure_keys_to_owners(setup):
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 3, policy=StalenessPolicy(closure_radius=None))
+    n = cl.mark_dirty("member", 3, 1.0)
+    assert n >= 1
+    total_queued = sum(len(lc.queue) for lc in cl.shards)
+    assert total_queued == n                 # each key on exactly one shard
+    for lc in cl.shards:
+        for key in lc.queue._trigger:
+            assert cl.partitioner.shard_of(*key) == cl.shards.index(lc)
+
+
+def test_cluster_publish_version_aligns_shards(setup):
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    v = cl.publish_version(clock=1.0)
+    assert v == 1
+    sizes = [len(lc.store.table(1)) for lc in cl.shards]
+    assert sum(sizes) == sum(g.num_nodes.values())
+    assert all(s > 0 for s in sizes)         # both shards own something
+
+
+# ------------------------------------------------------------- batcher
+
+
+def test_batcher_fires_when_full():
+    b = DynamicBatcher(BatchPolicy(max_batch=4, max_wait_s=1.0))
+    for i in range(6):
+        assert b.submit(ScoreRequest(time=0.1 * i, member_id=i, job_ids=(0,)))
+    assert b.full() and b.trigger_time() == pytest.approx(0.3)
+    batch = b.pop_batch()
+    assert [r.member_id for r in batch] == [0, 1, 2, 3]    # FIFO
+    # remainder waits for its deadline
+    assert not b.full()
+    assert b.trigger_time() == pytest.approx(0.4 + 1.0)
+
+
+def test_batcher_deadline_fires_partial_batch():
+    b = DynamicBatcher(BatchPolicy(max_batch=32, max_wait_s=0.05))
+    b.submit(ScoreRequest(time=1.0, member_id=0, job_ids=(0,)))
+    b.submit(ScoreRequest(time=1.01, member_id=1, job_ids=(0,)))
+    assert b.trigger_time() == pytest.approx(1.05)         # oldest + max_wait
+    batch = b.pop_batch()
+    assert len(batch) == 2 and len(b) == 0
+    assert b.trigger_time() is None
+
+
+def test_batcher_bounded_queue_sheds():
+    b = DynamicBatcher(BatchPolicy(max_batch=4, max_wait_s=1.0, max_queue=3))
+    oks = [b.submit(ScoreRequest(time=0.0, member_id=i, job_ids=(0,)))
+           for i in range(5)]
+    assert oks == [True, True, True, False, False]
+    m = b.metrics.summary()
+    assert m["submitted"] == 5 and m["shed"] == 2
+    assert m["queue_depth_peak"] == 3
+
+
+def test_batcher_occupancy_accounting():
+    b = DynamicBatcher(BatchPolicy(max_batch=8, max_wait_s=0.0))
+    for i in range(12):
+        b.submit(ScoreRequest(time=float(i), member_id=i, job_ids=(0,)))
+    b.pop_batch()
+    b.pop_batch()
+    m = b.metrics.summary()
+    assert m["batches"] == 2 and m["coalesced"] == 12
+    assert m["occupancy_mean"] == pytest.approx((1.0 + 0.5) / 2)
+    assert m["requests_per_batch"] == 6.0
+
+
+# --------------------------------------------------------------- cache
+
+
+def test_result_cache_lru_and_counters():
+    c = ResultCache(capacity=2)
+    c.put(("job", 1), np.ones(3), version=1)
+    c.put(("job", 2), 2 * np.ones(3), version=1)
+    assert c.get(("job", 1), version=1) is not None        # 1 now MRU
+    c.put(("job", 3), 3 * np.ones(3), version=1)           # evicts 2
+    assert c.get(("job", 2), version=1) is None
+    assert c.evictions == 1
+    m = c.metrics
+    assert m.cache_hits == 1 and m.cache_misses == 1
+    assert c.hit_rate() == 0.5
+
+
+def test_result_cache_version_pin_and_invalidation():
+    c = ResultCache(capacity=8)
+    c.put(("job", 1), np.ones(3), version=1)
+    # a read pinned to a different version misses AND evicts for good
+    assert c.get(("job", 1), version=2) is None
+    assert ("job", 1) not in c
+    c.put(("job", 2), np.ones(3), version=1)
+    assert c.invalidate([("job", 2), ("job", 99)]) == 1
+    assert c.invalidations == 1 and ("job", 2) not in c
+
+
+def test_dirty_event_invalidates_cache_and_changes_scores(setup):
+    """An engagement on a cached job drops the entry; the recomputed
+    embedding differs (its ring changed) — the cache never serves stale."""
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    router = Router(cl, cache=ResultCache(256))
+    key = ("job", 3)
+    before = router.resolve_embeddings([key])[key].copy()
+    assert key in router.cache
+    for i in range(6):                       # new distinct neighbors
+        cl.topic.publish(Event(time=float(i), kind="engagement",
+                               payload={"member_id": 30 + i, "job_id": 3}))
+    cl.ingest()                              # dirty marks → invalidation hook
+    assert key not in router.cache
+    after = router.resolve_embeddings([key])[key]
+    assert np.max(np.abs(before - after)) > 1e-6
+
+
+def test_cache_invalidation_covers_full_dependency_ball(setup):
+    """Regression: cache coherence must NOT follow the recompute-policy
+    radius.  Under the default endpoints-only policy, an engagement on job
+    J must still invalidate cached embeddings of members whose K-hop tile
+    reaches J — a hit must always equal a fresh recompute."""
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)          # default policy: radius 0
+    # a member with a bootstrap engagement edge onto job 3 sits inside
+    # job 3's reverse 1-hop ball, so its 2-hop tile can sample job 3's ring
+    rev_members = [k for k in cl._rev[("job", 3)] if k[0] == "member"]
+    assert rev_members, "fixture graph must have an engaged member"
+    mkey = rev_members[0]
+    router = Router(cl, cache=ResultCache(256))
+    router.resolve_embeddings([mkey, ("job", 3)])
+    assert mkey in router.cache
+    cl.topic.publish(Event(time=1.0, kind="engagement",
+                           payload={"member_id": 50, "job_id": 3}))
+    cl.ingest()
+    # policy radius 0 queued only the two endpoints...
+    assert cl.pending() == 2
+    # ...but the cache dropped the full dependency ball, member included
+    assert mkey not in router.cache and ("job", 3) not in router.cache
+    # and a cached-path resolve equals a cache-free resolve, bit for bit
+    again = router.resolve_embeddings([mkey])[mkey]
+    fresh = Router(cl).resolve_embeddings([mkey])[mkey]
+    assert np.array_equal(again, fresh)
+
+
+def test_router_close_detaches_cache_and_serve_trace_autocloses(setup):
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    cache = ResultCache(64)
+    router = Router(cl, cache=cache)
+    assert Router(cl, cache=cache).cache is cache   # no duplicate attach
+    assert len(cl.caches) == 1
+    router.close()
+    assert cl.caches == []
+    reqs = [ScoreRequest(time=0.0, member_id=0, job_ids=(0,))]
+    _, _, r2 = serve_trace(cl, reqs, cache=ResultCache(64))
+    assert cl.caches == []                          # auto-closed
+    # retired caches' traffic stays in the cluster roll-up (no double count
+    # when the same cache re-attaches for a replay)
+    agg = cl.aggregate_metrics()
+    assert agg.cache_misses == r2.cache.metrics.cache_misses > 0
+    serve_trace(cl, reqs, cache=r2.cache)
+    agg2 = cl.aggregate_metrics()
+    assert (agg2.cache_hits + agg2.cache_misses
+            == r2.cache.metrics.cache_hits + r2.cache.metrics.cache_misses)
+
+
+# ------------------------------------------------------------- loadgen
+
+
+def test_load_generator_is_deterministic_poisson():
+    lg = LoadConfig(rate_hz=100.0, num_requests=64, candidates=3, seed=4)
+    gen = LoadGenerator(lg, num_members=50, num_jobs=20)
+    a, b = gen.requests(), gen.requests()
+    assert [r.time for r in a] == [r.time for r in b]
+    assert all(len(r.job_ids) == 3 for r in a)
+    times = np.array([r.time for r in a])
+    assert (np.diff(times) > 0).all()
+    # mean gap ~ 1/rate (loose tolerance at n=64)
+    assert 0.3 / 100 < np.mean(np.diff(times)) < 3.0 / 100
+
+
+class _StubRouter:
+    def __init__(self):
+        self.batches = []
+
+    def score_batch(self, requests):
+        self.batches.append([r.member_id for r in requests])
+        return [np.zeros(len(r.job_ids)) for r in requests]
+
+
+def test_simulate_open_loop_deterministic_latencies():
+    """Fixed service time → exact, hand-checkable batching + latencies."""
+    reqs = [ScoreRequest(time=t, member_id=i, job_ids=(0,))
+            for i, t in enumerate([0.0, 0.01, 0.02, 0.5])]
+    router = _StubRouter()
+    b = DynamicBatcher(BatchPolicy(max_batch=2, max_wait_s=0.1))
+    rep = simulate_open_loop(router, b, reqs, slo_ms=100.0, service_s=0.05)
+    # batch 1: reqs 0,1 fire full at t=0.01, done 0.06
+    # batch 2: req 2 fires at deadline 0.12, done 0.17
+    # batch 3: req 3 fires at deadline 0.6, done 0.65
+    assert router.batches == [[0, 1], [2], [3]]
+    assert rep.completed == 4 and rep.batches == 3
+    np.testing.assert_allclose(sorted(rep.latencies_s),
+                               sorted([0.06, 0.05, 0.15, 0.15]), atol=1e-9)
+    assert rep.slo_violation_rate == pytest.approx(0.5)    # two > 100 ms
+    assert rep.occupancy_mean == pytest.approx((1.0 + 0.5 + 0.5) / 3)
+
+
+def test_simulate_open_loop_backlog_coalesces():
+    """With the worker busy, arrivals accumulate and later batches fill."""
+    reqs = [ScoreRequest(time=0.001 * i, member_id=i, job_ids=(0,))
+            for i in range(10)]
+    router = _StubRouter()
+    b = DynamicBatcher(BatchPolicy(max_batch=4, max_wait_s=0.001))
+    rep = simulate_open_loop(router, b, reqs, service_s=0.1)
+    assert rep.completed == 10
+    assert [len(x) for x in router.batches] == [1, 4, 4, 1]
+    # open loop: queueing delay is visible in the tail
+    assert rep.latency_p99_ms > rep.latency_p50_ms
+
+
+def test_serve_trace_end_to_end_real_cluster(setup):
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    reqs = LoadGenerator(
+        LoadConfig(rate_hz=1000.0, num_requests=24, candidates=3, seed=2),
+        num_members=g.num_nodes["member"], num_jobs=g.num_nodes["job"]).requests()
+    report, batcher, router = serve_trace(
+        cl, reqs, policy=BatchPolicy(max_batch=8, max_wait_s=0.01),
+        cache=ResultCache(512), slo_ms=200.0)
+    assert report.completed == 24 and report.shed == 0
+    assert report.batches == batcher.metrics.batches
+    assert report.throughput_rps > 0
+    assert report.latency_p99_ms >= report.latency_p95_ms >= report.latency_p50_ms
+    # scores are reproducible: same trace again via a fresh router is equal
+    scores_a = Router(cl).score_batch(reqs[:5])
+    scores_b = Router(cl, cache=ResultCache(64)).score_batch(reqs[:5])
+    for x, y in zip(scores_a, scores_b):
+        assert np.array_equal(x, y)
+
+
+# ------------------------------------------- shared metrics counters
+
+
+def test_serving_counters_flow_into_lifecycle_summary(setup):
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    router = Router(cl, cache=ResultCache(128))
+    keys = [("member", 1), ("member", 2), ("job", 5)]
+    router.resolve_embeddings(keys)          # 3 misses
+    router.resolve_embeddings(keys)          # 3 hits
+    s = router.cache.metrics.summary()
+    assert s["cache_hit_rate"] == pytest.approx(0.5)
+    # queue-depth peak survives the drain
+    cl.topic.publish(Event(time=0.0, kind="engagement",
+                           payload={"member_id": 0, "job_id": 0}))
+    cl.process()
+    agg = cl.aggregate_metrics()
+    assert agg.queue_depth_peak >= 1
+    assert agg.nodes_refreshed >= 2
+    assert cl.aggregate_metrics().summary()["queue_depth_peak"] >= 1
