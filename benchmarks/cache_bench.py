@@ -1,0 +1,172 @@
+"""Memory-hierarchy micro-benchmarks (DESIGN.md §11).
+
+What the tier-1 feature cache costs and buys, measured off the serving
+pipeline so each term is visible in isolation:
+
+  * slab ops        — raw SlabCache lookup+gather and insert-under-eviction
+                      throughput (the overhead a hit/miss adds to a gather);
+  * hit-rate sweep  — CachedEngine.gather_features against a feature store
+                      charged with the StoreLatency remote-NoSQL cost model,
+                      at pinned hit rates 0 → 1 (frozen admission + partial
+                      prewarm): the events/s-vs-hit-rate curve the nearline
+                      sweep sees, without the encoder around it;
+  * eviction churn  — a working set ~4x the slab, so every gather admits and
+                      evicts; the parity row asserts cached output stays
+                      bit-identical to the uncached engine THROUGH the churn;
+  * sampling arms   — passthrough vs cache_aware sample_batched cost, plus
+                      the resident fraction of picks each strategy yields on
+                      a half-warm cache (the quantity cache_aware exists to
+                      raise).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, standard_graph, timed
+from repro.core.cache import CacheConfig, CachedEngine, SlabCache
+from repro.core.engine import StreamingEngine
+from repro.core.graph import NODE_TYPE_ID, NODE_TYPES
+from repro.core.stores import StoreLatency
+
+FEAT_DIM = 256
+SLOTS = 4096
+
+
+def _streaming(g, latency=None):
+    eng = StreamingEngine(g.feat_dim, max_neighbors=128)
+    eng.bootstrap_from_graph(g)
+    eng.feature_store.latency = latency
+    return eng
+
+
+def _all_keys(g):
+    tids = np.concatenate([np.full(g.num_nodes.get(t, 0), NODE_TYPE_ID[t],
+                                   np.int64) for t in NODE_TYPES])
+    nids = np.concatenate([np.arange(g.num_nodes.get(t, 0), dtype=np.int64)
+                           for t in NODE_TYPES])
+    return tids, nids
+
+
+def bench_cache_slab_ops():
+    rng = np.random.default_rng(0)
+    cache = SlabCache(FEAT_DIM, slots=SLOTS, admit_after=0)
+    tids = np.zeros(SLOTS, np.int64)
+    nids = np.arange(SLOTS, dtype=np.int64)
+    cache.insert(tids, nids, rng.random((SLOTS, FEAT_DIM)).astype(np.float32))
+
+    q = rng.integers(0, SLOTS, 2048).astype(np.int64)
+
+    def hit_path():
+        slots = cache.lookup(np.zeros(2048, np.int64), q)
+        rows = cache.gather(slots)
+        cache.touch(slots)
+        return rows
+
+    _, us = timed(hit_path, repeats=5)
+    emit("cache_slab_lookup_gather", us,
+         f"keys_per_s={2048 / (us / 1e6):.0f};slots={SLOTS};dim={FEAT_DIM}")
+
+    for policy in ("clock", "lfu"):
+        churn = SlabCache(FEAT_DIM, slots=1024, admit_after=0, policy=policy,
+                          device=False)
+        rows = rng.random((256, FEAT_DIM)).astype(np.float32)
+        state = {"next": 0}
+
+        def insert_fresh():
+            nids = np.arange(state["next"], state["next"] + 256,
+                             dtype=np.int64)
+            state["next"] += 256
+            churn.insert(np.zeros(256, np.int64), nids, rows)
+
+        _, us = timed(insert_fresh, repeats=5)
+        emit(f"cache_slab_insert_churn_{policy}", us,
+             f"inserts_per_s={256 / (us / 1e6):.0f};"
+             f"evictions={churn.evictions};slots=1024")
+
+
+def bench_cache_gather_hit_sweep():
+    """µs per 4096-key gather vs pinned hit rate, modeled remote store."""
+    g, _ = standard_graph(0)
+    eng = _streaming(g, latency=StoreLatency())
+    tids, nids = _all_keys(g)
+    rng = np.random.default_rng(1)
+    sel = rng.integers(0, len(tids), 4096)
+    qt, qi = tids[sel], nids[sel]
+    oracle = eng.gather_features(qt, qi)
+
+    base = None
+    for frac in (0.0, 0.5, 1.0):
+        ce = CachedEngine(_streaming(g, latency=StoreLatency()),
+                          SlabCache(g.feat_dim, CacheConfig(
+                              slots=8192, admit_after=float("inf"))))
+        k = int(round(frac * len(tids)))
+        if k:
+            warm = rng.permutation(len(tids))[:k]
+            ce.prewarm(tids[warm], nids[warm])
+        out, us = timed(lambda: ce.gather_features(qt, qi), repeats=5)
+        assert (out.tobytes() == oracle.tobytes()), frac   # parity every arm
+        base = base or us
+        emit(f"cache_gather_prewarm_{int(frac * 100)}", us,
+             f"keys_per_s={4096 / (us / 1e6):.0f};"
+             f"hit_rate={ce.cache.hit_rate():.3f};"
+             f"speedup_vs_cold={base / us:.2f}x;bit_parity=ok")
+
+
+def bench_cache_eviction_churn_parity():
+    """Working set ~4x the slab: every gather admits + evicts, and the
+    output must STAY bit-identical to the uncached engine through it."""
+    g, _ = standard_graph(0)
+    eng = _streaming(g)
+    ce = CachedEngine(_streaming(g), SlabCache(g.feat_dim, slots=192,
+                                               admit_after=0))
+    tids, nids = _all_keys(g)
+    rng = np.random.default_rng(2)
+
+    def churn():
+        for _ in range(8):
+            sel = rng.integers(0, len(tids), 512)
+            got = ce.gather_features(tids[sel], nids[sel])
+            want = eng.gather_features(tids[sel], nids[sel])
+            assert got.tobytes() == want.tobytes()
+        return ce
+
+    _, us = timed(churn, repeats=3)
+    emit("cache_eviction_churn", us,
+         f"evictions={ce.cache.evictions};"
+         f"hit_rate={ce.cache.hit_rate():.3f};slots=192;bit_parity=ok")
+
+
+def bench_cache_aware_sampling():
+    """passthrough vs cache_aware pick cost + resident-pick fraction on a
+    half-warm cache (the fraction of sampled neighbors whose features are
+    already slab-resident — the gather work the strategy avoids)."""
+    g, _ = standard_graph(0)
+    tids, nids = _all_keys(g)
+    rng = np.random.default_rng(3)
+    warm = rng.permutation(len(tids))[:len(tids) // 2]
+
+    ids = (np.arange(256) % g.num_nodes["member"]).astype(np.int64)
+    types = np.full(256, NODE_TYPE_ID["member"], np.int64)
+    u = rng.random((256, 8))
+
+    for sampling in ("passthrough", "cache_aware"):
+        ce = CachedEngine(_streaming(g), SlabCache(g.feat_dim, CacheConfig(
+            slots=8192, admit_after=float("inf"))), sampling=sampling)
+        ce.prewarm(tids[warm], nids[warm])
+        (ty, nid, mask), us = timed(
+            lambda: ce.sample_batched(types, ids, 8, u), repeats=5)
+        picked = mask.reshape(-1) > 0
+        resident = ce.cache.lookup(
+            ty.reshape(-1)[picked].astype(np.int64),
+            nid.reshape(-1)[picked].astype(np.int64)) >= 0
+        emit(f"cache_sampling_{sampling}", us,
+             f"parents_per_s={256 / (us / 1e6):.0f};"
+             f"resident_pick_frac={resident.mean():.3f}")
+
+
+ALL_CACHE = [
+    bench_cache_slab_ops,
+    bench_cache_gather_hit_sweep,
+    bench_cache_eviction_churn_parity,
+    bench_cache_aware_sampling,
+]

@@ -19,6 +19,7 @@ def main() -> None:
                     help="also write the emitted rows as JSON to PATH")
     args = ap.parse_args()
 
+    from benchmarks.cache_bench import ALL_CACHE
     from benchmarks.engine_bench import ALL_ENGINE
     from benchmarks.kernels_bench import ALL_KERNELS
     from benchmarks.nearline_bench import ALL_NEARLINE
@@ -28,12 +29,13 @@ def main() -> None:
     from benchmarks.transfer_bench import ALL_TRANSFER
 
     benches = (list(ALL_TABLES) + list(ALL_ENGINE) + list(ALL_KERNELS)
-               + list(ALL_NEARLINE) + list(ALL_TRAIN) + list(ALL_TRANSFER)
-               + list(ALL_SERVING))
+               + list(ALL_CACHE) + list(ALL_NEARLINE) + list(ALL_TRAIN)
+               + list(ALL_TRANSFER) + list(ALL_SERVING))
     if args.skip_slow or args.quick:
         benches = [b for b in benches if b.__name__ == "bench_graph_construction"]
-        benches += (list(ALL_ENGINE) + list(ALL_KERNELS) + list(ALL_NEARLINE)
-                    + list(ALL_TRAIN) + list(ALL_TRANSFER) + list(ALL_SERVING))
+        benches += (list(ALL_ENGINE) + list(ALL_KERNELS) + list(ALL_CACHE)
+                    + list(ALL_NEARLINE) + list(ALL_TRAIN) + list(ALL_TRANSFER)
+                    + list(ALL_SERVING))
     if args.only:
         benches = [b for b in benches if args.only in b.__name__]
 

@@ -134,14 +134,22 @@ def main():
     from repro.serving import (BatchPolicy, LoadConfig, LoadGenerator,
                                ResultCache, ShardedNearline, serve_trace)
     part = GraphPartitioner(2, "greedy").fit(graph)
+    # feature_cache: per-shard §11 hot-node slabs in front of the feature
+    # store (first touch admits; bits never change, only fetch latency)
     cluster = ShardedNearline(cfg, trainer.state.params["encoder"], part,
-                              micro_batch=32)
+                              micro_batch=32, feature_cache=1024)
     cluster.bootstrap_from_graph(graph)
     for i in range(20):                       # a small live warm-up burst
         cluster.topic.publish(Event(time=float(i), kind="engagement", payload={
             "member_id": int(rng.integers(0, args.members)),
             "job_id": int(rng.integers(0, args.jobs))}))
     cluster.process()
+    agg = cluster.aggregate_metrics()
+    fc_hits, fc_misses = agg.feature_cache_hits, agg.feature_cache_misses
+    print(f"feature cache after burst: {fc_hits}/{fc_hits + fc_misses} tile "
+          f"rows served from the hot-node slabs "
+          f"(hit rate {fc_hits / max(fc_hits + fc_misses, 1):.0%} across "
+          f"{len(cluster.feature_caches)} shards)")
     reqs = LoadGenerator(
         LoadConfig(rate_hz=500.0, num_requests=100, candidates=8),
         num_members=args.members, num_jobs=args.jobs).requests()

@@ -10,6 +10,8 @@
   linksage  — model assembly + link-prediction training (§4.3)
   embeddings— versioned EmbeddingStore + recompute lifecycle: dirty sets,
               staleness policy, incremental drain / full sweep (§5.2, §9)
+  cache     — device-resident memory hierarchy: SlabCache slabs +
+              CachedEngine feature tier on the tile-build hot path (§11)
   transfer  — frozen encoder → per-surface downstream DNNs: TAJ, JYMBII,
               JobSearch, EBR registry + multi-surface training (§5.1, §7)
   nearline  — nearline inference pipeline (§5.2, Figure 4)

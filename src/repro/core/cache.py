@@ -1,0 +1,464 @@
+"""Device-resident memory hierarchy for the tile-build hot path (DESIGN.md §11).
+
+Every K-hop tile build re-gathers node features out of host-side dict
+stores, and that host join is the one cost batching and jit cannot remove
+(ROADMAP item 2; LiGNN reports exactly this feature-fetch class dominating
+their end-to-end speedups).  Node popularity is power-law, so a small hot
+set serves most of the traffic — this module pins that hot set in a
+fixed-size slab:
+
+  SlabCache    — the shared tier machinery: a ``[slots, dim]`` slab kept as
+                 a jnp device array (hits are an on-device ``take``, misses
+                 scatter through the host staging mirror), a host-side
+                 dense ``(type, id) → slot`` index, frequency-based
+                 admission learned from miss traffic, and CLOCK or LFU
+                 eviction
+  CachedEngine — tier 1: a GraphEngine wrapper whose ``gather_features``
+                 serves hits out of the slab and sends only misses to the
+                 wrapped engine (feature writes invalidate), plus the
+                 opt-in cache-aware sampling strategy
+  (tier 2 — the encoder-output cache — lives in
+  :class:`repro.core.embeddings.EmbeddingLifecycle`, reusing SlabCache)
+
+Parity contract: a slab row is always bits the wrapped engine returned for
+that key, and it is dropped the moment the key's features are re-written
+(``put_feature``) — so a cached ``gather_features`` is bit-identical to the
+uncached engine join at every step: hit, miss, and post-eviction re-fetch.
+A cache can change latency, never bits (the same rule as the serving tier's
+ResultCache).  The ONE exception is the opt-in ``sampling="cache_aware"``
+strategy, which is distribution- (not bit-) equivalent: it permutes each
+node's merged candidate list cached-first before the inverse-CDF pick, so
+the marginal pick distribution under a uniform stream is exactly the
+uncached one (a fixed permutation of an equiprobable set), but a given
+uniform maps to a different neighbor.  The uncached ordering is retained
+as the oracle arm (same discipline as degree_weighted across backends).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.graph import NODE_TYPES
+
+POLICIES = ("clock", "lfu")
+SAMPLING = ("passthrough", "cache_aware")
+
+# packed (tid, nid) -> int64 key layout shared with the engines' dedupe
+_ID_BITS = 40
+_ID_MASK = (1 << _ID_BITS) - 1
+
+
+def pack_keys(tids: np.ndarray, nids: np.ndarray) -> np.ndarray:
+    return tids.astype(np.int64) << _ID_BITS | nids.astype(np.int64)
+
+
+@dataclass(frozen=True)
+class CacheConfig:
+    """One knob set per tier.
+
+    ``slots``       — slab rows (the device-memory budget; 0 disables).
+    ``admit_after`` — a key must have MISSED this many times before the
+                      next miss admits it (0 = admit on first touch,
+                      ``math.inf`` = never admit: the hit-rate-0 arm).
+                      Admission is learned from traffic: the counters are
+                      the observed miss stream, so one-shot cold nodes
+                      never displace the recurring hot set.
+    ``policy``      — eviction: ``clock`` (second-chance ref bits, O(1)
+                      amortized) or ``lfu`` (evict the min-use slot).
+    ``device``      — keep the jnp device slab in sync (on-device ``take``
+                      for hits, scatter on insert).  Off = host mirror only
+                      (the staging buffer doubles as the slab).
+    """
+    slots: int = 4096
+    admit_after: float = 1
+    policy: str = "clock"
+    device: bool = True
+
+
+class SlabCache:
+    """Fixed-size keyed slab: dense ``(type, id) → slot`` index over a
+    ``[slots, dim]`` row store.
+
+    The authoritative row store is the jnp device slab (when ``device``);
+    the host mirror is the pinned staging buffer misses land in before
+    being scattered to the device, and what host-side tile assembly gathers
+    hits from (one fancy index, no dict walk).  The index is one dense
+    int32 array per node type — lookup is a vectorized ``take``, grown
+    amortized-O(1) as ids appear.
+    """
+
+    def __init__(self, dim: int, config: CacheConfig | None = None, *,
+                 name: str = "slab-cache", **overrides):
+        cfg = config or CacheConfig(**overrides)
+        assert cfg.policy in POLICIES, cfg.policy
+        self.name = name
+        self.dim = int(dim)
+        self.config = cfg
+        self.slots = int(cfg.slots)
+        self._host = np.zeros((self.slots, self.dim), np.float32)
+        self._dev = None
+        if cfg.device and self.slots:
+            import jax.numpy as jnp
+            self._dev = jnp.zeros((self.slots, self.dim), jnp.float32)
+        self._key_ty = np.full(self.slots, -1, np.int64)    # -1 = free slot
+        self._key_id = np.zeros(self.slots, np.int64)
+        self._ref = np.zeros(self.slots, np.uint8)          # CLOCK bits
+        self._use = np.zeros(self.slots, np.int64)          # LFU counters
+        self._hand = 0
+        self._free = list(range(self.slots - 1, -1, -1))    # pop() -> 0, 1, ...
+        self._pending: set = set()          # staged slots not yet on device
+        self._slot_of: dict = {}                            # tid -> int32 [n]
+        self._seen: dict = {}                               # tid -> int32 [n]
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.inserts = 0
+        self.invalidations = 0
+        self.rejected = 0                                   # failed admission
+
+    def __len__(self) -> int:
+        return self.slots - len(self._free)
+
+    # ---- dense per-type index -------------------------------------------
+    def _index(self, tid: int, upto: int, kind: str = "_slot_of") -> np.ndarray:
+        d = getattr(self, kind)
+        arr = d.get(tid)
+        if arr is None:
+            arr = np.full(max(upto, 64), -1 if kind == "_slot_of" else 0,
+                          np.int64)
+            d[tid] = arr
+        elif upto > len(arr):
+            fill = -1 if kind == "_slot_of" else 0
+            grown = np.full(max(upto, 2 * len(arr)), fill, np.int64)
+            grown[:len(arr)] = arr
+            d[tid] = arr = grown
+        return arr
+
+    # ---- reads ----------------------------------------------------------
+    def lookup(self, tids: np.ndarray, nids: np.ndarray) -> np.ndarray:
+        """Vectorized slot lookup: [n] int64, -1 = miss.  No counter side
+        effects — callers account hits/misses once per logical access."""
+        out = np.full(len(tids), -1, np.int64)
+        if not self.slots:
+            return out
+        for tid in np.unique(tids):
+            arr = self._slot_of.get(int(tid))
+            if arr is None:
+                continue
+            sel = np.nonzero(tids == tid)[0]
+            n = nids[sel]
+            ok = n < len(arr)
+            if ok.any():
+                out[sel[ok]] = arr[n[ok]]
+        return out
+
+    def gather(self, slots: np.ndarray) -> np.ndarray:
+        """[k, dim] host gather of resident rows (tile assembly path)."""
+        return self._host[slots]
+
+    def _sync_device(self) -> None:
+        """Flush staged host rows to the device slab in ONE scatter.  Device
+        sync is lazy: inserts only stage + mark, so a host-only consumer (the
+        nearline tile path) never pays a device copy, and a device consumer
+        pays one scatter per read boundary instead of one per insert."""
+        if self._dev is None or not self._pending:
+            return
+        import jax.numpy as jnp
+        slots = np.fromiter(self._pending, np.int64, len(self._pending))
+        self._pending.clear()
+        self._dev = self._dev.at[jnp.asarray(slots)].set(
+            jnp.asarray(self._host[slots]))
+
+    def gather_device(self, slots):
+        """On-device ``take`` of resident rows out of the jnp slab."""
+        assert self._dev is not None, "device slab disabled"
+        self._sync_device()
+        import jax.numpy as jnp
+        return jnp.take(self._dev, jnp.asarray(slots), axis=0)
+
+    def device_table(self):
+        """The jnp slab itself (a device-side consumer indexes it by slot)."""
+        self._sync_device()
+        return self._dev
+
+    def touch(self, slots: np.ndarray) -> None:
+        """Reference resident slots (CLOCK ref bits / LFU use counts)."""
+        self._ref[slots] = 1
+        np.add.at(self._use, slots, 1)
+
+    # ---- admission + insert ---------------------------------------------
+    def note_misses(self, tids: np.ndarray, nids: np.ndarray) -> np.ndarray:
+        """Record one miss per (unique) key; returns the admission mask —
+        keys whose observed miss count now exceeds ``admit_after``."""
+        admit = np.zeros(len(tids), bool)
+        thr = self.config.admit_after
+        if not self.slots or math.isinf(thr):   # frozen admission: no bumps
+            return admit
+        for tid in np.unique(tids):
+            sel = np.nonzero(tids == tid)[0]
+            n = nids[sel]
+            seen = self._index(int(tid), int(n.max()) + 1, "_seen")
+            np.add.at(seen, n, 1)
+            admit[sel] = seen[n] > thr
+        return admit
+
+    def _evict_slot(self) -> int:
+        if self.config.policy == "lfu":
+            victim = int(np.argmin(self._use))
+        else:                                   # CLOCK second-chance sweep
+            while self._ref[self._hand]:
+                self._ref[self._hand] = 0
+                self._hand = (self._hand + 1) % self.slots
+            victim = self._hand
+            self._hand = (self._hand + 1) % self.slots
+        self._slot_of[int(self._key_ty[victim])][self._key_id[victim]] = -1
+        self._key_ty[victim] = -1
+        self.evictions += 1
+        return victim
+
+    def insert(self, tids: np.ndarray, nids: np.ndarray,
+               rows: np.ndarray) -> int:
+        """Stage ``rows`` into slots (evicting as needed); the device scatter
+        is deferred to the next device read (``_sync_device``).  Keys already
+        resident are overwritten in place.  Returns #slots written."""
+        if not self.slots:
+            return 0
+        k = min(len(tids), self.slots)
+        slots = np.empty(k, np.int64)
+        for i in range(k):
+            tid, nid = int(tids[i]), int(nids[i])
+            idx = self._index(tid, nid + 1)
+            s = idx[nid]
+            if s < 0:
+                s = self._free.pop() if self._free else self._evict_slot()
+                idx[nid] = s
+            slots[i] = s
+            self._key_ty[s] = tid
+            self._key_id[s] = nid
+            self._ref[s] = 1
+            self._use[s] = 1
+        self._host[slots] = rows[:k]            # the pinned staging write
+        if self._dev is not None:
+            self._pending.update(slots.tolist())
+        self.inserts += k
+        self.rejected += len(tids) - k
+        return k
+
+    # ---- invalidation ----------------------------------------------------
+    def invalidate(self, tid: int, nid: int) -> bool:
+        """Drop one key (feature rewrite / dirty mark); True if resident."""
+        arr = self._slot_of.get(int(tid))
+        if arr is None or nid >= len(arr) or arr[nid] < 0:
+            return False
+        s = int(arr[nid])
+        arr[nid] = -1
+        self._key_ty[s] = -1
+        self._ref[s] = 0
+        self._use[s] = 0
+        self._free.append(s)
+        self.invalidations += 1
+        return True
+
+    def clear(self) -> None:
+        for arr in self._slot_of.values():
+            arr.fill(-1)
+        self._key_ty.fill(-1)
+        self._ref.fill(0)
+        self._use.fill(0)
+        self._free = list(range(self.slots - 1, -1, -1))
+        self._pending.clear()
+        self._hand = 0
+
+    # ---- reporting -------------------------------------------------------
+    def hit_rate(self) -> float:
+        return self.hits / max(self.hits + self.misses, 1)
+
+    def summary(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": self.hit_rate(), "evictions": self.evictions,
+                "inserts": self.inserts, "invalidations": self.invalidations,
+                "resident": len(self), "slots": self.slots}
+
+
+def as_slab_cache(spec, dim: int, *, name: str, **defaults) -> SlabCache | None:
+    """Normalize a cache spec: None | slot count | CacheConfig | SlabCache.
+    ``defaults`` season the bare-slot-count form only (an explicit
+    CacheConfig or SlabCache already states its policy)."""
+    if spec is None or isinstance(spec, SlabCache):
+        return spec
+    if isinstance(spec, CacheConfig):
+        return SlabCache(dim, spec, name=name)
+    return SlabCache(dim, slots=int(spec), name=name, **defaults)
+
+
+# ----------------------------------------------------------------- tier 1
+
+
+class CachedEngine:
+    """GraphEngine wrapper: ``gather_features`` through the slab, everything
+    else delegated to the wrapped engine.
+
+    Hits are one vectorized slot lookup + slab gather (no dict walk, no
+    per-key Python); only misses reach the wrapped engine — so
+    ``join_reads`` (delegated) now counts actual store reads, and the
+    hit/miss counters mirror into an attached ``metrics`` object (the
+    lifecycle's :class:`~repro.core.embeddings.LifecycleMetrics`).
+    ``put_feature`` invalidates before writing through, which is the entire
+    tier-1 coherence story: cached rows only ever duplicate live store
+    bits.
+    """
+
+    def __init__(self, inner, cache: SlabCache | None = None, *,
+                 sampling: str = "passthrough", metrics=None, **overrides):
+        assert sampling in SAMPLING, sampling
+        self.inner = inner
+        self.cache = cache if cache is not None else SlabCache(
+            inner.feat_dim, name="feature-cache", **overrides)
+        assert self.cache.dim == inner.feat_dim, \
+            (self.cache.dim, inner.feat_dim)
+        self.sampling = sampling
+        if sampling == "cache_aware":
+            assert hasattr(inner, "neighbor_store"), \
+                "cache_aware sampling needs a ring-backed (streaming) engine"
+        self.metrics = metrics
+
+    # ---- protocol --------------------------------------------------------
+    @property
+    def feat_dim(self) -> int:
+        return self.inner.feat_dim
+
+    @property
+    def join_reads(self) -> int:
+        return self.inner.join_reads
+
+    def counts(self, types: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        return self.inner.counts(types, ids)
+
+    def sample_batched(self, types: np.ndarray, ids: np.ndarray, fanout: int,
+                       uniforms: np.ndarray):
+        if self.sampling == "cache_aware":
+            return self._sample_cache_aware(types, ids, fanout, uniforms)
+        return self.inner.sample_batched(types, ids, fanout, uniforms)
+
+    def gather_features(self, types: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        types = np.asarray(types)
+        d = self.feat_dim
+        flat_t = types.reshape(-1).astype(np.int64)
+        flat_i = np.asarray(ids).reshape(-1).astype(np.int64)
+        n = flat_t.shape[0]
+        if n == 0:
+            return np.zeros((*types.shape, d), np.float32)
+        slots = self.cache.lookup(flat_t, flat_i)
+        hit = slots >= 0
+        nh = int(hit.sum())
+        out = np.empty((n, d), np.float32)
+        if nh:
+            hs = slots[hit]
+            out[hit] = self.cache.gather(hs)
+            self.cache.touch(hs)
+        if nh < n:
+            miss = ~hit
+            mt, mi = flat_t[miss], flat_i[miss]
+            rows = self.inner.gather_features(mt, mi)
+            out[miss] = rows
+            # admission over the unique miss keys (first occurrence's row)
+            uniq, first = np.unique(pack_keys(mt, mi), return_index=True)
+            ut, ui = uniq >> _ID_BITS, uniq & _ID_MASK
+            admit = self.cache.note_misses(ut, ui)
+            if admit.any():
+                self.cache.insert(ut[admit], ui[admit], rows[first[admit]])
+        self.cache.hits += nh
+        self.cache.misses += n - nh
+        m = self.metrics
+        if m is not None:
+            m.feature_cache_hits += nh
+            m.feature_cache_misses += n - nh
+            m.feature_cache_evictions = self.cache.evictions
+        return out.reshape(*types.shape, d)
+
+    # ---- write-through invalidation -------------------------------------
+    def put_feature(self, tid: int, nid: int, feat: np.ndarray) -> None:
+        self.cache.invalidate(int(tid), int(nid))
+        self.inner.put_feature(tid, nid, feat)
+
+    def bootstrap_from_graph(self, graph) -> None:
+        self.cache.clear()
+        self.inner.bootstrap_from_graph(graph)
+
+    def prewarm(self, tids: np.ndarray, nids: np.ndarray) -> int:
+        """Force-admit a key set (bench/ops warm-start; bypasses the learned
+        admission, never the parity contract — rows still come from the
+        wrapped engine)."""
+        tids = np.asarray(tids, np.int64)
+        nids = np.asarray(nids, np.int64)
+        rows = self.inner.gather_features(tids, nids)
+        return self.cache.insert(tids, nids, rows)
+
+    # ---- cache-aware sampling -------------------------------------------
+    def _sample_cache_aware(self, types, ids, fanout, uniforms):
+        """Cached-first candidate permutation + the standard inverse-CDF
+        pick.
+
+        Per parent the merged candidate list (relation order, then ring
+        column order — the §2 offset contract) is stably reordered so slab-
+        resident neighbors form a prefix; the pick ``j = floor(u·deg)``
+        then indexes the permuted list.  For a uniform ``u`` a fixed
+        permutation of an equiprobable candidate set leaves the marginal
+        pick distribution exactly unchanged (the distribution contract,
+        tested against the passthrough oracle), while picks under the
+        deterministic per-node slabs stay pinned to the resident prefix as
+        rings grow — re-picking already-cached neighbors where the
+        passthrough index arithmetic would shift onto uncached ones.
+        """
+        ns = self.inner.neighbor_store
+        n = len(ids)
+        out_ty = np.zeros((n, fanout), np.int32)
+        out_id = np.zeros((n, fanout), np.int32)
+        out_mask = np.zeros((n, fanout), np.float32)
+        for tid, tname in enumerate(NODE_TYPES):
+            rows_all = np.nonzero(types == tid)[0]
+            if rows_all.size == 0:
+                continue
+            rels = ns._relations(tname)
+            if not rels:
+                continue
+            nid = ids[rows_all]
+            cnts = np.stack([st.counts(nid) for _, st in rels], axis=1)
+            total = cnts.sum(axis=1)
+            has = total > 0
+            if not has.any():
+                continue
+            rows_all, nid = rows_all[has], nid[has]
+            cnts, total = cnts[has], total[has]
+            m, R = rows_all.size, len(rels)
+            K = int(cnts.max())
+            cand_id = np.zeros((m, R, K), np.int32)
+            cand_ty = np.zeros((m, R, K), np.int32)
+            for r, (dtid, st) in enumerate(rels):
+                cand_id[:, r] = st.rows(nid)[:, :K]
+                cand_ty[:, r] = dtid
+            valid = np.arange(K)[None, None, :] < cnts[:, :, None]
+            resident = (self.cache.lookup(
+                cand_ty.reshape(-1).astype(np.int64),
+                cand_id.reshape(-1).astype(np.int64)
+            ).reshape(m, R, K) >= 0) & valid
+            # stable 3-way rank: resident-valid < uncached-valid < invalid;
+            # compacting the valid set preserves merged-offset semantics
+            rank = np.where(valid, np.where(resident, 0, 1), 2)
+            order = np.argsort(rank.reshape(m, R * K), axis=1, kind="stable")
+            j = (uniforms[rows_all] * total[:, None]).astype(np.int64)
+            pick = np.take_along_axis(order, j, axis=1)
+            out_id[rows_all] = np.take_along_axis(
+                cand_id.reshape(m, R * K), pick, axis=1)
+            out_ty[rows_all] = np.take_along_axis(
+                cand_ty.reshape(m, R * K), pick, axis=1)
+            out_mask[rows_all] = 1.0
+        return out_ty, out_id, out_mask
+
+    # everything else (neighbor_store, feature_store, add_edge, neighbors,
+    # get_feature — the scalar oracle reads stay uncached —, strategy, ...)
+    # delegates to the wrapped engine
+    def __getattr__(self, name):
+        return getattr(self.inner, name)

@@ -80,6 +80,12 @@ class EmbeddingStore(NoSQLStore):
         super().__init__(name)
         self.version = 0                       # last published version
         self._tables: dict[int, dict] = {}     # version -> frozen live table
+        self._caches: list = []                # attached SlabCaches (§11)
+
+    def attach_cache(self, cache) -> None:
+        """Register a memory-hierarchy SlabCache whose counters this store's
+        ``summary()`` should surface (the ops view: one store, its caches)."""
+        self._caches.append(cache)
 
     # ---- writes ---------------------------------------------------------
     def put_embedding(self, node_type: str, node_id: int, emb: np.ndarray,
@@ -136,13 +142,16 @@ class EmbeddingStore(NoSQLStore):
     def summary(self) -> dict:
         """Store-side counters (the online-feature-store view of the same
         accounting the lifecycle's ``LifecycleMetrics.summary`` reports)."""
-        return {
+        out = {
             "live_records": len(self),
             "published_versions": len(self._tables),
             "latest_version": self.version,
             "reads": self.reads,
             "writes": self.writes,
         }
+        for c in self._caches:
+            out[c.name] = c.summary()
+        return out
 
 
 def tables_bitwise_equal(a: dict, b: dict) -> bool:
@@ -254,6 +263,12 @@ class LifecycleMetrics:
     queue_depth_peak: int = 0                       # high-water recompute queue
     cache_hits: int = 0                             # serving ResultCache reads
     cache_misses: int = 0
+    feature_cache_hits: int = 0                     # tier-1 slab (DESIGN §11)
+    feature_cache_misses: int = 0
+    feature_cache_evictions: int = 0
+    embed_cache_hits: int = 0                       # tier-2 slab (DESIGN §11)
+    embed_cache_misses: int = 0
+    embed_cache_evictions: int = 0
 
     def summary(self) -> dict:
         st = np.array(self.staleness) if self.staleness else np.array([0.0])
@@ -271,6 +286,18 @@ class LifecycleMetrics:
             "queue_depth_peak": self.queue_depth_peak,
             "cache_hit_rate": (self.cache_hits
                                / max(self.cache_hits + self.cache_misses, 1)),
+            "feature_cache_hits": self.feature_cache_hits,
+            "feature_cache_misses": self.feature_cache_misses,
+            "feature_cache_evictions": self.feature_cache_evictions,
+            "feature_cache_hit_rate": (
+                self.feature_cache_hits
+                / max(self.feature_cache_hits + self.feature_cache_misses, 1)),
+            "embed_cache_hits": self.embed_cache_hits,
+            "embed_cache_misses": self.embed_cache_misses,
+            "embed_cache_evictions": self.embed_cache_evictions,
+            "embed_cache_hit_rate": (
+                self.embed_cache_hits
+                / max(self.embed_cache_hits + self.embed_cache_misses, 1)),
         }
 
 
@@ -302,7 +329,8 @@ class EmbeddingLifecycle:
                  fanouts=None, store: EmbeddingStore | None = None,
                  policy: StalenessPolicy | None = None, micro_batch: int = 64,
                  seed: int = 0, metrics=None, tile_fn=None,
-                 jit_encoder: bool = True):
+                 jit_encoder: bool = True, embed_cache=None):
+        from repro.core.cache import as_slab_cache
         self.cfg = cfg
         self.params = encoder_params
         self.engine = engine
@@ -315,9 +343,23 @@ class EmbeddingLifecycle:
         self.metrics = metrics if metrics is not None else LifecycleMetrics()
         self.tile_fn = tile_fn or self.build_tile
         self.jit_encoder = jit_encoder
+        # tier 2 of the §11 memory hierarchy: recently computed embeddings,
+        # invalidated by the FULL K-hop dirty ball in mark_dirty (same rule
+        # as the serving ResultCache — a hit may change latency, never bits).
+        # A miss costs a full encoder pass, so the bare-slots form admits on
+        # first compute rather than waiting out the tier-1 miss threshold.
+        self.embed_cache = as_slab_cache(embed_cache, cfg.embed_dim,
+                                         name="embed-cache", admit_after=0)
+        if self.embed_cache is not None:
+            self.store.attach_cache(self.embed_cache)
         self.registry: set = set()                  # known (ntype, nid) keys
         self._rev: dict = defaultdict(set)          # key -> in-neighbor keys
         self.queue = RecomputeQueue()
+        # per-node uniform slabs are a pure function of (seed, node) — the
+        # memo is the third hot-path tier (§11): a hot node re-dirtied every
+        # batch would otherwise pay a fresh Generator construction (~30 µs)
+        # per recompute.  Pure ⇒ no invalidation, bits can never change.
+        self._uniform_memo: dict = {}
         self._encode = self._make_encode()
 
     # ---- registry + reverse index ---------------------------------------
@@ -365,10 +407,27 @@ class EmbeddingLifecycle:
 
     def mark_dirty(self, node_type: str, node_id: int, t: float) -> int:
         """Dirty a touched node and its closure; returns #enqueued keys."""
-        keys = self.dirty_closure({(node_type, int(node_id))})
+        touched = {(node_type, int(node_id))}
+        keys = self.dirty_closure(touched)
+        self.invalidate_embed_cache(touched, closure=keys)
         for key in keys:
             self.enqueue_dirty(key, t)
         return len(keys)
+
+    def invalidate_embed_cache(self, touched, *, closure=None) -> None:
+        """Drop tier-2 rows over the FULL K-hop dependency ball of the
+        touched keys — regardless of the (possibly cheaper) policy radius
+        used for recompute scheduling.  The recompute queue may tolerate an
+        eventually-consistent radius; a cache may not, or a hit would
+        resurface embeddings the policy decided to refresh lazily (the same
+        rule the serving ResultCache applies)."""
+        if self.embed_cache is None:
+            return
+        full = (closure if closure is not None
+                and self.policy.closure_radius is None
+                else self.dirty_closure(touched, radius=len(self.fanouts)))
+        for nt, ni in full:
+            self.embed_cache.invalidate(NODE_TYPE_ID[nt], ni)
 
     def enqueue_stale(self, now: float) -> int:
         """Age-out: enqueue registered nodes older than max_staleness_s."""
@@ -391,8 +450,13 @@ class EmbeddingLifecycle:
 
     # ---- deterministic recompute ----------------------------------------
     def uniform_slab(self, node_type: str, node_id: int) -> np.ndarray:
-        return node_uniform_slab(self.seed, node_type, node_id,
-                                 self.builder.slab_width)
+        key = (node_type, int(node_id))
+        slab = self._uniform_memo.get(key)
+        if slab is None:
+            slab = node_uniform_slab(self.seed, node_type, node_id,
+                                     self.builder.slab_width)
+            self._uniform_memo[key] = slab
+        return slab
 
     def recompute_uniforms(self, nodes) -> np.ndarray:
         return np.stack([self.uniform_slab(nt, ni) for nt, ni in nodes])
@@ -422,6 +486,40 @@ class EmbeddingLifecycle:
         return jax.jit(fn)
 
     def encode_nodes(self, nodes) -> np.ndarray:
+        """Batched (re)compute with the tier-2 cache in front: resident keys
+        are served out of the slab (bits of a previous compute, still valid
+        because ``invalidate_embed_cache`` dropped every key whose tile
+        could have changed), only misses reach the encoder.  The encoder is
+        row-wise (bucket padding never leaks across rows), so encoding the
+        miss subset alone is bit-identical to encoding the full batch."""
+        cache = self.embed_cache
+        if cache is None or not cache.slots:
+            return self._encode_fresh(nodes)
+        tids = np.array([NODE_TYPE_ID[t] for t, _ in nodes], np.int64)
+        nids = np.array([int(i) for _, i in nodes], np.int64)
+        slots = cache.lookup(tids, nids)
+        hit = slots >= 0
+        nh = int(hit.sum())
+        out = np.empty((len(nodes), self.cfg.embed_dim), np.float32)
+        if nh:
+            hs = slots[hit]
+            out[hit] = cache.gather(hs)
+            cache.touch(hs)
+        if nh < len(nodes):
+            miss = np.nonzero(~hit)[0]
+            rows = self._encode_fresh([nodes[i] for i in miss])
+            out[miss] = rows
+            admit = cache.note_misses(tids[miss], nids[miss])
+            if admit.any():
+                cache.insert(tids[miss][admit], nids[miss][admit], rows[admit])
+        cache.hits += nh
+        cache.misses += len(nodes) - nh
+        self.metrics.embed_cache_hits += nh
+        self.metrics.embed_cache_misses += len(nodes) - nh
+        self.metrics.embed_cache_evictions = cache.evictions
+        return out
+
+    def _encode_fresh(self, nodes) -> np.ndarray:
         """One batched recompute: tile_fn -> bucket pad -> encode -> [n, e]."""
         from repro.core import encoder as enc
         from repro.core.linksage import _to_jnp

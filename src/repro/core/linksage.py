@@ -166,6 +166,11 @@ class LinkSAGETrainer:
     over ``graph`` (static training); pass a bootstrapped
     :class:`~repro.core.engine.StreamingEngine` to train against the
     evolving event-fed store — the same substrate serving reads from.
+    ``feature_cache`` (slots / CacheConfig / SlabCache) puts the §11 tier-1
+    slab in front of the engine's feature gathers — the BatchPrefetcher's
+    single worker thread builds every tile, so the cache needs no locking,
+    and cached rows mirror engine rows bit-for-bit (training batches are
+    unchanged).
     """
     cfg: GNNConfig
     graph: "HeteroGraph"
@@ -175,6 +180,7 @@ class LinkSAGETrainer:
     prefetch: int = 0
     mesh: object = None
     engine: object = None
+    feature_cache: object = None
 
     def __post_init__(self):
         from dataclasses import replace
@@ -183,6 +189,12 @@ class LinkSAGETrainer:
             self.cfg = replace(self.cfg, feat_dim=self.graph.feat_dim)
         if self.engine is None:
             self.engine = SnapshotEngine(self.graph)
+        if self.feature_cache is not None:
+            from repro.core.cache import CachedEngine, as_slab_cache
+            self.feature_cache = as_slab_cache(
+                self.feature_cache, self.cfg.feat_dim,
+                name="train-feature-cache")
+            self.engine = CachedEngine(self.engine, self.feature_cache)
         self.builder = TileBuilder(self.engine, self.cfg.fanouts)
         key = jax.random.PRNGKey(self.seed)
         params = linksage_init(key, self.cfg)

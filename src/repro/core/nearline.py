@@ -183,10 +183,17 @@ class NearlineInference:
                  micro_batch: int = 64, max_neighbors: int = 64, seed: int = 0,
                  join_impl: str = "batched", jit_encoder: bool = True,
                  strategy: str = "uniform", policy: StalenessPolicy | None = None,
-                 store: EmbeddingStore | None = None):
+                 store: EmbeddingStore | None = None, feature_cache=None,
+                 cache_sampling: str = "passthrough", embed_cache=None):
+        from repro.core.cache import CachedEngine, as_slab_cache
         assert join_impl in ("batched", "scalar"), join_impl
         # the scalar arm is the uniform-sampling oracle; it has no weighted walk
         assert join_impl == "batched" or strategy == "uniform", (join_impl, strategy)
+        # cache-aware sampling is a distributional (not bitwise) arm: the
+        # scalar oracle and the weighted walk both pin the uncached ordering
+        assert cache_sampling == "passthrough" or (
+            join_impl == "batched" and strategy == "uniform"), (
+            cache_sampling, join_impl, strategy)
         self.cfg = cfg
         self.params = encoder_params
         self.fanouts = tuple(fanouts or cfg.fanouts)
@@ -196,10 +203,20 @@ class NearlineInference:
         self.topic = Topic("job-marketplace-events")
         self.engine = StreamingEngine(cfg.feat_dim, max_neighbors=max_neighbors,
                                       strategy=strategy)
+        # tier 1 of the §11 memory hierarchy: the tile builder below gathers
+        # through the slab; put_feature invalidates before writing through
+        cache = as_slab_cache(feature_cache, cfg.feat_dim, name="feature-cache")
+        if cache is not None or cache_sampling != "passthrough":
+            self.engine = CachedEngine(self.engine, cache,
+                                       sampling=cache_sampling)
         self.lifecycle = EmbeddingLifecycle(
             cfg, encoder_params, self.engine, fanouts=self.fanouts,
             store=store, policy=policy, micro_batch=micro_batch, seed=seed,
-            tile_fn=self._sequential_join, jit_encoder=jit_encoder)
+            tile_fn=self._sequential_join, jit_encoder=jit_encoder,
+            embed_cache=embed_cache)
+        if isinstance(self.engine, CachedEngine):
+            self.engine.metrics = self.lifecycle.metrics
+            self.lifecycle.store.attach_cache(self.engine.cache)
         self.builder = self.lifecycle.builder
 
     # lifecycle views (store/metrics live on the lifecycle now)
@@ -214,6 +231,12 @@ class NearlineInference:
     @metrics.setter
     def metrics(self, m) -> None:
         self.lifecycle.metrics = m
+        if hasattr(self.engine, "metrics"):     # keep the CachedEngine mirror
+            self.engine.metrics = m
+
+    @property
+    def feature_cache(self):
+        return getattr(self.engine, "cache", None)
 
     # engine-store views (the stores belong to the StreamingEngine now)
     @property

@@ -15,17 +15,49 @@ semantics of their own.
 """
 from __future__ import annotations
 
+import time
+from dataclasses import dataclass
+
 import numpy as np
 
 from repro.core.graph import NODE_TYPE_ID, NODE_TYPES
 
 
+@dataclass(frozen=True)
+class StoreLatency:
+    """Read-path cost model for the REMOTE store the in-memory dict stands
+    in for (§5.2; DESIGN.md §11).
+
+    The real serving tier fetches features over RPC from a disk-backed
+    NoSQL store, so a read costs per-RPC dispatch plus a per-key media +
+    deserialization charge — the cost structure that makes feature fetch
+    dominate the tile-build path in production (and the regime the §11
+    feature cache exists for).  The dict-backed store reads in ~1 µs, three
+    orders of magnitude off; opting a store into this model charges the
+    difference as a deterministic spin so wall-clock measurements see it.
+    Defaults are conservative for a LOCAL disk-backed KV (one dispatch +
+    an uncached point read of a ~1 KB row); networked stores are 10-100x
+    worse.  Only reads are charged — writes are async/bulk in the real
+    tier, and the read path is what the cache tier intercepts.
+    """
+    per_rpc_us: float = 500.0
+    per_key_us: float = 20.0
+
+    def charge(self, nkeys: int) -> None:
+        end = time.perf_counter() + (
+            self.per_rpc_us + self.per_key_us * nkeys) * 1e-6
+        while time.perf_counter() < end:
+            pass
+
+
 class NoSQLStore:
     """In-memory NoSQL store with read/write accounting (I/O bottleneck
-    analysis, §5.2 challenge (c))."""
+    analysis, §5.2 challenge (c)).  ``latency`` opts the read path into the
+    :class:`StoreLatency` remote-store cost model (None = free reads)."""
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, latency: StoreLatency | None = None):
         self.name = name
+        self.latency = latency
         self._d: dict = {}
         self.reads = 0
         self.writes = 0
@@ -36,6 +68,8 @@ class NoSQLStore:
 
     def get(self, key, default=None):
         self.reads += 1
+        if self.latency is not None:
+            self.latency.charge(1)
         return self._d.get(key, default)
 
     def put_many(self, items) -> None:
@@ -46,6 +80,8 @@ class NoSQLStore:
 
     def multi_get(self, keys):
         self.reads += len(keys)
+        if self.latency is not None:
+            self.latency.charge(len(keys))
         return [self._d.get(k) for k in keys]
 
     def __contains__(self, key):

@@ -200,14 +200,40 @@ def strip_skill_nodes(graph: HeteroGraph) -> HeteroGraph:
 
 
 def marketplace_event_stream(graph, rng, n, *, job_every: int = 16,
-                             attrs=("title", "company")):
+                             attrs=("title", "company"),
+                             zipf: float | None = None):
     """THE synthetic §5.2 event mix every bench/test/launcher replay uses:
     every ``job_every``-th event posts a fresh job (random features + one
     attribute edge per name in ``attrs``), the rest are random member→job
     engagements.  One definition, so workload arms differ only by their
-    (n, job_every, attrs) parameters — never by drifting payload shapes.
+    (n, job_every, attrs, zipf) parameters — never by drifting payload
+    shapes.
+
+    ``zipf`` skews engagement endpoints power-law (pmf ∝ 1/rank^zipf over a
+    node-id permutation — the Signal Integration System access pattern that
+    makes the §11 hot-node caches pay): ``None`` keeps the original uniform
+    draws bit-for-bit (the uniform path's draw order is untouched).
     """
     from repro.core.nearline import Event   # lazy: data stays core-free
+
+    def skewed(num: int):
+        # draw a zipf rank (rejection on the unbounded tail), then map rank
+        # -> node id through a per-stream permutation so the hot set is not
+        # just the low ids (which bootstrap graphs treat specially)
+        perm = rng.permutation(num)
+        def draw():
+            while True:
+                r = int(rng.zipf(zipf))
+                if r <= num:
+                    return int(perm[r - 1])
+        return draw
+
+    if zipf is not None:
+        draw_member = skewed(graph.num_nodes["member"])
+        draw_job = skewed(graph.num_nodes["job"])
+    else:
+        draw_member = lambda: int(rng.integers(0, graph.num_nodes["member"]))
+        draw_job = lambda: int(rng.integers(0, graph.num_nodes["job"]))
 
     events = []
     base_job = graph.num_nodes["job"]
@@ -221,6 +247,5 @@ def marketplace_event_stream(graph, rng, n, *, job_every: int = 16,
                                 payload=payload))
         else:
             events.append(Event(time=float(i), kind="engagement", payload={
-                "member_id": int(rng.integers(0, graph.num_nodes["member"])),
-                "job_id": int(rng.integers(0, graph.num_nodes["job"]))}))
+                "member_id": draw_member(), "job_id": draw_job()}))
     return events

@@ -44,7 +44,15 @@ class ShardedNearline:
                  partitioner: GraphPartitioner, *, fanouts=None,
                  micro_batch: int = 64, max_neighbors: int = 64, seed: int = 0,
                  policy: StalenessPolicy | None = None,
-                 jit_encoder: bool = True):
+                 jit_encoder: bool = True, feature_cache=None,
+                 embed_cache=None):
+        from repro.core.cache import CachedEngine, SlabCache, as_slab_cache
+        # each shard owns its slab (a real deployment's caches live in the
+        # shard processes) — a shared SlabCache instance would alias them
+        assert not isinstance(feature_cache, SlabCache), \
+            "sharded tier builds one slab per shard — pass slots or a CacheConfig"
+        assert not isinstance(embed_cache, SlabCache), \
+            "sharded tier builds one slab per shard — pass slots or a CacheConfig"
         self.cfg = cfg
         self.partitioner = partitioner
         self.micro_batch = micro_batch
@@ -53,6 +61,8 @@ class ShardedNearline:
                                     max_neighbors=max_neighbors)
         self._rev: dict = defaultdict(set)      # ONE cluster-wide closure index
         self.caches: list = []                  # ResultCaches to dirty-invalidate
+        self.feature_caches: list = []          # per-shard tier-1 slabs (§11)
+        self.embed_caches: list = []            # per-shard tier-2 slabs (§11)
         self.events_processed = 0               # cluster-level (shards see batches)
         # counters folded in from caches retired via detach_cache, so the
         # roll-up keeps their traffic after serve_trace auto-closes them
@@ -62,11 +72,22 @@ class ShardedNearline:
         self.shards: list[EmbeddingLifecycle] = []
         for p in range(partitioner.num_shards):
             view = ShardView(self.engine, p)
+            eng = view
+            fc = as_slab_cache(feature_cache, cfg.feat_dim,
+                               name=f"feature-cache-shard{p}")
+            if fc is not None:
+                eng = CachedEngine(view, fc)
+                self.feature_caches.append(fc)
             lc = EmbeddingLifecycle(
-                cfg, encoder_params, view, fanouts=fanouts,
+                cfg, encoder_params, eng, fanouts=fanouts,
                 store=EmbeddingStore(f"gnn-embeddings-shard{p}"),
                 policy=policy, micro_batch=micro_batch, seed=seed,
-                jit_encoder=jit_encoder)
+                jit_encoder=jit_encoder, embed_cache=embed_cache)
+            if fc is not None:
+                eng.metrics = lc.metrics        # mirror hits into shard counters
+                lc.store.attach_cache(fc)
+            if lc.embed_cache is not None:
+                self.embed_caches.append(lc.embed_cache)
             lc._rev = self._rev                 # shared: closure sees all edges
             self.views.append(view)
             self.shards.append(lc)
@@ -100,9 +121,17 @@ class ShardedNearline:
     def _register(self, node_type: str, node_id: int) -> None:
         self.owner(node_type, node_id).register(node_type, node_id)
 
+    def _put_feature(self, tid: int, nid: int, feat) -> None:
+        # cluster writes route by owner through the ShardedEngine, bypassing
+        # the shard views' CachedEngine wrappers — so tier-1 write-through
+        # invalidation happens here, before the store mutates
+        for fc in self.feature_caches:
+            fc.invalidate(int(tid), int(nid))
+        self.engine.put_feature(tid, nid, feat)
+
     def _apply_event(self, ev: Event):
         return apply_marketplace_event(
-            ev, put_feature=self.engine.put_feature, add_edge=self._add_edge,
+            ev, put_feature=self._put_feature, add_edge=self._add_edge,
             register=self._register)
 
     def mark_dirty(self, node_type: str, node_id: int, t: float) -> int:
@@ -119,11 +148,14 @@ class ShardedNearline:
         keys = lc0.dirty_closure(touched)
         for key in keys:
             self.owner(*key).enqueue_dirty(key, t)
-        if self.caches:
+        if self.caches or self.embed_caches:
             full = (keys if lc0.policy.closure_radius is None else
                     lc0.dirty_closure(touched, radius=len(lc0.fanouts)))
             for cache in self.caches:
                 cache.invalidate(full)
+            for ec in self.embed_caches:
+                for nt, ni in full:
+                    ec.invalidate(NODE_TYPE_ID[nt], ni)
         return len(keys)
 
     # ---- the serving loop ------------------------------------------------
@@ -195,6 +227,16 @@ class ShardedNearline:
             fh, fm = getattr(cache, "_folded", (0, 0))
             agg.cache_hits += cache.metrics.cache_hits - fh
             agg.cache_misses += cache.metrics.cache_misses - fm
+        # slab counters roll up from the caches themselves (robust against
+        # per-shard metrics objects being swapped by benches)
+        for fc in self.feature_caches:
+            agg.feature_cache_hits += fc.hits
+            agg.feature_cache_misses += fc.misses
+            agg.feature_cache_evictions += fc.evictions
+        for ec in self.embed_caches:
+            agg.embed_cache_hits += ec.hits
+            agg.embed_cache_misses += ec.misses
+            agg.embed_cache_evictions += ec.evictions
         return agg
 
     def detach_cache(self, cache) -> None:
