@@ -23,6 +23,7 @@ def main() -> None:
     from benchmarks.engine_bench import ALL_ENGINE
     from benchmarks.kernels_bench import ALL_KERNELS
     from benchmarks.nearline_bench import ALL_NEARLINE
+    from benchmarks.resilience_bench import ALL_RESILIENCE
     from benchmarks.serving_bench import ALL_SERVING
     from benchmarks.tables import ALL_TABLES
     from benchmarks.train_bench import ALL_TRAIN
@@ -30,12 +31,12 @@ def main() -> None:
 
     benches = (list(ALL_TABLES) + list(ALL_ENGINE) + list(ALL_KERNELS)
                + list(ALL_CACHE) + list(ALL_NEARLINE) + list(ALL_TRAIN)
-               + list(ALL_TRANSFER) + list(ALL_SERVING))
+               + list(ALL_TRANSFER) + list(ALL_SERVING) + list(ALL_RESILIENCE))
     if args.skip_slow or args.quick:
         benches = [b for b in benches if b.__name__ == "bench_graph_construction"]
         benches += (list(ALL_ENGINE) + list(ALL_KERNELS) + list(ALL_CACHE)
                     + list(ALL_NEARLINE) + list(ALL_TRAIN) + list(ALL_TRANSFER)
-                    + list(ALL_SERVING))
+                    + list(ALL_SERVING) + list(ALL_RESILIENCE))
     if args.only:
         benches = [b for b in benches if args.only in b.__name__]
 

@@ -1,3 +1,5 @@
-from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.checkpoint import (save_checkpoint, load_checkpoint,
+                                         save_state, load_state, latest_step)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "save_state", "load_state",
+           "latest_step"]

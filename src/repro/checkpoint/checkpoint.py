@@ -57,6 +57,25 @@ def load_checkpoint(directory: str, step: int, template):
     return jax.tree_util.tree_unflatten(treedef, restored)
 
 
+def save_state(directory: str, step: int, state, *, name: str = "state") -> str:
+    """Persist a nested Python/numpy state blob (the serving tier's cluster
+    snapshots — dicts keyed by (type, id) tuples, heaps, ring arrays) next
+    to the pytree layout, as ``<name>.npy`` inside the same ``step_*`` dir.
+    Arbitrary structure rules out the flat-npz manifest; a 1-element object
+    array keeps the on-disk idiom numpy end to end."""
+    path = os.path.join(directory, f"step_{step:06d}")
+    os.makedirs(path, exist_ok=True)
+    blob = np.empty(1, object)
+    blob[0] = state
+    np.save(os.path.join(path, f"{name}.npy"), blob, allow_pickle=True)
+    return path
+
+
+def load_state(directory: str, step: int, *, name: str = "state"):
+    path = os.path.join(directory, f"step_{step:06d}", f"{name}.npy")
+    return np.load(path, allow_pickle=True)[0]
+
+
 def latest_step(directory: str) -> int | None:
     if not os.path.isdir(directory):
         return None

@@ -271,6 +271,40 @@ class SlabCache:
         self._pending.clear()
         self._hand = 0
 
+    # ---- checkpoint (DESIGN.md §12) -------------------------------------
+    def snapshot(self) -> dict:
+        """Index + host slab + eviction state.  A slab never changes bits
+        (rows duplicate live store state), so snapshotting it is a warm-
+        restart PERFORMANCE feature: the restored tier starts hot instead
+        of re-learning admission from scratch."""
+        return {
+            "host": self._host.copy(),
+            "key_ty": self._key_ty.copy(), "key_id": self._key_id.copy(),
+            "ref": self._ref.copy(), "use": self._use.copy(),
+            "hand": self._hand, "free": list(self._free),
+            "slot_of": {t: a.copy() for t, a in self._slot_of.items()},
+            "seen": {t: a.copy() for t, a in self._seen.items()},
+            "counters": (self.hits, self.misses, self.evictions,
+                         self.inserts, self.invalidations, self.rejected),
+        }
+
+    def restore(self, state: dict) -> None:
+        self._host = state["host"].copy()
+        self._key_ty = state["key_ty"].copy()
+        self._key_id = state["key_id"].copy()
+        self._ref = state["ref"].copy()
+        self._use = state["use"].copy()
+        self._hand = int(state["hand"])
+        self._free = list(state["free"])
+        self._slot_of = {t: a.copy() for t, a in state["slot_of"].items()}
+        self._seen = {t: a.copy() for t, a in state["seen"].items()}
+        (self.hits, self.misses, self.evictions, self.inserts,
+         self.invalidations, self.rejected) = state["counters"]
+        # the host mirror is now authoritative: stage every resident slot so
+        # the next device read re-scatters the slab lazily
+        if self._dev is not None:
+            self._pending = set(np.nonzero(self._key_ty >= 0)[0].tolist())
+
     # ---- reporting -------------------------------------------------------
     def hit_rate(self) -> float:
         return self.hits / max(self.hits + self.misses, 1)

@@ -139,6 +139,20 @@ class EmbeddingStore(NoSQLStore):
         """{key: emb} snapshot of the live table (parity comparisons)."""
         return {k: rec.emb for k, rec in self._d.items()}
 
+    # ---- checkpoint (DESIGN.md §12) -------------------------------------
+    def snapshot(self) -> dict:
+        """Live records + every published version table + the version
+        counter (records are immutable, so dict copies suffice)."""
+        state = super().snapshot()
+        state["version"] = self.version
+        state["tables"] = {v: dict(tab) for v, tab in self._tables.items()}
+        return state
+
+    def restore(self, state: dict) -> None:
+        super().restore(state)
+        self.version = int(state["version"])
+        self._tables = {int(v): dict(tab) for v, tab in state["tables"].items()}
+
     def summary(self) -> dict:
         """Store-side counters (the online-feature-store view of the same
         accounting the lifecycle's ``LifecycleMetrics.summary`` reports)."""
@@ -233,10 +247,36 @@ class RecomputeQueue:
             out.append((key, self._trigger.pop(key)))
         return out
 
+    def extract(self, keys) -> list:
+        """Remove ``keys`` from the pending set, returning the live
+        ``(key, priority, trigger)`` triples (reshard migration: the dirt
+        moves WITH the node).  Heap entries left behind go stale and are
+        skipped by the lazy-deletion check in ``pop_batch``."""
+        out = []
+        for key in keys:
+            if key in self._trigger:
+                out.append((key, self._prio.pop(key), self._trigger.pop(key)))
+        return out
+
     def clear(self) -> None:
         self._heap.clear()
         self._trigger.clear()
         self._prio.clear()
+
+    # ---- checkpoint (DESIGN.md §12) -------------------------------------
+    def snapshot(self) -> dict:
+        """Heap entries AND the authoritative maps: restoring the heap
+        verbatim (stale entries included) reproduces pop order exactly,
+        tie-breaks and all — required for partial-drain bit parity."""
+        return {"heap": list(self._heap), "trigger": dict(self._trigger),
+                "prio": dict(self._prio), "seq": self._seq}
+
+    def restore(self, state: dict) -> None:
+        self._heap = list(state["heap"])
+        heapq.heapify(self._heap)          # already a heap; cheap + explicit
+        self._trigger = dict(state["trigger"])
+        self._prio = dict(state["prio"])
+        self._seq = int(state["seq"])
 
     def __len__(self) -> int:
         return len(self._trigger)
@@ -269,6 +309,9 @@ class LifecycleMetrics:
     embed_cache_hits: int = 0                       # tier-2 slab (DESIGN §11)
     embed_cache_misses: int = 0
     embed_cache_evictions: int = 0
+    shed_queue_full: int = 0                        # overload control (§12):
+    shed_deadline: int = 0                          #   sheds by reason, and
+    requests_degraded: int = 0                      #   stale-served admissions
 
     def summary(self) -> dict:
         st = np.array(self.staleness) if self.staleness else np.array([0.0])
@@ -298,6 +341,9 @@ class LifecycleMetrics:
             "embed_cache_hit_rate": (
                 self.embed_cache_hits
                 / max(self.embed_cache_hits + self.embed_cache_misses, 1)),
+            "shed_queue_full": self.shed_queue_full,
+            "shed_deadline": self.shed_deadline,
+            "requests_degraded": self.requests_degraded,
         }
 
 
@@ -564,6 +610,22 @@ class EmbeddingLifecycle:
                 self.metrics.staleness.append(clock - trig)
             total += len(nodes)
         return total
+
+    # ---- checkpoint (DESIGN.md §12) -------------------------------------
+    def snapshot(self) -> dict:
+        """Everything a warm restart must reproduce: store (live records +
+        published tables), registry, and the pending recompute queue.  NOT
+        included: the uniform memo (pure function of (seed, node) — it
+        regrows bit-identically) and the reverse index (owned by whoever
+        built it: the cluster snapshots its ONE shared index once)."""
+        return {"store": self.store.snapshot(),
+                "registry": set(self.registry),
+                "queue": self.queue.snapshot()}
+
+    def restore(self, state: dict) -> None:
+        self.store.restore(state["store"])
+        self.registry = set(state["registry"])
+        self.queue.restore(state["queue"])
 
     def publish_version(self, *, clock: float = 0.0) -> int:
         """Full-sweep path (OfflineBatchInference): recompute EVERY registry

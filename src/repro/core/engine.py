@@ -360,6 +360,19 @@ class StreamingEngine:
     def put_feature(self, tid: int, nid: int, feat: np.ndarray) -> None:
         self.feature_store.put((tid, int(nid)), feat)
 
+    # ---- checkpoint (DESIGN.md §12) -------------------------------------
+    def snapshot(self) -> dict:
+        """Full streaming-graph state: neighbor rings (with relation
+        insertion order) + the feature store."""
+        return {"neighbors": self.neighbor_store.snapshot(),
+                "features": self.feature_store.snapshot(),
+                "join_reads": self.join_reads}
+
+    def restore(self, state: dict) -> None:
+        self.neighbor_store.restore(state["neighbors"])
+        self.feature_store.restore(state["features"])
+        self.join_reads = int(state["join_reads"])
+
     # ---- reads ----------------------------------------------------------
     def get_feature(self, tid: int, nid: int) -> np.ndarray:
         self.join_reads += 1

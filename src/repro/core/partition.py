@@ -72,28 +72,86 @@ class GraphPartitioner:
         self.balance_slack = float(balance_slack)
         self._assigned: dict = {}          # (tid, nid) -> shard (greedy fit)
         self._dense: dict = {}             # tid -> [n] owner array (greedy fit)
+        # elastic resharding (DESIGN.md §12): explicit per-key reassignments
+        # layered over the base map.  The hash modulus is FROZEN at
+        # construction so add_shard never silently re-homes unrelated keys —
+        # new shards only ever receive keys through explicit assignment.
+        self._hash_mod = int(num_shards)
+        self._over: dict = {}              # tid -> [n] override array (-1 = none)
 
     # ---- ownership ------------------------------------------------------
     def shard_of(self, node_type: str | int, node_id: int) -> int:
         tid = NODE_TYPE_ID[node_type] if isinstance(node_type, str) else int(node_type)
         nid = int(node_id)
+        ov = self._over.get(tid)
+        if ov is not None and 0 <= nid < len(ov) and ov[nid] >= 0:
+            return int(ov[nid])
         arr = self._dense.get(tid)
         if arr is not None and 0 <= nid < len(arr):
             return int(arr[nid])
         return int(_hash_shard(np.array([tid]), np.array([nid]),
-                               self.num_shards)[0])
+                               self._hash_mod)[0])
 
     def shard_array(self, tids: np.ndarray, nids: np.ndarray) -> np.ndarray:
         """Vectorized ownership for flat (tid, nid) arrays: hash everywhere,
-        overridden by the dense fitted owner arrays where they cover."""
+        overridden by the dense fitted owner arrays where they cover, then
+        by explicit reshard assignments."""
         tids = np.asarray(tids)
         nids = np.asarray(nids)
-        out = _hash_shard(tids, nids, self.num_shards)
+        out = _hash_shard(tids, nids, self._hash_mod)
         for tid, arr in self._dense.items():
             sel = (tids == tid) & (nids < len(arr))
             if sel.any():
                 out[sel] = arr[nids[sel]]
+        for tid, ov in self._over.items():
+            sel = (tids == tid) & (nids < len(ov))
+            if sel.any():
+                vals = ov[nids[sel]]
+                idx = np.nonzero(sel)[0][vals >= 0]
+                out[idx] = vals[vals >= 0]
         return out.astype(np.int64)
+
+    # ---- elastic resharding (DESIGN.md §12) -----------------------------
+    def add_shard(self) -> int:
+        """Grow the shard space by one EMPTY shard and return its index.
+        Existing ownership is untouched (the hash modulus stays frozen);
+        the new shard acquires keys only via ``assign``."""
+        self.num_shards += 1
+        return self.num_shards - 1
+
+    def assign(self, keys, shard: int) -> None:
+        """Explicitly re-home ``keys`` ((node_type|tid, nid) pairs) onto
+        ``shard`` — the reshard migration map."""
+        assert 0 <= int(shard) < self.num_shards, shard
+        for nt, ni in keys:
+            tid = NODE_TYPE_ID[nt] if isinstance(nt, str) else int(nt)
+            nid = int(ni)
+            ov = self._over.get(tid)
+            if ov is None or nid >= len(ov):
+                grown = np.full(max(nid + 1, 64,
+                                    2 * (0 if ov is None else len(ov))),
+                                -1, np.int64)
+                if ov is not None:
+                    grown[:len(ov)] = ov
+                self._over[tid] = ov = grown
+            ov[nid] = int(shard)
+
+    # ---- checkpoint (DESIGN.md §12) -------------------------------------
+    def snapshot(self) -> dict:
+        return {"num_shards": self.num_shards, "strategy": self.strategy,
+                "balance_slack": self.balance_slack,
+                "hash_mod": self._hash_mod,
+                "dense": {t: a.copy() for t, a in self._dense.items()},
+                "over": {t: a.copy() for t, a in self._over.items()}}
+
+    @classmethod
+    def from_snapshot(cls, state: dict) -> "GraphPartitioner":
+        part = cls(state["num_shards"], state["strategy"],
+                   balance_slack=state["balance_slack"])
+        part._hash_mod = int(state["hash_mod"])
+        part._dense = {int(t): a.copy() for t, a in state["dense"].items()}
+        part._over = {int(t): a.copy() for t, a in state["over"].items()}
+        return part
 
     # ---- fitting --------------------------------------------------------
     def fit(self, graph: HeteroGraph) -> "GraphPartitioner":
@@ -184,6 +242,8 @@ class ShardedEngine:
                  max_neighbors: int = 64, strategy: str = "uniform"):
         self.feat_dim = feat_dim
         self.partitioner = partitioner
+        self.max_neighbors = max_neighbors
+        self.strategy = strategy
         self.shards = [StreamingEngine(feat_dim, max_neighbors=max_neighbors,
                                        strategy=strategy)
                        for _ in range(partitioner.num_shards)]
@@ -234,6 +294,45 @@ class ShardedEngine:
     def put_feature(self, tid: int, nid: int, feat: np.ndarray) -> None:
         p = self.partitioner.shard_of(tid, nid)
         self.shards[p].put_feature(tid, nid, feat)
+
+    # ---- elasticity + checkpoint (DESIGN.md §12) ------------------------
+    def add_shard(self) -> int:
+        """Append one empty shard engine, pre-registering every relation
+        shard 0 knows in the SAME insertion order (the merged-offset
+        contract must hold on the new shard before any row migrates in)."""
+        eng = StreamingEngine(self.feat_dim, max_neighbors=self.max_neighbors,
+                              strategy=self.strategy)
+        if self.shards:
+            eng.neighbor_store.register_relations_like(
+                self.shards[0].neighbor_store)
+        self.shards.append(eng)
+        return len(self.shards) - 1
+
+    def migrate_node(self, node_type: str, node_id: int, src: int,
+                     dst: int) -> int:
+        """Move one node's engine-side state (ring rows sourced at it + its
+        feature entry) from shard ``src`` to shard ``dst``; returns the
+        number of ring rows moved.  Rows land in the destination's relations
+        in the source's insertion order, which matches under the append-only
+        relation regime (module docstring)."""
+        a, b = self.shards[src], self.shards[dst]
+        nid = int(node_id)
+        rows = a.neighbor_store.export_node(node_type, nid)
+        b.neighbor_store.import_node(nid, rows)
+        tid = NODE_TYPE_ID[node_type]
+        feat = a.feature_store._d.pop((tid, nid), None)
+        if feat is not None:
+            b.feature_store.put((tid, nid), feat)
+        return len(rows)
+
+    def snapshot(self) -> dict:
+        return {"shards": [sh.snapshot() for sh in self.shards]}
+
+    def restore(self, state: dict) -> None:
+        assert len(state["shards"]) == len(self.shards), \
+            (len(state["shards"]), len(self.shards))
+        for sh, st in zip(self.shards, state["shards"]):
+            sh.restore(st)
 
     # ---- reads (scatter by owner, gather by row) ------------------------
     def get_feature(self, tid: int, nid: int) -> np.ndarray:

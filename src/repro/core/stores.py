@@ -90,6 +90,17 @@ class NoSQLStore:
     def __len__(self):
         return len(self._d)
 
+    # ---- checkpoint (DESIGN.md §12) -------------------------------------
+    def snapshot(self) -> dict:
+        """Copy of the full keyed state (values are treated as immutable —
+        every write path replaces whole values, never mutates in place)."""
+        return {"d": dict(self._d), "reads": self.reads, "writes": self.writes}
+
+    def restore(self, state: dict) -> None:
+        self._d = dict(state["d"])
+        self.reads = int(state["reads"])
+        self.writes = int(state["writes"])
+
 
 class RingBuffer:
     """Array-backed bounded neighbor lists for one (src_type, dst_type) edge
@@ -172,6 +183,44 @@ class RingBuffer:
             return self.buf[:0, 0]
         return self.buf[src_id, :self.count[src_id]]
 
+    # ---- checkpoint + migration (DESIGN.md §12) -------------------------
+    def snapshot(self) -> dict:
+        """Copy of (buf, count, head) — ring content is a pure function of
+        the per-source event subsequence, so this IS the replayable state."""
+        return {"buf": self.buf.copy(), "count": self.count.copy(),
+                "head": self.head.copy(), "reads": self.reads,
+                "writes": self.writes}
+
+    def restore(self, state: dict) -> None:
+        self.buf = state["buf"].copy()
+        self.count = state["count"].copy()
+        self.head = state["head"].copy()
+        self.reads = int(state["reads"])
+        self.writes = int(state["writes"])
+
+    def export_row(self, src_id: int):
+        """(buf_row, count, head) for one source node, or None if empty —
+        the unit of cross-shard ring migration."""
+        if src_id >= self.capacity or self.count[src_id] == 0:
+            return None
+        return (self.buf[src_id].copy(), int(self.count[src_id]),
+                int(self.head[src_id]))
+
+    def import_row(self, src_id: int, buf_row: np.ndarray, count: int,
+                   head: int) -> None:
+        """Install one exported row (cursor included, so append semantics
+        continue exactly where the source shard left off)."""
+        self._ensure(src_id + 1)
+        self.buf[src_id] = buf_row
+        self.count[src_id] = count
+        self.head[src_id] = head
+
+    def clear_row(self, src_id: int) -> None:
+        if src_id < self.capacity:
+            self.buf[src_id] = 0
+            self.count[src_id] = 0
+            self.head[src_id] = 0
+
 
 class NeighborStore:
     """Per-edge-type bounded neighbor rings keyed by (node_type, id).
@@ -200,6 +249,42 @@ class NeighborStore:
     def _relations(self, node_type: str):
         return [(NODE_TYPE_ID[d], st) for (s, d), st in self.stores.items()
                 if s == node_type]
+
+    # ---- checkpoint + migration (DESIGN.md §12) -------------------------
+    def register_relations_like(self, other: "NeighborStore") -> None:
+        """Create every relation ``other`` holds, in ``other``'s insertion
+        order, with zero rows — the merged-offset contract requires a fresh
+        shard to agree on relation order before any row migrates in."""
+        for (s, d) in other.stores:
+            self._store(s, d)
+
+    def snapshot(self) -> dict:
+        """Relations in insertion order (the merged-offset contract is part
+        of the state) with each ring's full array snapshot."""
+        return {"relations": [((s, d), st.snapshot())
+                              for (s, d), st in self.stores.items()]}
+
+    def restore(self, state: dict) -> None:
+        self.stores.clear()
+        for (s, d), ring_state in state["relations"]:
+            self._store(s, d).restore(ring_state)
+
+    def export_node(self, node_type: str, node_id: int) -> list:
+        """Pop every ring row sourced at (node_type, id), in relation
+        insertion order — the migration unit ``import_node`` consumes."""
+        out = []
+        for (s, d), st in self.stores.items():
+            if s != node_type:
+                continue
+            row = st.export_row(node_id)
+            if row is not None:
+                out.append(((s, d), row))
+                st.clear_row(node_id)
+        return out
+
+    def import_node(self, node_id: int, rows: list) -> None:
+        for (s, d), (buf_row, count, head) in rows:
+            self._store(s, d).import_row(node_id, buf_row, count, head)
 
     def neighbors(self, node_type: str, node_id: int):
         """Merged (dst_type_id, dst_id) neighbor list across edge types.

@@ -12,6 +12,10 @@ The online serving tier (DESIGN.md §10) as one job:
   5. (``--check-parity``) assert the sharded scatter-gather path is
      bit-identical to a single-engine ``NearlineInference`` on the same
      events — the §10 acceptance gate
+  6. (``--kill-restart``) resilience arm (§12): replay the same burst on a
+     second cluster under a deterministic crash schedule — checkpoint to
+     disk, kill mid-stream, restore, replay the suffix — and assert the
+     recovered store union is bit-identical to the uninterrupted run
 
 Smoke: ``--smoke`` caps everything to CI-toy sizes (P=2, ~200 requests).
 """
@@ -60,6 +64,9 @@ def main(argv=None):
                     help="ResultCache capacity (0 disables)")
     ap.add_argument("--check-parity", action="store_true",
                     help="assert sharded == single-engine bit parity")
+    ap.add_argument("--kill-restart", action="store_true",
+                    help="crash/warm-restart arm: checkpoint to disk, kill "
+                         "mid-burst, restore + replay, assert bit parity")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.smoke:
@@ -122,6 +129,35 @@ def main(argv=None):
         print(f"parity (sharded == single-engine, bitwise): "
               f"{'PASS' if ok else 'FAIL'}")
         assert ok, "sharded/single-engine parity violated"
+
+    if args.kill_restart:
+        import tempfile
+
+        from repro.serving import (FaultInjector, load_cluster_checkpoint,
+                                   restore_cluster, run_with_faults)
+        part2 = GraphPartitioner(args.shards, args.partition).fit(graph)
+        faulted = ShardedNearline(cfg, params, part2, micro_batch=32,
+                                  seed=args.seed, policy=policy)
+        faulted.bootstrap_from_graph(graph)
+        for ev in events:
+            faulted.topic.publish(ev)
+        with tempfile.TemporaryDirectory() as ckpt_dir:
+            inj = FaultInjector(kill_at=(1, 4))
+            st = run_with_faults(faulted, injector=inj, checkpoint_every=2,
+                                 directory=ckpt_dir)
+            # cold restart: a brand-new cluster restores the LATEST on-disk
+            # checkpoint and replays the remaining suffix off the durable log
+            cold = restore_cluster(load_cluster_checkpoint(ckpt_dir),
+                                   cfg=cfg, params=params,
+                                   topic=faulted.topic)
+            cold.process()
+        golden = cluster.live_embeddings()
+        ok = (tables_bitwise_equal(golden, faulted.live_embeddings())
+              and tables_bitwise_equal(golden, cold.live_embeddings()))
+        print(f"kill-restart: {st['kills']} kills / {st['checkpoints']} "
+              f"checkpoints / {st['replayed']} batches replayed; "
+              f"warm+cold restart parity: {'PASS' if ok else 'FAIL'}")
+        assert ok, "kill/restart parity violated"
 
     # 4. request traffic ----------------------------------------------------
     gen = LoadGenerator(

@@ -1,9 +1,16 @@
-"""Online serving subsystem (DESIGN.md §10): sharded graph partitions, a
-dynamic micro-batching request server, and an open-loop load-generator
-harness with latency SLOs."""
+"""Online serving subsystem (DESIGN.md §10, §12): sharded graph
+partitions, a dynamic micro-batching request server, an open-loop
+load-generator harness with latency SLOs, and the resilience layer
+(crash/warm-restart parity, elastic resharding, overload control)."""
 from repro.serving.batcher import (BatchPolicy, BatcherMetrics,  # noqa: F401
-                                   DynamicBatcher, ScoreRequest)
+                                   DynamicBatcher, OVERLOAD_POLICIES,
+                                   ScoreRequest)
 from repro.serving.cluster import ShardedNearline  # noqa: F401
 from repro.serving.loadgen import (LoadConfig, LoadGenerator,  # noqa: F401
                                    SLOReport, serve_trace, simulate_open_loop)
+from repro.serving.resilience import (FaultInjector,  # noqa: F401
+                                      hottest_shard, load_cluster_checkpoint,
+                                      merge_shards, restore_cluster,
+                                      run_with_faults,
+                                      save_cluster_checkpoint, split_shard)
 from repro.serving.router import ResultCache, Router  # noqa: F401

@@ -23,24 +23,43 @@ from dataclasses import dataclass, field
 import numpy as np
 
 
+# overload responses when a submit finds the queue at max_queue (§12):
+#   shed        — reject the NEW request (classic bounded admission)
+#   shed_oldest — drop the OLDEST queued request and admit the new one
+#                 (priority shed by staleness: the head has waited longest,
+#                 so it is the request most likely already past its SLO)
+#   degrade     — admit the new request flagged ``degraded``: the router
+#                 serves it from the last materialized (possibly stale,
+#                 version-pinned) embedding records WITHOUT an encoder pass,
+#                 so overload converts to staleness instead of drops
+OVERLOAD_POLICIES = ("shed", "shed_oldest", "degrade")
+
+
 @dataclass(frozen=True)
 class BatchPolicy:
     """max_batch — coalesce at most this many requests per encoder call;
     max_wait_s — deadline: fire a partial batch once the OLDEST queued
     request has waited this long; max_queue — bounded admission: submits
-    past this depth are shed (load-shedding beats unbounded tail latency)."""
+    past this depth trigger the ``overload`` response (load-shedding beats
+    unbounded tail latency); shed_after_s — deadline shed: a queued request
+    older than this at fire time is dropped instead of scored (its answer
+    would be too late to matter)."""
     max_batch: int = 32
     max_wait_s: float = 0.05
     max_queue: int = 1024
+    overload: str = "shed"
+    shed_after_s: float | None = None
 
 
 @dataclass
 class ScoreRequest:
     """One scoring call: rank ``job_ids`` for ``member_id`` (the TAJ/JYMBII
-    request shape: one seeker, a small candidate set)."""
+    request shape: one seeker, a small candidate set).  ``degraded`` marks
+    requests admitted under overload for stale-record serving."""
     time: float                    # arrival (simulated seconds)
     member_id: int
     job_ids: tuple
+    degraded: bool = False
 
     def keys(self) -> list:
         return ([("member", int(self.member_id))]
@@ -50,7 +69,10 @@ class ScoreRequest:
 @dataclass
 class BatcherMetrics:
     submitted: int = 0
-    shed: int = 0                                    # rejected at max_queue
+    shed: int = 0                                    # total drops, all reasons
+    shed_queue_full: int = 0                         # dropped at max_queue
+    shed_deadline: int = 0                           # expired before firing
+    degraded: int = 0                                # admitted for stale serve
     batches: int = 0
     coalesced: int = 0                               # requests popped in batches
     queue_depth_peak: int = 0
@@ -61,6 +83,9 @@ class BatcherMetrics:
         return {
             "submitted": self.submitted,
             "shed": self.shed,
+            "shed_queue_full": self.shed_queue_full,
+            "shed_deadline": self.shed_deadline,
+            "degraded": self.degraded,
             "batches": self.batches,
             "coalesced": self.coalesced,
             "queue_depth_peak": self.queue_depth_peak,
@@ -74,6 +99,7 @@ class DynamicBatcher:
 
     def __init__(self, policy: BatchPolicy | None = None):
         self.policy = policy or BatchPolicy()
+        assert self.policy.overload in OVERLOAD_POLICIES, self.policy.overload
         self._q: deque = deque()
         self.metrics = BatcherMetrics()
 
@@ -81,11 +107,24 @@ class DynamicBatcher:
         return len(self._q)
 
     def submit(self, req: ScoreRequest) -> bool:
-        """Admit a request; False = shed (queue at max_queue)."""
+        """Admit a request; False = shed.  At max_queue the policy's
+        ``overload`` response decides WHO pays: the new request (shed), the
+        stalest queued one (shed_oldest), or nobody — the new request is
+        admitted degraded and will be served from stale records (degrade)."""
         self.metrics.submitted += 1
         if len(self._q) >= self.policy.max_queue:
-            self.metrics.shed += 1
-            return False
+            ov = self.policy.overload
+            if ov == "shed":
+                self.metrics.shed += 1
+                self.metrics.shed_queue_full += 1
+                return False
+            if ov == "shed_oldest":
+                self._q.popleft()
+                self.metrics.shed += 1
+                self.metrics.shed_queue_full += 1
+            else:                          # degrade: admit past the bound
+                req.degraded = True
+                self.metrics.degraded += 1
         self._q.append(req)
         self.metrics.queue_depth_peak = max(self.metrics.queue_depth_peak,
                                             len(self._q))
@@ -114,9 +153,18 @@ class DynamicBatcher:
             return self._q[self.policy.max_batch - 1].time
         return self.deadline()
 
-    def pop_batch(self) -> list:
+    def pop_batch(self, now: float | None = None) -> list:
         """Dequeue up to ``max_batch`` requests as one tile-bound batch
-        (the caller owns the clock and decides WHEN via trigger_time)."""
+        (the caller owns the clock and decides WHEN via trigger_time).
+        With ``shed_after_s`` set and ``now`` given, requests whose queueing
+        delay already exceeds the deadline are dropped first — scoring them
+        would spend encoder time on answers nobody is still waiting for."""
+        dead = self.policy.shed_after_s
+        if dead is not None and now is not None:
+            while self._q and now - self._q[0].time > dead:
+                self._q.popleft()
+                self.metrics.shed += 1
+                self.metrics.shed_deadline += 1
         n = min(len(self._q), self.policy.max_batch)
         batch = [self._q.popleft() for _ in range(n)]
         if batch:
@@ -124,3 +172,14 @@ class DynamicBatcher:
             self.metrics.coalesced += n
             self.metrics.occupancy.append(n / self.policy.max_batch)
         return batch
+
+    # ---- checkpoint (DESIGN.md §12) -------------------------------------
+    def snapshot(self) -> dict:
+        """The queued requests (ScoreRequests are plain value objects)."""
+        return {"queue": [(r.time, r.member_id, r.job_ids, r.degraded)
+                          for r in self._q]}
+
+    def restore(self, state: dict) -> None:
+        self._q = deque(ScoreRequest(time=t, member_id=m, job_ids=tuple(j),
+                                     degraded=d)
+                        for (t, m, j, d) in state["queue"])

@@ -46,7 +46,7 @@ class ShardedNearline:
                  policy: StalenessPolicy | None = None,
                  jit_encoder: bool = True, feature_cache=None,
                  embed_cache=None):
-        from repro.core.cache import CachedEngine, SlabCache, as_slab_cache
+        from repro.core.cache import SlabCache
         # each shard owns its slab (a real deployment's caches live in the
         # shard processes) — a shared SlabCache instance would alias them
         assert not isinstance(feature_cache, SlabCache), \
@@ -54,8 +54,15 @@ class ShardedNearline:
         assert not isinstance(embed_cache, SlabCache), \
             "sharded tier builds one slab per shard — pass slots or a CacheConfig"
         self.cfg = cfg
+        self.params = encoder_params
         self.partitioner = partitioner
         self.micro_batch = micro_batch
+        self.seed = seed
+        self.max_neighbors = max_neighbors
+        self.jit_encoder = jit_encoder
+        # cache SPECS (not instances) so warm restart / add_shard can build
+        # identically-configured per-shard slabs
+        self._cache_spec = (feature_cache, embed_cache)
         self.topic = Topic("job-marketplace-events")
         self.engine = ShardedEngine(cfg.feat_dim, partitioner,
                                     max_neighbors=max_neighbors)
@@ -70,27 +77,42 @@ class ShardedNearline:
         self.retired_cache_misses = 0
         self.views: list[ShardView] = []
         self.shards: list[EmbeddingLifecycle] = []
+        self.policy = policy or StalenessPolicy()
+        self.fanouts = tuple(fanouts or cfg.fanouts)
+        # overload-control counters folded in from retired batchers (§12),
+        # mirroring the retired-cache bookkeeping above
+        self.shed_queue_full = 0
+        self.shed_deadline = 0
+        self.requests_degraded = 0
         for p in range(partitioner.num_shards):
-            view = ShardView(self.engine, p)
-            eng = view
-            fc = as_slab_cache(feature_cache, cfg.feat_dim,
-                               name=f"feature-cache-shard{p}")
-            if fc is not None:
-                eng = CachedEngine(view, fc)
-                self.feature_caches.append(fc)
-            lc = EmbeddingLifecycle(
-                cfg, encoder_params, eng, fanouts=fanouts,
-                store=EmbeddingStore(f"gnn-embeddings-shard{p}"),
-                policy=policy, micro_batch=micro_batch, seed=seed,
-                jit_encoder=jit_encoder, embed_cache=embed_cache)
-            if fc is not None:
-                eng.metrics = lc.metrics        # mirror hits into shard counters
-                lc.store.attach_cache(fc)
-            if lc.embed_cache is not None:
-                self.embed_caches.append(lc.embed_cache)
-            lc._rev = self._rev                 # shared: closure sees all edges
+            view, lc = self._make_shard(p)
             self.views.append(view)
             self.shards.append(lc)
+
+    def _make_shard(self, p: int):
+        """One shard's view + (optional) tier-1 slab + lifecycle, wired the
+        same way for __init__, warm restart, and elastic add_shard."""
+        from repro.core.cache import CachedEngine, as_slab_cache
+        feature_cache, embed_cache = self._cache_spec
+        view = ShardView(self.engine, p)
+        eng = view
+        fc = as_slab_cache(feature_cache, self.cfg.feat_dim,
+                           name=f"feature-cache-shard{p}")
+        if fc is not None:
+            eng = CachedEngine(view, fc)
+            self.feature_caches.append(fc)
+        lc = EmbeddingLifecycle(
+            self.cfg, self.params, eng, fanouts=self.fanouts,
+            store=EmbeddingStore(f"gnn-embeddings-shard{p}"),
+            policy=self.policy, micro_batch=self.micro_batch, seed=self.seed,
+            jit_encoder=self.jit_encoder, embed_cache=embed_cache)
+        if fc is not None:
+            eng.metrics = lc.metrics
+            lc.store.attach_cache(fc)
+        if lc.embed_cache is not None:
+            self.embed_caches.append(lc.embed_cache)
+        lc._rev = self._rev
+        return view, lc
 
     @property
     def num_shards(self) -> int:
@@ -206,6 +228,132 @@ class ShardedNearline:
     def pending(self) -> int:
         return sum(lc.pending() for lc in self.shards)
 
+    # ---- checkpoint / warm restart (DESIGN.md §12) ----------------------
+    def snapshot(self) -> dict:
+        """Everything a bit-identical warm restart needs (leg (a) of the
+        resilience contract): per-shard engine state (rings + features),
+        per-shard lifecycle state (store records + published tables +
+        recompute queue + registry), the ONE shared reverse index, the
+        partitioner's ownership map, the topic consumer offset (the replay
+        point — the log itself is durable, Kafka-style), and the per-shard
+        slab caches (a performance warm-start, never a bits concern)."""
+        return {
+            "config": {"micro_batch": self.micro_batch, "seed": self.seed,
+                       "max_neighbors": self.max_neighbors,
+                       "fanouts": self.fanouts,
+                       "policy": (self.policy.closure_radius,
+                                  self.policy.max_staleness_s,
+                                  self.policy.type_order)},
+            "partitioner": self.partitioner.snapshot(),
+            "engine": self.engine.snapshot(),
+            "shards": [lc.snapshot() for lc in self.shards],
+            "rev": {k: set(v) for k, v in self._rev.items()},
+            "topic_offset": self.topic.offsets.get("sharded-nearline", 0),
+            "events_processed": self.events_processed,
+            "feature_caches": [fc.snapshot() for fc in self.feature_caches],
+            "embed_caches": [ec.snapshot() for ec in self.embed_caches],
+        }
+
+    def restore(self, state: dict) -> None:
+        """Apply a snapshot onto a freshly-constructed, un-bootstrapped
+        cluster of the same shape (same P, same cache spec).  The caller
+        re-attaches the durable topic log; the restored consumer offset
+        makes the next ``process()`` replay exactly the event suffix."""
+        assert len(state["shards"]) == len(self.shards), \
+            "restore needs a cluster with the snapshot's shard count"
+        self.engine.restore(state["engine"])
+        for lc, st in zip(self.shards, state["shards"]):
+            lc.restore(st)
+        self._rev.clear()                    # shared object: mutate in place
+        self._rev.update({k: set(v) for k, v in state["rev"].items()})
+        self.topic.offsets["sharded-nearline"] = int(state["topic_offset"])
+        self.events_processed = int(state["events_processed"])
+        for fc, st in zip(self.feature_caches, state["feature_caches"]):
+            fc.restore(st)
+        for ec, st in zip(self.embed_caches, state["embed_caches"]):
+            ec.restore(st)
+
+    # ---- elastic resharding (DESIGN.md §12, leg (b)) --------------------
+    def add_shard(self) -> int:
+        """Grow the cluster by one EMPTY shard (partitioner + engine + view
+        + lifecycle); its store starts at the cluster's current version so
+        ``publish_version`` stays in lock-step.  Returns the shard index."""
+        q = self.partitioner.add_shard()
+        self.engine.add_shard()
+        view, lc = self._make_shard(q)
+        lc.store.version = self.shards[0].store.version
+        self.views.append(view)
+        self.shards.append(lc)
+        return q
+
+    def reshard(self, moves: dict) -> dict:
+        """Online migration of ``moves`` ({(ntype, nid): dst_shard}):
+        drain the event backlog (ingest — dirt is state, not loss), flip the
+        ownership map, migrate each key's records / published-table entries
+        / ring rows / features / registry entry / pending dirt to its new
+        owner, and invalidate the affected ResultCache ball.  Gated on the
+        §12 parity contract: the post-reshard store union is asserted
+        bit-identical to the pre-reshard union."""
+        self.ingest()                        # quiesce: no un-applied events
+        moves = {(nt, int(ni)): int(dst) for (nt, ni), dst in moves.items()}
+        pre_union = self.live_embeddings()
+        src_of = {key: self.partitioner.shard_of(*key) for key in moves}
+        stats = {"moved": 0, "records": 0, "table_entries": 0,
+                 "ring_rows": 0, "dirty": 0}
+        for key in sorted(moves, key=lambda k: (NODE_TYPE_ID[k[0]], k[1])):
+            src, dst = src_of[key], moves[key]
+            if src == dst:
+                continue
+            self.partitioner.assign([key], dst)
+            a, b = self.shards[src], self.shards[dst]
+            nt, ni = key
+            # registry + pending dirt move WITH the node
+            if key in a.registry:
+                a.registry.discard(key)
+                b.registry.add(key)
+            for k, prio, trig in a.queue.extract([key]):
+                b.queue.push(k, prio, trig)
+                stats["dirty"] += 1
+            # live record + every published-table entry
+            rec = a.store._d.pop(key, None)
+            if rec is not None:
+                b.store._d[key] = rec
+                stats["records"] += 1
+            for v, tab in a.store._tables.items():
+                r = tab.pop(key, None)
+                if r is not None:
+                    b.store._tables.setdefault(v, {})[key] = r
+                    stats["table_entries"] += 1
+            # engine-side state: ring rows sourced at the node + features
+            stats["ring_rows"] += self.engine.migrate_node(nt, ni, src, dst)
+            stats["moved"] += 1
+        # invalidate the affected ball: migration never changes bits, but
+        # version-pinned ResultCache entries and per-shard slab rows for the
+        # moved keys are conservatively dropped (same rule as mark_dirty)
+        moved = set(moves)
+        full = self.shards[0].dirty_closure(moved, radius=len(self.fanouts))
+        for cache in self.caches:
+            cache.invalidate(full)
+        for nt, ni in full:
+            tid = NODE_TYPE_ID[nt]
+            for fc in self.feature_caches:
+                fc.invalidate(tid, ni)
+            for ec in self.embed_caches:
+                ec.invalidate(tid, ni)
+        from repro.core.embeddings import tables_bitwise_equal
+        assert tables_bitwise_equal(pre_union, self.live_embeddings()), \
+            "reshard parity violated: store union changed"
+        return stats
+
+    # ---- overload-control rollup (DESIGN.md §12, leg (c)) ---------------
+    def fold_batcher_metrics(self, bm) -> None:
+        """Fold one retired batcher's shed/degrade counters into the cluster
+        rollup (serve_trace calls this per trace — each trace owns a fresh
+        batcher, so counts are never double-folded)."""
+        self.shed_queue_full += bm.shed_queue_full
+        self.shed_deadline += bm.shed_deadline
+        self.requests_degraded += bm.degraded
+
     def aggregate_metrics(self) -> LifecycleMetrics:
         """Cluster-wide counter roll-up (sums; queue-depth peak is a max)."""
         agg = LifecycleMetrics()
@@ -221,6 +369,9 @@ class ShardedNearline:
             agg.staleness.extend(m.staleness)
             agg.sweeps += m.sweeps
             agg.queue_depth_peak = max(agg.queue_depth_peak, m.queue_depth_peak)
+        agg.shed_queue_full = self.shed_queue_full
+        agg.shed_deadline = self.shed_deadline
+        agg.requests_degraded = self.requests_degraded
         agg.cache_hits = self.retired_cache_hits
         agg.cache_misses = self.retired_cache_misses
         for cache in self.caches:          # attached serving caches

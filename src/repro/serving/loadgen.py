@@ -1,5 +1,5 @@
 """Open-loop Poisson load generation + latency-SLO accounting
-(DESIGN.md §10).
+(DESIGN.md §10, §12).
 
 The generator draws request arrivals from a Poisson process (exponential
 inter-arrival gaps, deterministic per seed) and replays them through a
@@ -8,14 +8,21 @@ loop: arrivals never wait for completions, so queueing delay is visible
 (the closed-loop mistake of measuring latency at the server's own pace
 hides exactly the tail the SLO cares about).
 
+Overload shapes (§12): ``zipf`` skews key popularity power-law (the hot-
+member/hot-job pattern the Signal Integration System paper motivates), and
+``burst_*`` superimposes a flash crowd — a rate multiplier over a time
+window — on the base arrival process.  Both are deterministic per seed,
+and both default off with the original draw sequence bit-for-bit intact.
+
 One simulated inference worker serves batches.  A batch fires at
 ``max(policy trigger, worker-free time)`` — a full batch as soon as the
 worker can take it, a partial one at its deadline — and its service time
 is the MEASURED wall time of the real scatter-gather scoring call (or a
-caller-fixed constant for deterministic tests), mapped 1:1 into simulated
-seconds.  Per-request latency = completion − arrival; the report carries
-throughput, p50/p95/p99, SLO-violation rate (shed requests count as
-violations), and batch occupancy.
+caller-fixed constant — or callable, for modeled degraded service — for
+deterministic tests), mapped 1:1 into simulated seconds.  Per-request
+latency = completion − arrival; the report carries throughput,
+p50/p95/p99, SLO-violation rate (shed requests count as violations),
+per-reason shed counts, the staleness-served fraction, and occupancy.
 """
 from __future__ import annotations
 
@@ -35,6 +42,10 @@ class LoadConfig:
     num_requests: int = 256
     candidates: int = 8            # jobs scored per request
     seed: int = 0
+    zipf: float | None = None      # power-law key popularity (None = uniform)
+    burst_at_s: float | None = None    # flash crowd: window start (None = off)
+    burst_duration_s: float = 0.0      # window length
+    burst_factor: float = 1.0          # rate multiplier inside the window
 
 
 class LoadGenerator:
@@ -45,12 +56,46 @@ class LoadGenerator:
         self.num_members = num_members
         self.num_jobs = num_jobs
 
+    def _skewed(self, rng, num: int):
+        # same rank -> permuted-id scheme as marketplace_event_stream: the
+        # hot set is a random subset, not the low ids bootstrap favors
+        perm = rng.permutation(num)
+
+        def draw(k):
+            out = np.empty(k, np.int64)
+            for i in range(k):
+                while True:
+                    r = int(rng.zipf(self.cfg.zipf))
+                    if r <= num:
+                        out[i] = perm[r - 1]
+                        break
+            return out
+        return draw
+
     def requests(self) -> list:
         c = self.cfg
         rng = np.random.default_rng((c.seed, 0x10AD))
-        times = np.cumsum(rng.exponential(1.0 / c.rate_hz, c.num_requests))
-        members = rng.integers(0, self.num_members, c.num_requests)
-        jobs = rng.integers(0, self.num_jobs, (c.num_requests, c.candidates))
+        if c.burst_at_s is None:
+            times = np.cumsum(rng.exponential(1.0 / c.rate_hz, c.num_requests))
+        else:
+            # flash crowd: inter-arrival gaps shrink by burst_factor while
+            # the arrival lands inside the window (rate-modulated Poisson)
+            end = c.burst_at_s + c.burst_duration_s
+            gaps = rng.exponential(1.0 / c.rate_hz, c.num_requests)
+            times = np.empty(c.num_requests)
+            t = 0.0
+            for i, g in enumerate(gaps):
+                t += g / (c.burst_factor if c.burst_at_s <= t < end else 1.0)
+                times[i] = t
+        if c.zipf is None:
+            members = rng.integers(0, self.num_members, c.num_requests)
+            jobs = rng.integers(0, self.num_jobs,
+                                (c.num_requests, c.candidates))
+        else:
+            members = self._skewed(rng, self.num_members)(c.num_requests)
+            draw_jobs = self._skewed(rng, self.num_jobs)
+            jobs = np.stack([draw_jobs(c.candidates)
+                             for _ in range(c.num_requests)])
         return [ScoreRequest(time=float(times[i]), member_id=int(members[i]),
                              job_ids=tuple(int(j) for j in jobs[i]))
                 for i in range(c.num_requests)]
@@ -60,6 +105,10 @@ class LoadGenerator:
 class SLOReport:
     completed: int = 0
     shed: int = 0
+    shed_queue_full: int = 0       # per-reason shed split (§12)
+    shed_deadline: int = 0
+    degraded: int = 0              # admitted for stale-record serving
+    degraded_frac: float = 0.0     # staleness-served fraction of admissions
     batches: int = 0
     throughput_rps: float = 0.0    # completed / simulated makespan
     latency_p50_ms: float = 0.0
@@ -72,14 +121,15 @@ class SLOReport:
 
     def summary(self) -> dict:
         return {k: getattr(self, k) for k in
-                ("completed", "shed", "batches", "throughput_rps",
+                ("completed", "shed", "shed_queue_full", "shed_deadline",
+                 "degraded", "degraded_frac", "batches", "throughput_rps",
                  "latency_p50_ms", "latency_p95_ms", "latency_p99_ms",
                  "slo_ms", "slo_violation_rate", "occupancy_mean")}
 
 
 def simulate_open_loop(router, batcher: DynamicBatcher, requests, *,
                        slo_ms: float = 50.0,
-                       service_s: float | None = None) -> SLOReport:
+                       service_s=None) -> SLOReport:
     """Event-driven replay of an arrival trace through batcher + router.
 
     The loop interleaves two event kinds in simulated-time order: request
@@ -88,19 +138,23 @@ def simulate_open_loop(router, batcher: DynamicBatcher, requests, *,
     now, partial → oldest + max_wait"; firing before the next arrival
     keeps causality (a batch never contains a request that arrived after
     it fired).  ``service_s`` fixes the per-batch service time for
-    deterministic tests; None measures the real scoring call.
+    deterministic tests — a float is a constant, a callable is invoked as
+    ``service_s(batch)`` (degraded requests are cheap: no encoder pass);
+    None measures the real scoring call.
     """
     requests = sorted(requests, key=lambda r: r.time)
     lat: list = []
-    occ0 = len(batcher.metrics.occupancy)
-    shed0 = batcher.metrics.shed           # report deltas on reused batchers
+    m = batcher.metrics
+    occ0 = len(m.occupancy)
+    # report deltas on reused batchers
+    shed0, qf0, dl0, dg0 = m.shed, m.shed_queue_full, m.shed_deadline, m.degraded
     free = 0.0
     i = 0
 
     def fire(t: float) -> None:
         nonlocal free
         start = max(t, free)
-        batch = batcher.pop_batch()
+        batch = batcher.pop_batch(now=start)
         if not batch:
             return
         if service_s is None:
@@ -109,7 +163,7 @@ def simulate_open_loop(router, batcher: DynamicBatcher, requests, *,
             svc = _time.perf_counter() - w0
         else:
             router.score_batch(batch)
-            svc = service_s
+            svc = service_s(batch) if callable(service_s) else service_s
         done = start + svc
         free = done
         lat.extend(done - r.time for r in batch)
@@ -123,16 +177,21 @@ def simulate_open_loop(router, batcher: DynamicBatcher, requests, *,
         batcher.submit(requests[i])
         i += 1
 
-    shed = batcher.metrics.shed - shed0
+    shed = m.shed - shed0
+    degraded = m.degraded - dg0
     lat_arr = np.array(lat) if lat else np.array([0.0])
     first = requests[0].time if requests else 0.0
     makespan = max(free - first, 1e-9)
     slo_s = slo_ms * 1e-3
     violations = int((lat_arr > slo_s).sum()) + shed
-    occ = batcher.metrics.occupancy[occ0:]
+    occ = m.occupancy[occ0:]
     return SLOReport(
         completed=len(lat),
         shed=shed,
+        shed_queue_full=m.shed_queue_full - qf0,
+        shed_deadline=m.shed_deadline - dl0,
+        degraded=degraded,
+        degraded_frac=degraded / max(len(lat), 1),
         batches=len(occ),
         throughput_rps=len(lat) / makespan,
         latency_p50_ms=float(np.percentile(lat_arr, 50) * 1e3),
@@ -147,16 +206,20 @@ def simulate_open_loop(router, batcher: DynamicBatcher, requests, *,
 
 def serve_trace(cluster, requests, *, policy: BatchPolicy | None = None,
                 cache=None, slo_ms: float = 50.0,
-                service_s: float | None = None):
+                service_s=None):
     """One-call harness: build batcher + router over a cluster, replay a
-    trace, return (report, batcher, router).  The router is closed before
-    returning (its cache detaches from the cluster's invalidation fan-out),
-    so repeated traces over one long-lived cluster do not accumulate dead
-    caches."""
+    trace, return (report, batcher, router).  Teardown runs in ``finally``:
+    the router is closed (its cache detaches from the cluster's
+    invalidation fan-out) and the batcher's overload counters fold into the
+    cluster rollup even when a request raises mid-trace — an exception must
+    not leak a retired cache into the lifecycle's fan-out."""
     from repro.serving.router import Router
     batcher = DynamicBatcher(policy)
     router = Router(cluster, cache=cache)
-    report = simulate_open_loop(router, batcher, requests, slo_ms=slo_ms,
-                                service_s=service_s)
-    router.close()
+    try:
+        report = simulate_open_loop(router, batcher, requests, slo_ms=slo_ms,
+                                    service_s=service_s)
+    finally:
+        router.close()
+        cluster.fold_batcher_metrics(batcher.metrics)
     return report, batcher, router

@@ -1,0 +1,205 @@
+"""Resilience for the serving tier: crash/warm-restart parity, elastic
+resharding, and deterministic fault injection (DESIGN.md §12).
+
+The serving tier is state it cannot afford to lose bit-exactly: per-shard
+embedding records and published tables, recompute-queue dirt, neighbor
+rings, and the topic consumer offset.  This module closes the loop around
+the per-component ``snapshot()``/``restore()`` methods:
+
+  FaultInjector            — deterministic kill schedule over the nearline
+                             batch clock (reproducible crashes, no wall time)
+  save/load_cluster_checkpoint — disk round-trip of a cluster snapshot via
+                             the existing ``repro.checkpoint`` step layout
+  restore_cluster          — cold-start a fresh ShardedNearline FROM a
+                             snapshot (shape from the snapshot's own config,
+                             weights from the caller — params are training
+                             artifacts with their own checkpoint lane)
+  run_with_faults          — the recovery protocol: process → checkpoint on
+                             a cadence → on kill, roll back to the last
+                             checkpoint and replay the event suffix
+  split_shard / merge_shards / hottest_shard — elastic resharding moves
+                             built on ``ShardedNearline.reshard``
+
+Recovery model (leg (a)): the event log is durable (Kafka-style) and the
+snapshot stores the consumer offset, so a crash loses only in-memory state
+SINCE the last checkpoint — restore rewinds the consumer and the next
+``process()`` replays exactly the lost suffix.  A shard kill takes down the
+whole process group (shards share the closure index and the composite
+engine), so recovery is cluster-level rollback — coarse-grained, but the
+parity gate is exact: because replay applies the same events through the
+same deterministic pipeline (per-node uniform slabs, full-drain regime),
+the recovered store union and every subsequent router read are
+BIT-IDENTICAL to an uninterrupted run, for any kill offset and any P.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.checkpoint import latest_step, load_state, save_state
+from repro.core.embeddings import StalenessPolicy
+from repro.core.graph import NODE_TYPE_ID
+from repro.core.partition import GraphPartitioner
+from repro.serving.cluster import ShardedNearline
+
+CONSUMER = "sharded-nearline"
+_CKPT_NAME = "cluster"
+
+
+class FaultInjector:
+    """Deterministic kill schedule over the harness's batch clock.
+
+    ``kill_at`` holds tick indices (one tick = one attempted nearline
+    micro-batch, counted monotonically across crashes and replays); each
+    fires exactly once.  ``shards`` records WHICH shard the fault targets —
+    descriptive under the cluster-level recovery model above, where any
+    shard loss takes the process group down — so the kill log reads like an
+    incident report."""
+
+    def __init__(self, kill_at=(), shards=(0,)):
+        self.kill_at = frozenset(int(k) for k in kill_at)
+        self.shards = tuple(int(s) for s in shards)
+        self.ticks = 0
+        self.kills: list = []      # tick indices that actually fired
+
+    def tick(self) -> bool:
+        """Advance the batch clock; True = a crash fires at this tick."""
+        t = self.ticks
+        self.ticks += 1
+        if t in self.kill_at:
+            self.kills.append(t)
+            return True
+        return False
+
+
+# ---- checkpoint round-trip (disk) ---------------------------------------
+
+def save_cluster_checkpoint(cluster: ShardedNearline, directory: str,
+                            step: int) -> str:
+    """Persist a full cluster snapshot under ``<dir>/step_NNNNNN/`` (the
+    same step layout model checkpoints use, so serving state and weights
+    can share a checkpoint root)."""
+    return save_state(directory, step, cluster.snapshot(), name=_CKPT_NAME)
+
+
+def load_cluster_checkpoint(directory: str, step: int | None = None) -> dict:
+    """Load a cluster snapshot; ``step=None`` picks the latest step dir."""
+    if step is None:
+        step = latest_step(directory)
+        assert step is not None, f"no checkpoints under {directory}"
+    return load_state(directory, step, name=_CKPT_NAME)
+
+
+def restore_cluster(state: dict, *, cfg, params, topic=None,
+                    jit_encoder: bool = True, feature_cache=None,
+                    embed_cache=None) -> ShardedNearline:
+    """Cold-start a cluster FROM a snapshot: shape (P, fanouts, policy,
+    micro-batch, seed) comes from the snapshot's own config record, the
+    ownership map from the partitioner snapshot, and all mutable state from
+    ``restore``.  ``params`` are supplied by the caller (encoder weights
+    live in the pytree checkpoint lane, not the serving snapshot); pass the
+    durable ``topic`` to resume consumption — the restored offset makes the
+    next ``process()`` replay exactly the post-checkpoint suffix.  Cache
+    specs must match the crashed cluster's for the slab warm-start to
+    apply."""
+    c = state["config"]
+    radius, max_stale, type_order = c["policy"]
+    cluster = ShardedNearline(
+        cfg, params, GraphPartitioner.from_snapshot(state["partitioner"]),
+        fanouts=c["fanouts"], micro_batch=c["micro_batch"],
+        max_neighbors=c["max_neighbors"], seed=c["seed"],
+        policy=StalenessPolicy(closure_radius=radius,
+                               max_staleness_s=max_stale,
+                               type_order=tuple(type_order)),
+        jit_encoder=jit_encoder, feature_cache=feature_cache,
+        embed_cache=embed_cache)
+    if topic is not None:
+        cluster.topic = topic
+    cluster.restore(state)
+    return cluster
+
+
+# ---- the recovery protocol ----------------------------------------------
+
+def run_with_faults(cluster: ShardedNearline, *,
+                    injector: FaultInjector | None = None,
+                    checkpoint_every: int = 2, directory: str | None = None,
+                    clock: float | None = None) -> dict:
+    """Drain the topic one micro-batch at a time under a crash schedule.
+
+    Every ``checkpoint_every`` completed batches the cluster snapshots
+    (in-memory, or to ``directory`` as step dirs when given — the disk
+    round-trip exercises the pickle/npy path).  When the injector fires,
+    ALL in-memory state is considered lost: the cluster restores from the
+    last checkpoint and the rewound consumer offset replays the suffix.
+    Returns counters: batches completed (including replays), checkpoints
+    taken, kills fired, and batches replayed after crashes."""
+    stats = {"batches": 0, "checkpoints": 0, "kills": 0, "replayed": 0}
+
+    def take_checkpoint():
+        snap = cluster.snapshot()
+        if directory is not None:
+            save_state(directory, stats["checkpoints"], snap, name=_CKPT_NAME)
+        stats["checkpoints"] += 1
+        return snap
+
+    last = take_checkpoint()                 # batch-0 baseline
+    max_offset = int(last["topic_offset"])
+    while cluster.topic.lag(CONSUMER) > 0:
+        if injector is not None and injector.tick():
+            if directory is not None:
+                last = load_state(directory, stats["checkpoints"] - 1,
+                                  name=_CKPT_NAME)
+            cluster.restore(last)
+            stats["kills"] += 1
+            continue
+        done = cluster.process(max_batches=1, clock=clock)
+        if done == 0:
+            break
+        stats["batches"] += 1
+        # progress made before a crash and redone after = duplicate work
+        offset = int(cluster.topic.offsets[CONSUMER])
+        if offset <= max_offset:
+            stats["replayed"] += 1
+        else:
+            max_offset = offset
+        if stats["batches"] % max(checkpoint_every, 1) == 0:
+            last = take_checkpoint()
+    return stats
+
+
+# ---- elastic resharding moves (leg (b)) ---------------------------------
+
+def _owned_sorted(cluster: ShardedNearline, p: int) -> list:
+    return sorted(cluster.shards[p].registry,
+                  key=lambda k: (NODE_TYPE_ID[k[0]], k[1]))
+
+
+def hottest_shard(cluster: ShardedNearline) -> int:
+    """The shard owning the most registered nodes (the split candidate —
+    registry size is the steady-state recompute and serving load proxy)."""
+    return int(np.argmax([len(lc.registry) for lc in cluster.shards]))
+
+
+def split_shard(cluster: ShardedNearline, p: int | None = None) -> dict:
+    """Online split: grow the cluster by one shard and migrate every OTHER
+    owned key (sorted order — deterministic halves) off shard ``p``
+    (default: the hottest).  Runs through ``reshard``'s drain → flip →
+    migrate → invalidate sequence and its bit-parity gate."""
+    if p is None:
+        p = hottest_shard(cluster)
+    q = cluster.add_shard()
+    owned = _owned_sorted(cluster, p)
+    stats = cluster.reshard({key: q for key in owned[1::2]})
+    stats.update({"src": p, "dst": q})
+    return stats
+
+
+def merge_shards(cluster: ShardedNearline, src: int, dst: int) -> dict:
+    """Online merge: migrate EVERY key shard ``src`` owns onto ``dst``.
+    The source shard stays allocated but empty (shard indices are
+    load-bearing in the ownership map; draining one to zero is the merge —
+    a real deployment would then decommission the empty process)."""
+    assert src != dst, (src, dst)
+    stats = cluster.reshard({key: dst for key in _owned_sorted(cluster, src)})
+    stats.update({"src": src, "dst": dst})
+    return stats

@@ -89,6 +89,9 @@ class Router:
     def __init__(self, cluster, *, cache: ResultCache | None = None):
         self.cluster = cluster
         self.cache = cache
+        self.stale_served_keys = 0      # keys served from stale records (§12)
+        self.stale_fallback_keys = 0    # degraded keys with no record: fresh
+        self.degraded_requests = 0
         if cache is not None and not any(c is cache for c in cluster.caches):
             cluster.caches.append(cache)        # dirty-set invalidation hook
 
@@ -131,14 +134,45 @@ class Router:
                                    version=self._inflight_version(key))
         return out
 
+    def resolve_stale(self, keys) -> dict:
+        """Degrade-to-cached-embedding mode (§12): serve each key's LAST
+        materialized record — bits of a previous recompute, pinned to the
+        version it was computed toward, possibly stale w.r.t. pending dirt —
+        without touching the encoder.  Keys with no record yet (cold nodes)
+        fall back to a fresh resolve: degradation trades freshness for
+        latency, never completeness."""
+        out: dict = {}
+        cold: list = []
+        for key in keys:
+            rec = self.cluster.record(*key)
+            if rec is None:
+                cold.append(key)
+            else:
+                out[key] = rec.emb
+        self.stale_served_keys += len(out)
+        self.stale_fallback_keys += len(cold)
+        if cold:
+            out.update(self.resolve_embeddings(cold))
+        return out
+
     def score_batch(self, requests) -> list:
         """Score a coalesced request batch; returns one [len(job_ids)]
-        score vector per request (dot products in embedding space)."""
-        seen: dict = {}
+        score vector per request (dot products in embedding space).
+        Degraded requests resolve through the stale-record path; a key
+        needed by BOTH a fresh and a degraded request is resolved fresh
+        (the fresh requester's contract wins, and fresher never hurts the
+        degraded one)."""
+        fresh_keys: dict = {}
+        stale_keys: dict = {}
         for req in requests:
+            sink = stale_keys if req.degraded else fresh_keys
             for key in req.keys():
-                seen[key] = None
-        emb = self.resolve_embeddings(list(seen))
+                sink[key] = None
+        self.degraded_requests += sum(1 for r in requests if r.degraded)
+        emb = self.resolve_embeddings(list(fresh_keys))
+        stale_only = [k for k in stale_keys if k not in emb]
+        if stale_only:
+            emb.update(self.resolve_stale(stale_only))
         scores = []
         for req in requests:
             m = emb[("member", int(req.member_id))]

@@ -127,6 +127,88 @@ def test_snapshot_of_final_state_matches_streaming_tiles(seed, k, num_events):
     assert_tiles_equal(ta, tb)
 
 
+_SERVING_CASE: dict = {}
+
+
+def _serving_case():
+    """Tiny cached graph + encoder params for the restart property (one
+    build per session; every example reuses it)."""
+    if not _SERVING_CASE:
+        from dataclasses import replace
+        from repro.configs.linksage import smoke as gnn_smoke
+        from repro.core import encoder as enc
+        from repro.data import GraphGenConfig, generate_job_marketplace_graph
+        g, _ = generate_job_marketplace_graph(
+            GraphGenConfig(num_members=30, num_jobs=10, seed=4))
+        cfg = replace(gnn_smoke(), feat_dim=g.feat_dim)
+        _SERVING_CASE["case"] = (
+            g, cfg, enc.encoder_init(jax.random.PRNGKey(0), cfg))
+    return _SERVING_CASE["case"]
+
+
+_GOLDEN_UNIONS: dict = {}
+
+
+def _mk_cluster(g, cfg, params, P):
+    from repro.core.embeddings import StalenessPolicy
+    from repro.core.partition import GraphPartitioner
+    from repro.serving import ShardedNearline
+    cl = ShardedNearline(cfg, params, GraphPartitioner(P, "hash"),
+                         micro_batch=6, seed=13,
+                         policy=StalenessPolicy(closure_radius=None),
+                         jit_encoder=False)
+    cl.bootstrap_from_graph(g)
+    return cl
+
+
+@settings(max_examples=10, deadline=None)
+@given(event_seed=st.integers(0, 2), P=st.sampled_from([1, 2, 4]),
+       kill=st.integers(0, 5), every=st.integers(1, 2))
+def test_checkpoint_kill_restore_replay_bit_identical_at_every_read(
+        event_seed, P, kill, every):
+    """Random event stream × random kill offset × P ∈ {1, 2, 4}: a cluster
+    that checkpoints on a cadence, crashes after ``kill`` batches, restores
+    its last checkpoint, and replays the event suffix is bit-identical to
+    an uninterrupted run at EVERY subsequent read point (store unions
+    compared after each replayed micro-batch, DESIGN.md §12)."""
+    from repro.core.embeddings import tables_bitwise_equal
+    from repro.data import marketplace_event_stream
+    g, cfg, params = _serving_case()
+    events = marketplace_event_stream(g, np.random.default_rng(event_seed),
+                                      18, job_every=6)
+
+    gkey = (event_seed, P)
+    if gkey not in _GOLDEN_UNIONS:
+        golden = _mk_cluster(g, cfg, params, P)
+        for ev in events:
+            golden.topic.publish(ev)
+        unions = {}
+        while golden.process(max_batches=1):
+            unions[golden.topic.offsets["sharded-nearline"]] = \
+                golden.live_embeddings()
+        _GOLDEN_UNIONS[gkey] = unions
+    unions = _GOLDEN_UNIONS[gkey]
+
+    faulted = _mk_cluster(g, cfg, params, P)
+    for ev in events:
+        faulted.topic.publish(ev)
+    snap = faulted.snapshot()
+    batches, killed = 0, False
+    while True:
+        if not killed and batches == kill:
+            faulted.restore(snap)              # crash: lose everything since
+            killed = True
+        if faulted.process(max_batches=1) == 0:
+            break
+        batches += 1
+        off = faulted.topic.offsets["sharded-nearline"]
+        assert tables_bitwise_equal(unions[off], faulted.live_embeddings()), \
+            f"divergence at offset {off} (P={P}, kill={kill})"
+        if batches % every == 0:
+            snap = faulted.snapshot()
+    assert faulted.pending() == 0
+
+
 @given(seed=st.integers(0, 2**16), n=st.integers(4, 64))
 def test_auc_is_shift_and_scale_invariant(seed, n):
     rng = np.random.default_rng(seed)

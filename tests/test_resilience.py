@@ -1,0 +1,414 @@
+"""Resilience layer (DESIGN.md §12): crash/warm-restart parity, elastic
+resharding, overload control, and the fault-injection harness."""
+import numpy as np
+import jax
+import pytest
+from dataclasses import replace
+
+from repro.configs.linksage import smoke as gnn_smoke
+from repro.core import encoder as enc
+from repro.core.embeddings import StalenessPolicy, tables_bitwise_equal
+from repro.core.graph import NODE_TYPE_ID
+from repro.core.partition import GraphPartitioner
+from repro.data import (GraphGenConfig, generate_job_marketplace_graph,
+                        marketplace_event_stream)
+from repro.serving import (BatchPolicy, DynamicBatcher, FaultInjector,
+                           LoadConfig, LoadGenerator, ResultCache, Router,
+                           ScoreRequest, ShardedNearline, hottest_shard,
+                           load_cluster_checkpoint, merge_shards,
+                           restore_cluster, run_with_faults,
+                           save_cluster_checkpoint, serve_trace, split_shard,
+                           simulate_open_loop)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g, _ = generate_job_marketplace_graph(
+        GraphGenConfig(num_members=100, num_jobs=32, seed=5))
+    cfg = replace(gnn_smoke(), feat_dim=g.feat_dim)
+    params = enc.encoder_init(jax.random.PRNGKey(0), cfg)
+    return g, cfg, params
+
+
+def _events(g, seed=2, n=40):
+    return marketplace_event_stream(g, np.random.default_rng(seed), n,
+                                    job_every=10)
+
+
+def _cluster(g, cfg, params, P, *, strategy="hash", jit=False):
+    part = GraphPartitioner(P, strategy)
+    if strategy == "greedy":
+        part.fit(g)
+    cl = ShardedNearline(cfg, params, part, micro_batch=8, seed=13,
+                         policy=StalenessPolicy(closure_radius=None),
+                         jit_encoder=jit)
+    cl.bootstrap_from_graph(g)
+    return cl
+
+
+def _publish(cl, events):
+    for ev in events:
+        cl.topic.publish(ev)
+
+
+# --------------------------------------------- partitioner elasticity
+
+
+def test_partitioner_add_shard_freezes_hash_map():
+    part = GraphPartitioner(3, "hash")
+    before = {("member", i): part.shard_of("member", i) for i in range(64)}
+    q = part.add_shard()
+    assert q == 3 and part.num_shards == 4
+    after = {k: part.shard_of(*k) for k in before}
+    assert before == after, "add_shard re-homed keys without assignment"
+
+
+def test_partitioner_assign_overrides_and_snapshot_roundtrip():
+    part = GraphPartitioner(2, "hash")
+    part.add_shard()
+    part.assign([("member", 5), ("job", 0)], 2)
+    assert part.shard_of("member", 5) == 2
+    assert part.shard_of("job", 0) == 2
+    tids = np.full(8, NODE_TYPE_ID["member"])
+    owners = part.shard_array(tids, np.arange(8))
+    assert owners[5] == 2
+    clone = GraphPartitioner.from_snapshot(part.snapshot())
+    assert [clone.shard_of("member", i) for i in range(8)] == \
+           [part.shard_of("member", i) for i in range(8)]
+    assert clone.shard_of("job", 0) == 2
+
+
+# --------------------------------------------- snapshot / warm restart
+
+
+def test_cluster_snapshot_restore_mid_stream_bit_identical(setup):
+    """Crash between micro-batches: a cluster restored from a mid-stream
+    snapshot (pending dirt included) finishes bit-identical to one that
+    never crashed — at EVERY subsequent read point."""
+    g, cfg, params = setup
+    events = _events(g)
+    golden = _cluster(g, cfg, params, 2)
+    faulted = _cluster(g, cfg, params, 2)
+    _publish(golden, events)
+    _publish(faulted, events)
+    golden.process(max_batches=2)
+    faulted.process(max_batches=2)
+    snap = faulted.snapshot()
+    assert snap["topic_offset"] == 16 and faulted.pending() >= 0
+
+    golden.process()                          # uninterrupted to the end
+    faulted.process(max_batches=1)            # progress past the snapshot...
+    faulted.restore(snap)                     # ...then crash + roll back
+    assert faulted.topic.offsets["sharded-nearline"] == 16
+    while faulted.process(max_batches=1):     # replay the suffix
+        pass
+    assert tables_bitwise_equal(golden.live_embeddings(),
+                                faulted.live_embeddings())
+    assert faulted.pending() == golden.pending() == 0
+
+
+def test_snapshot_restores_pending_queue_exactly(setup):
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    _publish(cl, _events(g))
+    cl.ingest()                                # dirt without recompute
+    pending_before = cl.pending()
+    assert pending_before > 0
+    snap = cl.snapshot()
+    cl.drain()
+    assert cl.pending() == 0
+    cl.restore(snap)
+    assert cl.pending() == pending_before
+
+
+def test_disk_checkpoint_cold_restart_parity(setup, tmp_path):
+    """save → new process (restore_cluster from the snapshot's own config)
+    → replay suffix: store union AND router reads bit-identical."""
+    g, cfg, params = setup
+    events = _events(g)
+    golden = _cluster(g, cfg, params, 2)
+    _publish(golden, events)
+    golden.process()
+
+    crashed = _cluster(g, cfg, params, 2)
+    _publish(crashed, events)
+    crashed.process(max_batches=3)
+    save_cluster_checkpoint(crashed, str(tmp_path), 0)
+
+    cold = restore_cluster(load_cluster_checkpoint(str(tmp_path)),
+                           cfg=cfg, params=params, topic=crashed.topic,
+                           jit_encoder=False)
+    assert cold.num_shards == 2
+    cold.process()
+    assert tables_bitwise_equal(golden.live_embeddings(),
+                                cold.live_embeddings())
+    probe = [("member", 3), ("job", 7), ("member", 11)]
+    want = Router(golden).resolve_embeddings(probe)
+    got = Router(cold).resolve_embeddings(probe)
+    assert all(np.array_equal(want[k], got[k]) for k in probe)
+
+
+@pytest.mark.parametrize("P", [1, 2, 4])
+def test_run_with_faults_kill_restart_parity(setup, P):
+    g, cfg, params = setup
+    events = _events(g)
+    golden = _cluster(g, cfg, params, P)
+    _publish(golden, events)
+    golden.process()
+
+    faulted = _cluster(g, cfg, params, P)
+    _publish(faulted, events)
+    inj = FaultInjector(kill_at=(1, 3))
+    st = run_with_faults(faulted, injector=inj, checkpoint_every=2)
+    assert st["kills"] == 2 and inj.kills == [1, 3]
+    assert st["replayed"] >= 1                 # kill 3 lands past a checkpoint
+    assert tables_bitwise_equal(golden.live_embeddings(),
+                                faulted.live_embeddings())
+
+
+def test_fault_injector_fires_each_offset_once():
+    inj = FaultInjector(kill_at=(0, 2))
+    fired = [inj.tick() for _ in range(5)]
+    assert fired == [True, False, True, False, False]
+    assert inj.kills == [0, 2] and inj.ticks == 5
+
+
+# --------------------------------------------- elastic resharding
+
+
+def test_split_and_merge_preserve_union_bits(setup):
+    g, cfg, params = setup
+    control = _cluster(g, cfg, params, 2)
+    elastic = _cluster(g, cfg, params, 2)
+    events = _events(g)
+    for cl in (control, elastic):
+        _publish(cl, events)
+        cl.process()
+    p = hottest_shard(elastic)
+    s = split_shard(elastic)
+    assert s["src"] == p and elastic.num_shards == 3 and s["moved"] > 0
+    assert tables_bitwise_equal(control.live_embeddings(),
+                                elastic.live_embeddings())
+    m = merge_shards(elastic, s["dst"], s["src"])
+    assert m["moved"] == s["moved"]
+    assert len(elastic.shards[s["dst"]].registry) == 0
+    assert tables_bitwise_equal(control.live_embeddings(),
+                                elastic.live_embeddings())
+
+
+def test_resharded_cluster_tracks_continued_stream(setup):
+    """After a split, the grown cluster must keep BIT parity with a never-
+    resharded control on fresh events — including events touching moved
+    nodes (rings, features, and dirt migrated with them)."""
+    g, cfg, params = setup
+    control = _cluster(g, cfg, params, 2)
+    elastic = _cluster(g, cfg, params, 2)
+    for cl in (control, elastic):
+        _publish(cl, _events(g))
+        cl.process()
+    split_shard(elastic)
+    more = _events(g, seed=9, n=24)
+    for cl in (control, elastic):
+        _publish(cl, more)
+        cl.process()
+    assert tables_bitwise_equal(control.live_embeddings(),
+                                elastic.live_embeddings())
+
+
+def test_reshard_migrates_pending_dirt(setup):
+    """Dirt enqueued before the reshard drains on the NEW owner and the
+    result still matches an un-resharded control."""
+    g, cfg, params = setup
+    control = _cluster(g, cfg, params, 2)
+    elastic = _cluster(g, cfg, params, 2)
+    events = _events(g)
+    for cl in (control, elastic):
+        _publish(cl, events)
+        cl.ingest()                            # pending dirt, no recompute
+    assert elastic.pending() > 0
+    q = elastic.add_shard()
+    src = hottest_shard(elastic)
+    moved = sorted(elastic.shards[src].registry,
+                   key=lambda k: (NODE_TYPE_ID[k[0]], k[1]))[::2]
+    stats = elastic.reshard({k: q for k in moved})
+    assert stats["dirty"] > 0, "no dirt migrated — fixture too small"
+    assert all(elastic.partitioner.shard_of(*k) == q for k in moved)
+    control.drain()
+    elastic.drain()
+    assert tables_bitwise_equal(control.live_embeddings(),
+                                elastic.live_embeddings())
+    assert elastic.pending() == 0
+
+
+def test_reshard_invalidates_result_cache_ball(setup):
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    cl.process()
+    cache = ResultCache(512)
+    router = Router(cl, cache=cache)
+    keys = [("member", i) for i in range(6)] + [("job", j) for j in range(4)]
+    router.resolve_embeddings(keys)
+    assert len(cache) == len(keys)
+    q = cl.add_shard()
+    cl.reshard({("member", 0): q, ("job", 0): q})
+    assert ("member", 0) not in cache and ("job", 0) not in cache
+    # a re-resolve after the move still returns identical bits
+    again = router.resolve_embeddings(keys)
+    fresh = Router(cl).resolve_embeddings(keys)
+    assert all(np.array_equal(again[k], fresh[k]) for k in keys)
+
+
+# --------------------------------------------- overload control
+
+
+def _req(t, m=0, jobs=(0,)):
+    return ScoreRequest(time=t, member_id=m, job_ids=tuple(jobs))
+
+
+def test_batcher_shed_oldest_drops_head_admits_new():
+    b = DynamicBatcher(BatchPolicy(max_batch=8, max_queue=2,
+                                   overload="shed_oldest"))
+    assert b.submit(_req(0.0, 1)) and b.submit(_req(0.1, 2))
+    assert b.submit(_req(0.2, 3))              # head (t=0.0) pays, new admitted
+    assert len(b) == 2
+    assert [r.member_id for r in b.pop_batch()] == [2, 3]
+    m = b.metrics.summary()
+    assert m["shed"] == 1 and m["shed_queue_full"] == 1
+    assert m["shed_deadline"] == 0
+
+
+def test_batcher_degrade_admits_past_bound_flagged():
+    b = DynamicBatcher(BatchPolicy(max_batch=8, max_queue=2,
+                                   overload="degrade"))
+    b.submit(_req(0.0)), b.submit(_req(0.1))
+    assert b.submit(_req(0.2)) and len(b) == 3
+    batch = b.pop_batch()
+    assert [r.degraded for r in batch] == [False, False, True]
+    assert b.metrics.degraded == 1 and b.metrics.shed == 0
+
+
+def test_batcher_deadline_shed_at_pop():
+    b = DynamicBatcher(BatchPolicy(max_batch=4, max_wait_s=0.01,
+                                   shed_after_s=0.05))
+    for i in range(3):
+        b.submit(_req(0.01 * i, i))
+    batch = b.pop_batch(now=0.06)              # t=0.00 expired (0.06 > 0.05)
+    assert [r.member_id for r in batch] == [1, 2]
+    m = b.metrics.summary()
+    assert m["shed_deadline"] == 1 and m["shed"] == 1
+    assert m["shed_queue_full"] == 0
+
+
+def test_per_reason_shed_counters_under_bursty_arrivals():
+    """A flash-crowd trace through a tiny bounded queue: queue-full sheds
+    during the burst, deadline sheds on the backlog — both surfaced
+    separately in the batcher summary AND the SLO report."""
+    gen = LoadGenerator(
+        LoadConfig(rate_hz=500.0, num_requests=96, candidates=2, seed=3,
+                   burst_at_s=0.02, burst_factor=8.0, burst_duration_s=0.1),
+        num_members=50, num_jobs=20)
+    b = DynamicBatcher(BatchPolicy(max_batch=4, max_wait_s=0.002,
+                                   max_queue=6, shed_after_s=0.02))
+
+    class _NullRouter:
+        def score_batch(self, requests):
+            return [np.zeros(len(r.job_ids)) for r in requests]
+
+    rep = simulate_open_loop(_NullRouter(), b, gen.requests(), slo_ms=10.0,
+                             service_s=0.03)
+    s = b.metrics.summary()
+    assert s["shed_queue_full"] > 0 and s["shed_deadline"] > 0
+    assert s["shed"] == s["shed_queue_full"] + s["shed_deadline"]
+    assert rep.shed_queue_full == s["shed_queue_full"]
+    assert rep.shed_deadline == s["shed_deadline"]
+    assert rep.completed + rep.shed == 96
+
+
+def test_degrade_mode_serves_stale_records_end_to_end(setup):
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    cl.publish_version()                       # records exist -> stale path
+    gen = LoadGenerator(LoadConfig(rate_hz=2000.0, num_requests=64,
+                                   candidates=3, seed=7, zipf=1.4),
+                        num_members=100, num_jobs=32)
+    pol = BatchPolicy(max_batch=4, max_wait_s=0.002, max_queue=4,
+                      overload="degrade")
+    rep, batcher, router = serve_trace(
+        cl, gen.requests(), policy=pol, slo_ms=25.0,
+        service_s=lambda b: 0.004 * sum(not r.degraded for r in b) + 1e-4)
+    assert rep.degraded > 0 and rep.shed == 0
+    assert rep.completed == 64                 # degrade converts, never drops
+    assert router.stale_served_keys > 0
+    assert router.degraded_requests == rep.degraded
+    agg = cl.aggregate_metrics()
+    assert agg.requests_degraded == rep.degraded
+    assert "requests_degraded" in agg.summary()
+    assert "shed_queue_full" in agg.summary()
+
+
+def test_degraded_bits_match_published_records(setup):
+    """What the stale path serves IS the pinned published record — bit
+    equality against the store, and fresh-resolve fallback for cold keys."""
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    cl.publish_version()
+    router = Router(cl)
+    keys = [("member", 1), ("job", 2)]
+    out = router.resolve_stale(keys)
+    for k in keys:
+        assert np.array_equal(out[k], cl.record(*k).emb)
+    assert router.stale_served_keys == 2 and router.stale_fallback_keys == 0
+
+
+# --------------------------------------------- serve_trace teardown
+
+
+def test_serve_trace_teardown_runs_on_mid_trace_crash(setup, monkeypatch):
+    """A request that raises mid-trace must not leak the router's cache
+    into the cluster's invalidation fan-out (try/finally teardown)."""
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    boom = RuntimeError("scoring exploded")
+
+    def _explode(self, requests):
+        raise boom
+
+    monkeypatch.setattr(Router, "score_batch", _explode)
+    reqs = [_req(0.001 * i, i % 10, (i % 5,)) for i in range(8)]
+    with pytest.raises(RuntimeError):
+        serve_trace(cl, reqs, cache=ResultCache(64))
+    assert cl.caches == [], "crashed trace leaked its cache"
+
+
+def test_loadgen_default_draws_unchanged_by_new_knobs():
+    """zipf/burst default OFF must reproduce the original vectorized draw
+    sequence bit-for-bit (regression pin for the §10 benchmarks)."""
+    c = LoadConfig(rate_hz=100.0, num_requests=32, candidates=4, seed=11)
+    reqs = LoadGenerator(c, num_members=40, num_jobs=16).requests()
+    rng = np.random.default_rng((11, 0x10AD))
+    times = np.cumsum(rng.exponential(1.0 / 100.0, 32))
+    members = rng.integers(0, 40, 32)
+    jobs = rng.integers(0, 16, (32, 4))
+    for i, r in enumerate(reqs):
+        assert r.time == float(times[i]) and r.member_id == int(members[i])
+        assert r.job_ids == tuple(int(j) for j in jobs[i])
+
+
+def test_loadgen_zipf_skews_and_burst_compresses():
+    base = LoadConfig(rate_hz=100.0, num_requests=200, candidates=2, seed=1)
+    uni = LoadGenerator(base, num_members=500, num_jobs=50).requests()
+    skew = LoadGenerator(replace(base, zipf=1.2), num_members=500,
+                         num_jobs=50).requests()
+    top = lambda rs: max(np.bincount([r.member_id for r in rs],
+                                     minlength=500))
+    assert top(skew) > top(uni)                # a hot member emerges
+    burst = LoadGenerator(replace(base, burst_at_s=0.5, burst_factor=10.0,
+                                  burst_duration_s=0.5),
+                          num_members=500, num_jobs=50).requests()
+    inside = sum(1 for r in burst if 0.5 <= r.time < 1.0)
+    flat = sum(1 for r in uni if 0.5 <= r.time < 1.0)
+    assert inside > flat                       # arrivals pile into the window
+    # both deterministic per seed
+    again = LoadGenerator(replace(base, zipf=1.2), num_members=500,
+                          num_jobs=50).requests()
+    assert [r.member_id for r in again] == [r.member_id for r in skew]
