@@ -1,8 +1,41 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 import argparse
 import json
+import os
 import sys
 import traceback
+
+
+def _parse_derived(derived: str) -> dict:
+    """``k1=v1;k2=v2`` -> {k: float} (non-numeric values dropped)."""
+    out = {}
+    for kv in derived.split(";"):
+        k, sep, v = kv.partition("=")
+        if sep:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                pass
+    return out
+
+
+def _serving_regression_line(baseline_rows, rows, path: str) -> str:
+    """One-line serving-suite diff vs the previous JSON artifact: events/s
+    deltas (throughput rows) and fit-time deltas (partition-fit rows)."""
+    base = {r["name"]: _parse_derived(r["derived"]) for r in baseline_rows}
+    parts = []
+    for name, _us, derived in rows:
+        if not name.startswith("serving_") or name not in base:
+            continue
+        cur, old = _parse_derived(derived), base[name]
+        for key, fmt in (("events_per_s", "{:+.1%} ev/s"),
+                         ("fit_s", "{:+.1%} fit-s"),
+                         ("partition_fit_10m_edges_s", "{:+.1%} fit-s")):
+            if key in cur and old.get(key):
+                parts.append(f"{name} {fmt.format(cur[key] / old[key] - 1)}")
+    if not parts:
+        return f"serving diff vs {path}: no comparable serving rows"
+    return f"serving diff vs {path}: " + ", ".join(parts)
 
 
 def main() -> None:
@@ -12,19 +45,37 @@ def main() -> None:
                     help="graph census + engine + kernel + nearline + "
                          "train-pipeline + embedding-lifecycle/transfer + "
                          "serving benchmarks only (skips the slow "
-                         "GNN-training tables; CI mode)")
+                         "GNN-training tables; CI mode).  With --json, also "
+                         "prints a one-line serving regression diff vs the "
+                         "previous artifact at that path")
     ap.add_argument("--skip-slow", action="store_true",
                     help="deprecated alias of --quick")
+    ap.add_argument("--mesh", action="store_true",
+                    help="the §13 device-parallel suite ONLY: shard_map "
+                         "fan-out speedup (needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=4 on CPU) "
+                         "and the 10M-edge partition-fit scale row")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write the emitted rows as JSON to PATH")
+                    help="also write the emitted rows as JSON to PATH "
+                         "(an existing file there is read first as the "
+                         "regression baseline)")
     args = ap.parse_args()
+
+    # read the previous artifact BEFORE the run overwrites it
+    baseline = None
+    if args.json and os.path.exists(args.json):
+        try:
+            with open(args.json) as f:
+                baseline = json.load(f)
+        except (OSError, ValueError):
+            baseline = None
 
     from benchmarks.cache_bench import ALL_CACHE
     from benchmarks.engine_bench import ALL_ENGINE
     from benchmarks.kernels_bench import ALL_KERNELS
     from benchmarks.nearline_bench import ALL_NEARLINE
     from benchmarks.resilience_bench import ALL_RESILIENCE
-    from benchmarks.serving_bench import ALL_SERVING
+    from benchmarks.serving_bench import ALL_SERVING, ALL_SERVING_MESH
     from benchmarks.tables import ALL_TABLES
     from benchmarks.train_bench import ALL_TRAIN
     from benchmarks.transfer_bench import ALL_TRANSFER
@@ -37,6 +88,8 @@ def main() -> None:
         benches += (list(ALL_ENGINE) + list(ALL_KERNELS) + list(ALL_CACHE)
                     + list(ALL_NEARLINE) + list(ALL_TRAIN) + list(ALL_TRANSFER)
                     + list(ALL_SERVING) + list(ALL_RESILIENCE))
+    if args.mesh:
+        benches = list(ALL_SERVING_MESH)
     if args.only:
         benches = [b for b in benches if args.only in b.__name__]
 
@@ -49,11 +102,13 @@ def main() -> None:
             failures += 1
             traceback.print_exc()
             print(f"{bench.__name__},nan,FAILED")
+    from benchmarks.common import ROWS
     if args.json:
-        from benchmarks.common import ROWS
         with open(args.json, "w") as f:
             json.dump([{"name": n, "us_per_call": us, "derived": d}
                        for (n, us, d) in ROWS], f, indent=2)
+    if (args.quick or args.mesh) and baseline is not None:
+        print(_serving_regression_line(baseline, ROWS, args.json))
     if failures:
         sys.exit(1)
 

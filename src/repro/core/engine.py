@@ -124,6 +124,20 @@ def pad_tile(tile: ComputeGraphBatch, to: int) -> ComputeGraphBatch:
                              masks=tuple(_pad(x) for x in tile.masks))
 
 
+def zero_like_tile(proto: ComputeGraphBatch, batch: int) -> ComputeGraphBatch:
+    """An all-masked zero tile shaped like ``proto`` but with ``batch``
+    rows — the idle-shard filler for block encodes (DESIGN.md §13): zero
+    type rows are fully masked, so the rows encode to garbage that the
+    caller never reads, exactly like ``pad_tile`` padding."""
+
+    def _z(x):
+        return np.zeros((batch,) + x.shape[1:], x.dtype)
+
+    return ComputeGraphBatch(feats=tuple(_z(x) for x in proto.feats),
+                             types=tuple(_z(x) for x in proto.types),
+                             masks=tuple(_z(x) for x in proto.masks))
+
+
 def hop_widths(fanouts) -> tuple:
     """Uniforms consumed per query node at each hop: (F1, F1·F2, ...).
     THE slab layout — every consumer (TileBuilder, the scalar-join oracle)

@@ -41,6 +41,103 @@ STRATEGIES = ("hash", "greedy")
 _H1, _H2 = np.int64(0x9E3779B1), np.int64(0x85EBCA77)
 
 
+def _global_offsets(graph: HeteroGraph):
+    """Dense global node indexing: node (tid, nid) -> ``offs[tid] + nid``.
+    Snapshot ids are dense per type, so the global index space is dense too —
+    every per-node quantity (degree, assignment, owner) becomes one flat
+    array instead of a dict keyed by (tid, nid) tuples."""
+    offs = np.zeros(len(NODE_TYPES) + 1, np.int64)
+    for tname, tid in NODE_TYPE_ID.items():
+        offs[tid + 1] = graph.num_nodes.get(tname, 0)
+    np.cumsum(offs, out=offs)
+    return offs, int(offs[-1])
+
+
+def _edge_arrays(graph: HeteroGraph):
+    """Every stored directed edge as flat (src, dst) GLOBAL-index arrays —
+    the one O(E) pass shared by the vectorized ``fit`` and ``cut_stats``
+    (replaces their per-edge Python walks)."""
+    offs, total = _global_offsets(graph)
+    srcs, dsts = [], []
+    for (s, d), csr in graph.adj.items():
+        src = np.repeat(np.arange(len(csr.indptr) - 1, dtype=np.int64),
+                        np.diff(csr.indptr))
+        srcs.append(src + offs[NODE_TYPE_ID[s]])
+        dsts.append(csr.indices.astype(np.int64) + offs[NODE_TYPE_ID[d]])
+    if srcs:
+        return np.concatenate(srcs), np.concatenate(dsts), offs, total
+    return (np.zeros(0, np.int64), np.zeros(0, np.int64), offs, total)
+
+
+def _transpose_lists(csr, num_dst: int):
+    """Type-local sources grouped by destination: (rev_indptr, rev_srcs).
+
+    Linear time when scipy is available (its C coo->csr pass is a counting
+    sort — no O(E log E) comparison sort); numpy argsort fallback
+    otherwise.  Duplicate edges keep their multiplicity (each coo entry has
+    a unique synthetic column, so nothing is summed), and order WITHIN a
+    destination's list is unspecified — the fit only counts votes."""
+    srcs = np.repeat(np.arange(len(csr.indptr) - 1, dtype=np.int64),
+                     np.diff(csr.indptr))
+    dsts = csr.indices.astype(np.int64)
+    try:
+        from scipy import sparse
+    except ImportError:
+        order = np.argsort(dsts)
+        indptr = np.zeros(num_dst + 1, np.int64)
+        np.cumsum(np.bincount(dsts, minlength=num_dst), out=indptr[1:])
+        return indptr, srcs[order]
+    m = sparse.csr_matrix((srcs, (dsts, np.arange(len(srcs)))),
+                          shape=(num_dst, max(len(srcs), 1)))
+    return m.indptr.astype(np.int64), m.data.astype(np.int64)
+
+
+def _merged_adjacency(graph: HeteroGraph, offs: np.ndarray, total: int):
+    """The symmetrized global-index CSR (deg, indptr, nbr) in O(E):
+    every stored directed edge (u, v) contributes u->v and v->u, exactly
+    the adjacency the reference fit built edge-by-edge.  Forward neighbor
+    lists come straight out of the per-relation CSRs (already grouped by
+    source); reverse lists via :func:`_transpose_lists`.  No global edge
+    sort — the per-node neighbor ORDER differs from a sorted build, but
+    the fit only counts votes per shard, so the assignment is unchanged."""
+    deg = np.zeros(total, np.int64)
+    contribs = []               # (global row base, per-row deg, indptr, vals)
+    for (s, d), csr in graph.adj.items():
+        si, di = NODE_TYPE_ID[s], NODE_TYPE_ID[d]
+        nd = graph.num_nodes[d]
+        fwd_deg = np.diff(csr.indptr)
+        contribs.append((offs[si], fwd_deg, csr.indptr,
+                         csr.indices.astype(np.int64) + offs[di]))
+        deg[offs[si]:offs[si] + len(fwd_deg)] += fwd_deg
+        rptr, rsrcs = _transpose_lists(csr, nd)
+        rev_deg = np.diff(rptr)
+        contribs.append((offs[di], rev_deg, rptr, rsrcs + offs[si]))
+        deg[offs[di]:offs[di] + nd] += rev_deg
+    indptr = np.zeros(total + 1, np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    nbr = np.empty(int(indptr[-1]), np.int64)
+    cursor = indptr[:-1].copy()
+    for base, sub_deg, sub_ptr, vals in contribs:
+        n = len(sub_deg)
+        within = np.arange(len(vals), dtype=np.int64) - np.repeat(
+            np.asarray(sub_ptr[:-1], np.int64), sub_deg)
+        nbr[np.repeat(cursor[base:base + n], sub_deg) + within] = vals
+        cursor[base:base + n] += sub_deg
+    return deg, indptr, nbr
+
+
+def _slice_gather(values: np.ndarray, indptr: np.ndarray,
+                  rows: np.ndarray):
+    """Concatenate ``values[indptr[r]:indptr[r+1]]`` for every r in ``rows``
+    (the vectorized CSR multi-slice), plus the per-row repeat index."""
+    counts = indptr[rows + 1] - indptr[rows]
+    rep = np.repeat(np.arange(len(rows)), counts)
+    ends = np.cumsum(counts)
+    flat = np.arange(int(ends[-1]) if len(ends) else 0, dtype=np.int64)
+    flat += np.repeat(indptr[rows] - (ends - counts), counts)
+    return values[flat], rep, counts
+
+
 def _hash_shard(tids: np.ndarray, nids: np.ndarray, num_shards: int) -> np.ndarray:
     """Vectorized deterministic (type, id) -> shard hash (any id, any time)."""
     with np.errstate(over="ignore"):
@@ -154,13 +251,115 @@ class GraphPartitioner:
         return part
 
     # ---- fitting --------------------------------------------------------
-    def fit(self, graph: HeteroGraph) -> "GraphPartitioner":
+    def fit(self, graph: HeteroGraph, *,
+            chunk_size: int = 8192) -> "GraphPartitioner":
         """Fit the assignment over a snapshot (no-op for ``hash``).
-        Refitting replaces the previous assignment wholesale."""
+
+        Refitting replaces the previous assignment WHOLESALE: the dense
+        owner arrays are rebuilt against the current ``num_shards`` and any
+        per-key ``assign()`` overrides are cleared.  Precedence contract
+        (DESIGN.md §13): overrides layered by elastic resharding survive
+        ``add_shard`` (the hash modulus is frozen) but are RESET by ``fit``
+        — a refit is a global re-optimization and stale migration pins
+        would silently shadow it.
+
+        Streaming chunked scheme (bit-identical to :meth:`_fit_reference`):
+        nodes are visited in the same (-degree, key) order, in chunks.  Per
+        chunk, votes from already-placed neighbors are accumulated in one
+        vectorized ``np.add.at`` pass over the partial assignment; only
+        votes between nodes *inside* the same chunk propagate through a
+        cheap sequential inner loop (an argmax over a composite integer
+        key, no per-neighbor Python iteration).  Same balance-cap
+        semantics: a shard at ``ceil(total/P * balance_slack)`` closes.
+        """
         if self.strategy == "hash":
             return self
         self._assigned.clear()
         self._dense.clear()
+        self._over.clear()                 # refit resets reshard overrides
+        offs, total = _global_offsets(graph)
+        if total == 0:
+            return self
+        P = self.num_shards
+        # symmetrized adjacency over global indices: each stored directed
+        # edge contributes a->b and b->a (both endpoints' degrees count it,
+        # exactly as the reference adjacency build did) — assembled in
+        # O(E) from the stored CSRs, no global edge sort
+        deg, indptr, nbr = _merged_adjacency(graph, offs, total)
+        # global index is monotone in (tid, nid), so this reproduces the
+        # reference sort key (-deg, (tid, nid)) exactly
+        order = np.lexsort((np.arange(total), -deg))
+        cap = max(1, int(np.ceil(total / P * self.balance_slack)))
+        sizes = np.zeros(P, np.int64)
+        assign = np.full(total, -1, np.int64)
+        # composite selection key: votes dominate, then least-loaded open
+        # shard, then shard index — max(votes*A + base) reproduces the
+        # reference lexsort because A exceeds the full spread of `base`.
+        # The inner loop runs over PYTHON scalars: P is tiny (shard count),
+        # so a list max beats per-node numpy dispatch by ~20x.
+        base = [-p for p in range(P)]      # maintained incrementally
+        A = (cap + 2) * P
+        CLOSED = -(1 << 62)                # below any open-shard key
+        shard_range = tuple(range(1, P))
+        sizes_l = [0] * P
+        pos = np.full(total, -1, np.int64)  # scratch: index within chunk
+        for start in range(0, total, chunk_size):
+            chunk = order[start:start + chunk_size]
+            C = len(chunk)
+            nb, rep, _ = _slice_gather(nbr, indptr, chunk)
+            placed = assign[nb]
+            ok = placed >= 0
+            votes = np.zeros((C, P), np.int64)
+            np.add.at(votes, (rep[ok], placed[ok]), 1)
+            # intra-chunk edges: a neighbor later in this chunk receives a
+            # vote the moment this node is assigned (reference semantics:
+            # votes count ALL already-placed neighbors)
+            pos[chunk] = np.arange(C)
+            nbp = pos[nb]
+            intra = nbp > rep
+            # rep is nondecreasing by construction and masking preserves
+            # order, so isrc is already grouped — no per-chunk sort needed
+            isrc = rep[intra]
+            idst = nbp[intra].tolist()
+            istart = np.searchsorted(isrc, np.arange(C + 1)).tolist()
+            vlist = votes.tolist()
+            picks = []
+            append = picks.append
+            for row, lo, hi in zip(vlist, istart, istart[1:]):
+                best, bk = 0, row[0] * A + base[0]
+                for p in shard_range:
+                    k = row[p] * A + base[p]
+                    if k > bk:
+                        best, bk = p, k
+                append(best)
+                sz = sizes_l[best] + 1
+                sizes_l[best] = sz
+                if sz >= cap:
+                    base[best] = CLOSED
+                else:
+                    base[best] -= P
+                if lo != hi:
+                    for t in idst[lo:hi]:
+                        vlist[t][best] += 1
+            pos[chunk] = -1
+            assign[chunk] = picks          # visible to the next chunk's pass
+        # dense per-type owner arrays: the hot-path lookup is a vectorized
+        # take, never a per-row dict probe
+        for tname, tid in NODE_TYPE_ID.items():
+            n = graph.num_nodes.get(tname, 0)
+            if n:
+                self._dense[tid] = assign[offs[tid]:offs[tid] + n].copy()
+        return self
+
+    def _fit_reference(self, graph: HeteroGraph) -> "GraphPartitioner":
+        """The original per-node Python-loop fit, retained verbatim as the
+        parity oracle for the chunked :meth:`fit` (bench + tests assert
+        identical assignments)."""
+        if self.strategy == "hash":
+            return self
+        self._assigned.clear()
+        self._dense.clear()
+        self._over.clear()
         adj: dict = {}
         deg: dict = {}
         for (s, d), csr in graph.adj.items():
@@ -192,8 +391,6 @@ class GraphPartitioner:
             best = np.lexsort((np.arange(self.num_shards), sizes, -votes))[0]
             self._assigned[key] = int(best)
             sizes[best] += 1
-        # dense per-type owner arrays: the hot-path lookup is a vectorized
-        # take, never a per-row dict probe
         for tname, tid in NODE_TYPE_ID.items():
             n = graph.num_nodes.get(tname, 0)
             if n:
@@ -204,23 +401,22 @@ class GraphPartitioner:
 
     # ---- diagnostics ----------------------------------------------------
     def cut_stats(self, graph: HeteroGraph) -> dict:
-        """Edge-cut fraction + shard balance over a snapshot."""
-        cut = total = 0
-        for (s, d), csr in graph.adj.items():
-            src = np.repeat(np.arange(len(csr.indptr) - 1), np.diff(csr.indptr))
-            so = self.shard_array(np.full(len(src), NODE_TYPE_ID[s]), src)
-            do = self.shard_array(np.full(len(src), NODE_TYPE_ID[d]), csr.indices)
-            cut += int((so != do).sum())
-            total += len(src)
+        """Edge-cut fraction + shard balance over a snapshot, in one
+        grouped-numpy pass over the flat edge arrays (shared with ``fit``)
+        and ONE ``shard_array`` resolution per node type."""
+        src, dst, offs, total = _edge_arrays(graph)
+        owners = np.zeros(total, np.int64)
         sizes = np.zeros(self.num_shards, np.int64)
         for tname, tid in NODE_TYPE_ID.items():
             n = graph.num_nodes.get(tname, 0)
             if n:
-                owners = self.shard_array(np.full(n, tid), np.arange(n))
-                sizes += np.bincount(owners, minlength=self.num_shards)
+                own = self.shard_array(np.full(n, tid), np.arange(n))
+                owners[offs[tid]:offs[tid] + n] = own
+                sizes += np.bincount(own, minlength=self.num_shards)
+        cut = int((owners[src] != owners[dst]).sum()) if len(src) else 0
         mean = sizes.mean() if sizes.sum() else 1.0
-        return {"cut_fraction": cut / max(total, 1),
-                "cut_edges": cut, "total_edges": total,
+        return {"cut_fraction": cut / max(len(src), 1),
+                "cut_edges": cut, "total_edges": int(len(src)),
                 "shard_sizes": sizes.tolist(),
                 "balance": float(sizes.max() / max(mean, 1e-9))}
 

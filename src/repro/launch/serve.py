@@ -64,6 +64,14 @@ def main(argv=None):
                     help="ResultCache capacity (0 disables)")
     ap.add_argument("--check-parity", action="store_true",
                     help="assert sharded == single-engine bit parity")
+    ap.add_argument("--mesh", action="store_true",
+                    help="device-parallel fan-out (§13): run the P shard "
+                         "replicas on a ('shards',) jax mesh — drains become "
+                         "one block dispatch per round, router misses an "
+                         "all_to_all collective.  Falls back to the host-"
+                         "sequential oracle when the backend has fewer "
+                         "devices than shards (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=P on CPU)")
     ap.add_argument("--kill-restart", action="store_true",
                     help="crash/warm-restart arm: checkpoint to disk, kill "
                          "mid-burst, restore + replay, assert bit parity")
@@ -105,6 +113,13 @@ def main(argv=None):
     cluster = ShardedNearline(cfg, params, part, micro_batch=32,
                               seed=args.seed, policy=policy)
     cluster.bootstrap_from_graph(graph)
+    fanout = None
+    if args.mesh:
+        from repro.serving import MeshFanout
+        fanout = MeshFanout(cluster)
+        cluster.attach_mesh(fanout)
+        print(f"mesh: on_mesh={fanout.on_mesh} "
+              f"({'one device per shard' if fanout.on_mesh else 'fewer devices than shards -> host-sequential oracle arm'})")
 
     # 3. warm-up nearline burst --------------------------------------------
     events = make_event_burst(graph, rng, args.events)
@@ -129,6 +144,20 @@ def main(argv=None):
         print(f"parity (sharded == single-engine, bitwise): "
               f"{'PASS' if ok else 'FAIL'}")
         assert ok, "sharded/single-engine parity violated"
+        if fanout is not None:
+            # §13 oracle-arm gate: the same misses through the mesh
+            # collective and through the host-sequential per-owner loop
+            from repro.serving import Router
+            probe = ([("member", int(i)) for i in
+                      rng.integers(0, args.members, 8)]
+                     + [("job", int(j)) for j in rng.integers(0, args.jobs, 8)])
+            probe = list(dict.fromkeys(probe))
+            got = Router(cluster, mesh=fanout).resolve_embeddings(probe)
+            want = Router(cluster).resolve_embeddings(probe)
+            ok = all(np.array_equal(got[k], want[k]) for k in probe)
+            print(f"parity (mesh collective == host oracle, bitwise): "
+                  f"{'PASS' if ok else 'FAIL'}")
+            assert ok, "mesh/host router parity violated"
 
     if args.kill_restart:
         import tempfile
@@ -169,9 +198,10 @@ def main(argv=None):
                       max_wait_s=args.max_wait_ms * 1e-3)
     cache = ResultCache(args.cache) if args.cache else None
     serve_trace(cluster, reqs, policy=pol, cache=None,
-                slo_ms=args.slo_ms)                      # warm the jit buckets
+                slo_ms=args.slo_ms, mesh=fanout)         # warm the jit buckets
     report, batcher, router = serve_trace(cluster, reqs, policy=pol,
-                                          cache=cache, slo_ms=args.slo_ms)
+                                          cache=cache, slo_ms=args.slo_ms,
+                                          mesh=fanout)
     s = report.summary()
     print(f"\nserved {s['completed']} requests "
           f"({s['shed']} shed) in {s['batches']} batches "

@@ -194,6 +194,31 @@ def gnn_tile_pspecs(num_hops: int = 2):
     )
 
 
+def shards_mesh(num_shards: int) -> Mesh | None:
+    """Serving-tier mesh: one device per shard over a ``("shards",)`` axis
+    (DESIGN.md §13).  Returns None when the backend exposes fewer devices
+    than shards — callers fall back to the host-sequential oracle arm.  On
+    CPU CI the devices come from ``--xla_force_host_platform_device_count``."""
+    devs = jax.devices()
+    if len(devs) < num_shards:
+        return None
+    return Mesh(np.array(devs[:num_shards]), ("shards",))
+
+
+def gnn_tile_block_pspecs(num_hops: int = 2):
+    """Specs for a stacked per-shard tile block: every leaf of
+    :func:`gnn_tile_pspecs` gains a leading ``[P]`` axis sharded over
+    "shards", so device p holds exactly shard p's padded tile.  The batch
+    dim is NOT sharded here — each shard's whole tile is local to its
+    device (serving fan-out, not data parallelism)."""
+    from repro.core.engine import ComputeGraphBatch
+    return ComputeGraphBatch(
+        feats=tuple(P("shards", *([None] * (k + 2))) for k in range(num_hops + 1)),
+        types=tuple(P("shards", *([None] * (k + 1))) for k in range(num_hops + 1)),
+        masks=tuple(P("shards", *([None] * (k + 1))) for k in range(1, num_hops + 1)),
+    )
+
+
 def gnn_state_pspecs(state):
     """Replicated specs for the whole TrainState (params + AdamW moments)."""
     from repro.optim import AdamWState

@@ -8,6 +8,7 @@ from repro.serving.batcher import (BatchPolicy, BatcherMetrics,  # noqa: F401
 from repro.serving.cluster import ShardedNearline  # noqa: F401
 from repro.serving.loadgen import (LoadConfig, LoadGenerator,  # noqa: F401
                                    SLOReport, serve_trace, simulate_open_loop)
+from repro.serving.mesh import MeshFanout  # noqa: F401
 from repro.serving.resilience import (FaultInjector,  # noqa: F401
                                       hottest_shard, load_cluster_checkpoint,
                                       merge_shards, restore_cluster,

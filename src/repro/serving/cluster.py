@@ -77,6 +77,7 @@ class ShardedNearline:
         self.retired_cache_misses = 0
         self.views: list[ShardView] = []
         self.shards: list[EmbeddingLifecycle] = []
+        self.mesh_fanout = None                 # device-parallel arm (§13)
         self.policy = policy or StalenessPolicy()
         self.fanouts = tuple(fanouts or cfg.fanouts)
         # overload-control counters folded in from retired batchers (§12),
@@ -188,9 +189,27 @@ class ShardedNearline:
                               self._apply_event, self.mark_dirty,
                               upto_time=upto_time, max_events=max_events)
 
+    def attach_mesh(self, fanout) -> None:
+        """Route ``drain`` through a :class:`~repro.serving.mesh.MeshFanout`
+        (DESIGN.md §13).  The host-sequential arm stays available as
+        :meth:`drain_host` — it is the parity oracle, not dead code."""
+        assert fanout.cluster is self
+        self.mesh_fanout = fanout
+
     def drain(self, *, clock: float = 0.0, max_nodes: int | None = None) -> int:
-        """Drain every shard's queue (shard order is irrelevant: recomputes
-        are per-node deterministic)."""
+        """Drain every shard's queue — one mesh dispatch per lock-step
+        round when a :class:`MeshFanout` is attached, else the sequential
+        per-shard loop.  Bits are identical either way (per-node
+        deterministic recomputes; §13 parity gate)."""
+        if self.mesh_fanout is not None:
+            return self.mesh_fanout.drain(clock=clock, max_nodes=max_nodes)
+        return self.drain_host(clock=clock, max_nodes=max_nodes)
+
+    def drain_host(self, *, clock: float = 0.0,
+                   max_nodes: int | None = None) -> int:
+        """The retained host-sequential oracle arm: each shard drains its
+        own queue through its own jitted encoder (shard order is
+        irrelevant: recomputes are per-node deterministic)."""
         return sum(lc.drain(clock=clock, max_nodes=max_nodes)
                    for lc in self.shards)
 

@@ -206,7 +206,7 @@ def simulate_open_loop(router, batcher: DynamicBatcher, requests, *,
 
 def serve_trace(cluster, requests, *, policy: BatchPolicy | None = None,
                 cache=None, slo_ms: float = 50.0,
-                service_s=None):
+                service_s=None, mesh=None):
     """One-call harness: build batcher + router over a cluster, replay a
     trace, return (report, batcher, router).  Teardown runs in ``finally``:
     the router is closed (its cache detaches from the cluster's
@@ -215,7 +215,7 @@ def serve_trace(cluster, requests, *, policy: BatchPolicy | None = None,
     not leak a retired cache into the lifecycle's fan-out."""
     from repro.serving.router import Router
     batcher = DynamicBatcher(policy)
-    router = Router(cluster, cache=cache)
+    router = Router(cluster, cache=cache, mesh=mesh)
     try:
         report = simulate_open_loop(router, batcher, requests, slo_ms=slo_ms,
                                     service_s=service_s)

@@ -1,0 +1,268 @@
+"""Device-parallel shard fan-out: the serving tier on a jax mesh
+(DESIGN.md §13).
+
+:class:`ShardedNearline` models P shards as P Python-level encoder
+replicas — correct, but every shard encodes sequentially on one device and
+the router's scatter-gather is host-side Python grouping.
+:class:`MeshFanout` maps the shard axis onto a ``("shards",)`` jax mesh
+(one device per shard, :func:`repro.parallel.shards_mesh`):
+
+  * **block encode** — the P per-shard tiles stack into one ``[P, B, ...]``
+    block (leading axis sharded over "shards") and a single
+    ``shard_map``-ped jit call runs P encoder replicas concurrently; the
+    lock-step :meth:`drain` rides this to refresh all shards per round in
+    ONE device dispatch instead of P.
+  * **exchange encode** — the router's miss fan-out becomes a device
+    collective: misses are laned round-robin over P requesters, grouped by
+    owner into padded ``[P_req, K]`` row blocks, owner devices encode
+    their blocks, and one ``all_to_all`` returns each requester lane its
+    rows (:meth:`resolve`) — no per-owner host loop.
+
+Parity contract (the §13 oracle-arm discipline): tiles are built on the
+host by each shard's OWN ``tile_fn`` over REAL keys only — identical rows,
+identical per-node uniform slabs, identical ``ShardView`` remote-row
+accounting as the sequential path — then scattered into zero-padded block
+positions (all-masked pad rows encode to garbage that is sliced off,
+exactly like ``pad_tile``).  The encoder is row-wise, so block bits equal
+oracle bits for any P and any lane assignment.  The host-sequential arm is
+RETAINED (``ShardedNearline.drain_host``, the router's per-owner loop) and
+every mesh path falls back to it when the backend has fewer devices than
+shards (``on_mesh == False``) — the default single-device pytest regime
+exercises the same public API with trivially-identical bits, while CPU CI
+forces real devices via ``XLA_FLAGS=--xla_force_host_platform_device_count``.
+
+What the mesh path does NOT do: consult the per-shard tier-2 embed caches
+(§11) — a block encode is one device program, so resident rows are
+recomputed rather than gathered.  Bits are unaffected (a cache hit equals
+a fresh recompute by contract); only the hit counters differ.
+"""
+from __future__ import annotations
+
+import time as _time
+
+import jax
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import encoder as enc
+from repro.core.engine import bucket_pow2, pad_tile, zero_like_tile
+from repro.parallel import gnn_param_pspecs, gnn_tile_block_pspecs, shards_mesh
+
+
+class MeshFanout:
+    """P per-shard encoder replicas on a ``("shards",)`` device mesh.
+
+    Construction places the (replicated) encoder params on every mesh
+    device ONCE — per-call work is one sharded block placement + one jit
+    dispatch, which is where the fan-out wins its wall-clock: the
+    sequential arm pays P separate dispatch/sync/host-copy round trips per
+    round, the mesh arm pays one.
+    """
+
+    def __init__(self, cluster):
+        self.cluster = cluster
+        self.num_shards = cluster.num_shards
+        self.mesh = shards_mesh(self.num_shards)
+        self.on_mesh = self.mesh is not None
+        self.block_rounds = 0               # mesh-dispatch counters
+        self.exchange_rounds = 0
+        if not self.on_mesh:
+            return
+        cfg = cluster.cfg
+        num_hops = len(cluster.fanouts)
+        param_specs = gnn_param_pspecs(cluster.params)
+        tile_specs = gnn_tile_block_pspecs(num_hops)
+        self._block_sharding = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), tile_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        # replicate params across the mesh once — NOT per call (a device-0
+        # committed tree would be re-broadcast on every dispatch)
+        rep = jax.tree.map(lambda s: NamedSharding(self.mesh, s), param_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+        self._params = jax.tree.map(jax.device_put, cluster.params, rep)
+
+        def _encode_one(params, block):
+            tile = jax.tree.map(lambda x: x[0], block)   # [1, B, ...] -> [B, ...]
+            return enc.encoder_apply(params, cfg, tile)[None]
+
+        self._encode_block = jax.jit(shard_map(
+            _encode_one, mesh=self.mesh, in_specs=(param_specs, tile_specs),
+            out_specs=P("shards"), check_rep=False))
+
+        def _exchange_one(params, block):
+            # owner device: encode my [P_req*K] rows, lane-major
+            tile = jax.tree.map(lambda x: x[0], block)
+            rows = enc.encoder_apply(params, cfg, tile)       # [P_req*K, e]
+            rows = rows.reshape(self.num_shards, -1, rows.shape[-1])
+            # the collective: chunk r (my rows for requester r) goes to
+            # device r; I receive every owner's chunk for MY lane
+            rows = jax.lax.all_to_all(rows, "shards", split_axis=0,
+                                      concat_axis=0, tiled=True)
+            return rows[None]                                 # [1, P_own, K, e]
+
+        self._exchange_block = jax.jit(shard_map(
+            _exchange_one, mesh=self.mesh, in_specs=(param_specs, tile_specs),
+            out_specs=P("shards"), check_rep=False))
+
+    # ---- block plumbing --------------------------------------------------
+    def _put_block(self, tiles):
+        """Stack P same-shape host tiles into a [P, B, ...] block placed
+        directly with the "shards" sharding (device p gets slice p — no
+        device-0 staging copy)."""
+        block = jax.tree.map(lambda *xs: np.stack(xs), *tiles)
+        return jax.tree.map(jax.device_put, block, self._block_sharding)
+
+    def encode_block(self, tiles) -> np.ndarray:
+        """One mesh dispatch over P padded per-shard tiles -> [P, B, e]
+        host rows.  All tiles must share the same (bucketed) batch size."""
+        assert self.on_mesh and len(tiles) == self.num_shards
+        self.block_rounds += 1
+        return np.asarray(self._encode_block(self._params, self._put_block(tiles)))
+
+    def encode_block_host(self, tiles) -> np.ndarray:
+        """The sequential oracle arm of :meth:`encode_block`: the same P
+        tiles through each shard's own bucketed jitted encoder, one
+        dispatch + sync per shard (what the bench's speedup row divides
+        by, and what parity asserts against)."""
+        from repro.core.linksage import _to_jnp
+        rows = [np.asarray(lc._encode(lc.params, _to_jnp(t)))
+                for lc, t in zip(self.cluster.shards, tiles)]
+        return np.stack(rows)
+
+    # ---- lock-step drain (the nearline path) -----------------------------
+    def drain(self, *, clock: float = 0.0, max_nodes: int | None = None) -> int:
+        """Drain every shard's recompute queue in lock-step rounds: each
+        round pops one micro-batch per shard, builds the per-shard tiles on
+        the host (each shard's own ``tile_fn`` — accounting and bits
+        identical to the sequential arm), pads them to one shared pow2
+        bucket, and refreshes all shards with ONE mesh dispatch.  Per-shard
+        pop order matches ``EmbeddingLifecycle.drain`` exactly, so the
+        resulting stores are bit-identical to ``drain_host``."""
+        cluster = self.cluster
+        if not self.on_mesh:
+            return cluster.drain_host(clock=clock, max_nodes=max_nodes)
+        shards = cluster.shards
+        for lc in shards:
+            lc.enqueue_stale(clock)
+            lc.metrics.queue_depth_peak = max(lc.metrics.queue_depth_peak,
+                                              len(lc.queue))
+        totals = [0] * self.num_shards
+        while True:
+            batches = []
+            for p, lc in enumerate(shards):
+                room = lc.micro_batch if max_nodes is None else min(
+                    lc.micro_batch, max_nodes - totals[p])
+                batches.append(lc.queue.pop_batch(room) if room > 0 else [])
+            if not any(batches):
+                break
+            tiles, proto = [None] * self.num_shards, None
+            for p, batch in enumerate(batches):
+                if not batch:
+                    continue
+                lc = shards[p]
+                t0 = _time.perf_counter()
+                tiles[p] = lc.tile_fn([k for k, _ in batch])
+                lc.metrics.join_seconds += _time.perf_counter() - t0
+                proto = tiles[p]
+            B = bucket_pow2(max(len(b) for b in batches))
+            for p in range(self.num_shards):
+                if tiles[p] is None:        # idle shard: all-masked zero tile
+                    tiles[p] = zero_like_tile(proto, B)
+                else:
+                    tiles[p] = pad_tile(tiles[p], B)
+            t0 = _time.perf_counter()
+            rows = self.encode_block(tiles)               # [P, B, e]
+            enc_s = _time.perf_counter() - t0
+            active = [p for p, b in enumerate(batches) if b]
+            for p in active:
+                lc = shards[p]
+                lc.metrics.encoder_seconds += enc_s / len(active)
+                lc.metrics.batches += 1
+                lc.metrics.nodes_refreshed += len(batches[p])
+                for r, ((nt, ni), trig) in enumerate(batches[p]):
+                    lc.store.put_embedding(nt, ni, rows[p, r], clock,
+                                           version=lc.store.version + 1)
+                    lc.metrics.staleness.append(clock - trig)
+                totals[p] += len(batches[p])
+        return sum(totals)
+
+    # ---- all_to_all exchange (the router path) ---------------------------
+    def resolve(self, keys) -> dict:
+        """{key: emb} for a deduped miss list via the device collective.
+
+        Host plan: lane keys round-robin over P requesters, group each
+        lane by owner shard (ONE vectorized ``shard_array`` call), build
+        each owner's tile over its real keys (lane-major order), scatter
+        the rows into a zero [P_req*K] block (K = shared pow2 bucket of
+        the largest lane×owner group).  Device execute: owners encode,
+        ``all_to_all`` transposes owner-major rows into requester-major,
+        one gather back to host.  Off-mesh this IS the sequential oracle:
+        per-owner ``encode_nodes`` in shard order."""
+        from repro.core.graph import NODE_TYPE_ID
+        cluster = self.cluster
+        keys = list(keys)
+        if not keys:
+            return {}
+        if not self.on_mesh:
+            out: dict = {}
+            by_shard: dict = {}
+            for key in keys:
+                by_shard.setdefault(cluster.partitioner.shard_of(*key),
+                                    []).append(key)
+            for p, shard_keys in sorted(by_shard.items()):
+                emb = cluster.shards[p].encode_nodes(shard_keys)
+                for r, key in enumerate(shard_keys):
+                    out[key] = emb[r]
+            return out
+        Pn = self.num_shards
+        self.exchange_rounds += 1
+        tids = np.array([NODE_TYPE_ID[t] for t, _ in keys], np.int64)
+        nids = np.array([int(i) for _, i in keys], np.int64)
+        owners = cluster.partitioner.shard_array(tids, nids)
+        groups = [[[] for _ in range(Pn)] for _ in range(Pn)]
+        for i, key in enumerate(keys):
+            groups[i % Pn][int(owners[i])].append(key)
+        K = bucket_pow2(max(len(g) for lane in groups for g in lane))
+        tiles, proto = [None] * Pn, None
+        for p in range(Pn):
+            lane_keys = [k for r in range(Pn) for k in groups[r][p]]
+            if not lane_keys:
+                continue
+            lc = cluster.shards[p]
+            t0 = _time.perf_counter()
+            tile = lc.tile_fn(lane_keys)
+            lc.metrics.join_seconds += _time.perf_counter() - t0
+            lc.metrics.batches += 1
+            lc.metrics.nodes_refreshed += len(lane_keys)
+            # scatter real rows into the [P_req*K] lane-major block
+            pos = []
+            for r in range(Pn):
+                pos.extend(range(r * K, r * K + len(groups[r][p])))
+            pos = np.array(pos, np.int64)
+
+            def scatter(x):
+                out = np.zeros((Pn * K,) + x.shape[1:], x.dtype)
+                out[pos] = x
+                return out
+
+            tiles[p] = jax.tree.map(scatter, tile)
+            proto = tiles[p]
+        for p in range(Pn):
+            if tiles[p] is None:
+                tiles[p] = zero_like_tile(proto, Pn * K)
+        t0 = _time.perf_counter()
+        exchanged = np.asarray(
+            self._exchange_block(self._params, self._put_block(tiles)))
+        enc_s = _time.perf_counter() - t0
+        active = [p for p in range(Pn)
+                  if any(groups[r][p] for r in range(Pn))]
+        for p in active:
+            cluster.shards[p].metrics.encoder_seconds += enc_s / len(active)
+        # exchanged[r, p, j] = owner p's row j for requester lane r
+        out = {}
+        for r in range(Pn):
+            for p in range(Pn):
+                for j, key in enumerate(groups[r][p]):
+                    out[key] = exchanged[r, p, j]
+        return out

@@ -86,9 +86,16 @@ class ResultCache:
 class Router:
     """Scatter-gather scoring over a :class:`ShardedNearline` cluster."""
 
-    def __init__(self, cluster, *, cache: ResultCache | None = None):
+    def __init__(self, cluster, *, cache: ResultCache | None = None,
+                 mesh=None):
         self.cluster = cluster
         self.cache = cache
+        # device-collective fan-out (DESIGN.md §13): misses resolve through
+        # the MeshFanout's all_to_all exchange instead of the per-owner host
+        # loop below (which is retained as the parity oracle).  Off-mesh the
+        # fanout itself degrades to that same host loop, so bits never
+        # depend on which arm ran.
+        self.mesh = mesh
         self.stale_served_keys = 0      # keys served from stale records (§12)
         self.stale_fallback_keys = 0    # degraded keys with no record: fresh
         self.degraded_requests = 0
@@ -121,6 +128,16 @@ class Router:
                 misses.append(key)
             else:
                 out[key] = emb
+        if self.mesh is not None:
+            resolved = self.mesh.resolve(misses)
+            for key in misses:
+                out[key] = resolved[key]
+                if self.cache is not None:
+                    self.cache.put(key, resolved[key],
+                                   version=self._inflight_version(key))
+            return out
+        # host-sequential oracle arm: group by owner, one bucketed encode
+        # per owner shard, scatter back into request order
         by_shard: dict = {}
         for key in misses:
             by_shard.setdefault(self.cluster.partitioner.shard_of(*key),

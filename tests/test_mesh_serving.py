@@ -1,0 +1,214 @@
+"""Device-parallel serving fan-out (DESIGN.md §13): MeshFanout drain /
+resolve parity vs the host-sequential oracle arm and the single-engine
+nearline path, the ShardView accounting contract under the collective
+path, ownership overrides after migration, and a real-mesh subprocess
+gate (the in-process suite pins ONE device, so these tests exercise the
+off-mesh fallback; the subprocess forces real devices via XLA_FLAGS)."""
+import os
+import subprocess
+import sys
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.linksage import smoke as gnn_smoke
+from repro.core import encoder as enc
+from repro.core.embeddings import StalenessPolicy, tables_bitwise_equal
+from repro.core.nearline import NearlineInference
+from repro.core.partition import GraphPartitioner
+from repro.data import (GraphGenConfig, generate_job_marketplace_graph,
+                        marketplace_event_stream)
+from repro.serving import MeshFanout, Router, ShardedNearline
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g, _ = generate_job_marketplace_graph(
+        GraphGenConfig(num_members=100, num_jobs=30, seed=9))
+    cfg = replace(gnn_smoke(), feat_dim=g.feat_dim)
+    params = enc.encoder_init(jax.random.PRNGKey(0), cfg)
+    return g, cfg, params
+
+
+def _cluster(g, cfg, params, P, *, strategy="hash"):
+    part = GraphPartitioner(P, strategy)
+    if strategy == "greedy":
+        part.fit(g)
+    cl = ShardedNearline(cfg, params, part, micro_batch=8, seed=13,
+                         policy=StalenessPolicy(closure_radius=None))
+    cl.bootstrap_from_graph(g)
+    return cl
+
+
+def test_attach_mesh_rejects_foreign_cluster(setup):
+    g, cfg, params = setup
+    a = _cluster(g, cfg, params, 2)
+    b = _cluster(g, cfg, params, 2)
+    fan = MeshFanout(a)
+    with pytest.raises(AssertionError):
+        b.attach_mesh(fan)
+
+
+def test_offmesh_fallback_reports_and_empty_resolve(setup):
+    """With one visible device the fanout degrades to the oracle arm:
+    on_mesh False, zero mesh dispatches, empty resolve returns {}."""
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    fan = MeshFanout(cl)
+    assert not fan.on_mesh          # conftest pins ONE device in-process
+    assert fan.resolve([]) == {}
+    assert fan.block_rounds == 0 and fan.exchange_rounds == 0
+
+
+@pytest.mark.parametrize("P", [2, 4])
+def test_mesh_drain_parity_with_host_and_single_engine(setup, P):
+    """cluster.drain routed through the fanout (here: the fallback arm)
+    stays bit-identical to an identically-fed drain_host twin AND to the
+    single-engine NearlineInference table."""
+    g, cfg, params = setup
+    events = marketplace_event_stream(g, np.random.default_rng(3), 30,
+                                      job_every=12)
+    nl = NearlineInference(cfg, params, micro_batch=8, seed=13,
+                           policy=StalenessPolicy(closure_radius=None))
+    nl.bootstrap_from_graph(g)
+    mesh_cl = _cluster(g, cfg, params, P)
+    host_cl = _cluster(g, cfg, params, P)
+    mesh_cl.attach_mesh(MeshFanout(mesh_cl))
+    for ev in events:
+        nl.topic.publish(ev)
+        mesh_cl.topic.publish(ev)
+        host_cl.topic.publish(ev)
+    nl.process()
+    mesh_cl.process()
+    host_cl.process()
+    assert tables_bitwise_equal(nl.embedding_store.live_embeddings(),
+                                mesh_cl.live_embeddings())
+    assert tables_bitwise_equal(host_cl.live_embeddings(),
+                                mesh_cl.live_embeddings())
+    assert mesh_cl.pending() == 0
+
+
+def test_mesh_resolve_parity_and_shard_view_accounting(setup):
+    """Router misses through the fanout return the oracle's bits and the
+    ShardView local/remote row deltas match the host fan-out EXACTLY —
+    the §13 accounting contract (tiles are built by each owner's own
+    tile_fn over real keys only, so remote-row counts cannot drift)."""
+    g, cfg, params = setup
+    keys = [("member", 3), ("job", 7), ("member", 55), ("job", 0),
+            ("member", 99), ("job", 12), ("member", 8)]
+    mesh_cl = _cluster(g, cfg, params, 3)
+    host_cl = _cluster(g, cfg, params, 3)
+    fan = MeshFanout(mesh_cl)
+    acc0_m = [(v.local_rows, v.remote_rows) for v in mesh_cl.views]
+    acc0_h = [(v.local_rows, v.remote_rows) for v in host_cl.views]
+    out_m = Router(mesh_cl, mesh=fan).resolve_embeddings(keys)
+    out_h = Router(host_cl).resolve_embeddings(keys)
+    for k in keys:
+        assert np.array_equal(out_m[k], out_h[k]), k
+    d_m = [(v.local_rows - a, v.remote_rows - b)
+           for v, (a, b) in zip(mesh_cl.views, acc0_m)]
+    d_h = [(v.local_rows - a, v.remote_rows - b)
+           for v, (a, b) in zip(host_cl.views, acc0_h)]
+    assert d_m == d_h
+    assert any(r for _, r in d_m)       # the fan-out did cross shards
+
+
+def test_mesh_resolve_after_reshard_routes_to_new_owner(setup):
+    """Migrating a dense-owned key re-homes its resolution: the override
+    shadows the fitted owner and the fanout resolves through the NEW
+    owner's lifecycle, bits unchanged."""
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2, strategy="greedy")
+    fan = MeshFanout(cl)
+    cl.attach_mesh(fan)
+    key = ("member", 5)
+    src = cl.partitioner.shard_of(*key)
+    dst = 1 - src
+    golden = Router(cl, mesh=fan).resolve_embeddings([key])[key]
+    cl.reshard({key: dst})
+    assert cl.partitioner.shard_of(*key) == dst
+    n0 = cl.shards[dst].metrics.nodes_refreshed
+    out = Router(cl, mesh=fan).resolve_embeddings([key])
+    assert np.array_equal(out[key], golden)
+    assert cl.shards[dst].metrics.nodes_refreshed == n0 + 1
+
+
+_REAL_MESH_SCRIPT = """
+import numpy as np, jax
+from dataclasses import replace
+from repro.configs.linksage import smoke as gnn_smoke
+from repro.core import encoder as enc
+from repro.core.embeddings import StalenessPolicy, tables_bitwise_equal
+from repro.core.nearline import NearlineInference
+from repro.core.partition import GraphPartitioner
+from repro.data import (GraphGenConfig, generate_job_marketplace_graph,
+                        marketplace_event_stream)
+from repro.serving import MeshFanout, Router, ShardedNearline
+
+assert len(jax.devices()) == 2, jax.devices()
+g, _ = generate_job_marketplace_graph(
+    GraphGenConfig(num_members=80, num_jobs=24, seed=9))
+cfg = replace(gnn_smoke(), feat_dim=g.feat_dim)
+params = enc.encoder_init(jax.random.PRNGKey(0), cfg)
+policy = StalenessPolicy(closure_radius=None)
+
+def cluster():
+    part = GraphPartitioner(2, "hash")
+    cl = ShardedNearline(cfg, params, part, micro_batch=8, seed=13,
+                         policy=policy)
+    cl.bootstrap_from_graph(g)
+    return cl
+
+events = marketplace_event_stream(g, np.random.default_rng(3), 20,
+                                  job_every=12)
+nl = NearlineInference(cfg, params, micro_batch=8, seed=13, policy=policy)
+nl.bootstrap_from_graph(g)
+mesh_cl, host_cl = cluster(), cluster()
+fan = MeshFanout(mesh_cl)
+assert fan.on_mesh
+mesh_cl.attach_mesh(fan)
+for ev in events:
+    nl.topic.publish(ev)
+    mesh_cl.topic.publish(ev)
+    host_cl.topic.publish(ev)
+nl.process(); mesh_cl.process(); host_cl.process()
+assert fan.block_rounds > 0                      # drains went over the mesh
+assert tables_bitwise_equal(nl.embedding_store.live_embeddings(),
+                            mesh_cl.live_embeddings())
+assert tables_bitwise_equal(host_cl.live_embeddings(),
+                            mesh_cl.live_embeddings())
+
+keys = [("member", 3), ("job", 7), ("member", 55), ("job", 0), ("member", 79)]
+acc0_m = [(v.local_rows, v.remote_rows) for v in mesh_cl.views]
+acc0_h = [(v.local_rows, v.remote_rows) for v in host_cl.views]
+out_m = Router(mesh_cl, mesh=fan).resolve_embeddings(keys)
+out_h = Router(host_cl).resolve_embeddings(keys)
+assert fan.exchange_rounds == 1                  # one all_to_all dispatch
+for k in keys:
+    assert np.array_equal(out_m[k], out_h[k]), k
+d_m = [(v.local_rows - a, v.remote_rows - b)
+       for v, (a, b) in zip(mesh_cl.views, acc0_m)]
+d_h = [(v.local_rows - a, v.remote_rows - b)
+       for v, (a, b) in zip(host_cl.views, acc0_h)]
+assert d_m == d_h, (d_m, d_h)
+print("REAL-MESH-PARITY-OK")
+"""
+
+
+def test_real_mesh_subprocess_parity():
+    """The on-mesh arm needs more devices than the in-process suite pins,
+    so it runs in a subprocess under forced host-device emulation: drains
+    dispatch shard_map blocks, misses go through one all_to_all, and both
+    stay bit-identical to the host oracle with matching accounting."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", _REAL_MESH_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "REAL-MESH-PARITY-OK" in out.stdout

@@ -163,3 +163,81 @@ def test_sharded_join_reads_match_single_engine(graph):
     single.gather_features(ty, ids)
     sharded.gather_features(ty, ids)
     assert single.join_reads - r0s == sharded.join_reads - r0p == 32
+
+
+# ------------------------------------- vectorized fit / cut_stats (§13)
+
+
+def test_vectorized_fit_matches_reference_assignment(graph):
+    """The chunked multi-pass fit is bit-identical to the reference greedy
+    loop — same owner for every node — including chunk sizes that split
+    the frontier mid-degree-class."""
+    for P in (1, 2, 4):
+        for chunk_size in (7, 64, 8192):
+            ref = GraphPartitioner(P, "greedy")._fit_reference(graph)
+            new = GraphPartitioner(P, "greedy").fit(graph,
+                                                    chunk_size=chunk_size)
+            assert set(ref._dense) == set(new._dense)
+            for tid in ref._dense:
+                assert np.array_equal(ref._dense[tid], new._dense[tid]), (
+                    P, chunk_size, tid)
+
+
+def test_cut_stats_matches_python_reference(graph):
+    """The grouped-numpy cut_stats equals a per-edge Python walk on every
+    reported field."""
+    part = GraphPartitioner(3, "greedy").fit(graph)
+    s = part.cut_stats(graph)
+    cut = tot = 0
+    for (stype, dtype), csr in graph.adj.items():
+        for u in range(graph.num_nodes[stype]):
+            for v in csr.neighbors(u):
+                tot += 1
+                if part.shard_of(stype, u) != part.shard_of(dtype, int(v)):
+                    cut += 1
+    sizes = [0] * part.num_shards
+    for tname, n in graph.num_nodes.items():
+        for i in range(n):
+            sizes[part.shard_of(tname, i)] += 1
+    assert s["cut_edges"] == cut
+    assert s["total_edges"] == tot
+    assert s["shard_sizes"] == sizes
+    assert s["cut_fraction"] == pytest.approx(cut / tot)
+    assert s["balance"] == pytest.approx(max(sizes) / (sum(sizes) / len(sizes)))
+
+
+def test_assign_overrides_shadow_dense_owner(graph):
+    """Explicit reshard assignments shadow the fitted dense owner arrays,
+    on both the scalar and the vectorized ownership paths."""
+    part = GraphPartitioner(2, "greedy").fit(graph)
+    key = ("job", 3)
+    base = part.shard_of(*key)
+    assert int(part._dense[NODE_TYPE_ID["job"]][3]) == base  # dense-covered
+    part.assign([key], 1 - base)
+    assert part.shard_of(*key) == 1 - base
+    own = part.shard_array(np.array([NODE_TYPE_ID["job"]]), np.array([3]))
+    assert int(own[0]) == 1 - base
+    # unrelated dense-covered keys are untouched
+    assert part.shard_of("job", 4) == int(part._dense[NODE_TYPE_ID["job"]][4])
+
+
+def test_refit_precedence_contract(graph):
+    """The §13 precedence contract: overrides survive ``add_shard`` (frozen
+    hash modulus, nothing re-homes implicitly) but are RESET by ``fit`` —
+    a refit is a global re-optimization and must not be shadowed by stale
+    migration pins."""
+    part = GraphPartitioner(2, "greedy").fit(graph)
+    key = ("member", 5)
+    new_shard = part.add_shard()
+    part.assign([key], new_shard)
+    assert part.shard_of(*key) == new_shard          # survives add_shard
+    before = {t: a.copy() for t, a in part._dense.items()}
+    for t, a in before.items():                      # add_shard moved nothing
+        assert np.array_equal(part._dense[t], a)
+    part.fit(graph)                                  # refit: overrides reset
+    fresh = GraphPartitioner(3, "greedy").fit(graph)
+    for tid in fresh._dense:
+        assert np.array_equal(part._dense[tid], fresh._dense[tid])
+    tid = NODE_TYPE_ID["member"]
+    assert part.shard_of(*key) == int(part._dense[tid][5])
+    assert not part._over                            # no pins survive a refit
