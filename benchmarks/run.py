@@ -20,21 +20,29 @@ def _parse_derived(derived: str) -> dict:
 
 
 def _serving_regression_line(baseline_rows, rows, path: str) -> str:
-    """One-line serving-suite diff vs the previous JSON artifact: events/s
-    deltas (throughput rows) and fit-time deltas (partition-fit rows)."""
+    """One-line diff vs the previous JSON artifact: events/s and fit-time
+    deltas for serving rows, QPS (relative) and recall@10 (absolute
+    points) deltas for retrieval rows."""
     base = {r["name"]: _parse_derived(r["derived"]) for r in baseline_rows}
     parts = []
     for name, _us, derived in rows:
-        if not name.startswith("serving_") or name not in base:
+        if (not name.startswith(("serving_", "retrieval_",
+                                 "transfer_retrieval"))
+                or name not in base):
             continue
         cur, old = _parse_derived(derived), base[name]
         for key, fmt in (("events_per_s", "{:+.1%} ev/s"),
                          ("fit_s", "{:+.1%} fit-s"),
-                         ("partition_fit_10m_edges_s", "{:+.1%} fit-s")):
+                         ("partition_fit_10m_edges_s", "{:+.1%} fit-s"),
+                         ("qps", "{:+.1%} qps")):
             if key in cur and old.get(key):
                 parts.append(f"{name} {fmt.format(cur[key] / old[key] - 1)}")
+        if "recall_at_10" in cur and "recall_at_10" in old:
+            d = cur["recall_at_10"] - old["recall_at_10"]
+            if d:
+                parts.append(f"{name} {d:+.4f} recall@10")
     if not parts:
-        return f"serving diff vs {path}: no comparable serving rows"
+        return f"serving diff vs {path}: no comparable rows"
     return f"serving diff vs {path}: " + ", ".join(parts)
 
 
@@ -75,6 +83,7 @@ def main() -> None:
     from benchmarks.kernels_bench import ALL_KERNELS
     from benchmarks.nearline_bench import ALL_NEARLINE
     from benchmarks.resilience_bench import ALL_RESILIENCE
+    from benchmarks.retrieval_bench import ALL_RETRIEVAL
     from benchmarks.serving_bench import ALL_SERVING, ALL_SERVING_MESH
     from benchmarks.tables import ALL_TABLES
     from benchmarks.train_bench import ALL_TRAIN
@@ -82,12 +91,14 @@ def main() -> None:
 
     benches = (list(ALL_TABLES) + list(ALL_ENGINE) + list(ALL_KERNELS)
                + list(ALL_CACHE) + list(ALL_NEARLINE) + list(ALL_TRAIN)
-               + list(ALL_TRANSFER) + list(ALL_SERVING) + list(ALL_RESILIENCE))
+               + list(ALL_TRANSFER) + list(ALL_RETRIEVAL) + list(ALL_SERVING)
+               + list(ALL_RESILIENCE))
     if args.skip_slow or args.quick:
         benches = [b for b in benches if b.__name__ == "bench_graph_construction"]
         benches += (list(ALL_ENGINE) + list(ALL_KERNELS) + list(ALL_CACHE)
                     + list(ALL_NEARLINE) + list(ALL_TRAIN) + list(ALL_TRANSFER)
-                    + list(ALL_SERVING) + list(ALL_RESILIENCE))
+                    + list(ALL_RETRIEVAL) + list(ALL_SERVING)
+                    + list(ALL_RESILIENCE))
     if args.mesh:
         benches = list(ALL_SERVING_MESH)
     if args.only:

@@ -171,8 +171,42 @@ def bench_transfer_multi_surface_step():
          f"steps_per_s={steps / dt:.0f};surfaces=4;batch={B}")
 
 
+def bench_transfer_retrieval_surface():
+    """The §14 retrieval tier on REAL surface vectors (not the synthetic
+    clustered corpus retrieval_bench sweeps): build the int8+IVF index
+    over trained GNN job embeddings via ``EBRSurface.build_index``, assert
+    the exact config returns ids bit-identical to the fp32 oracle, and
+    report the production arm's engagement recall vs the oracle's."""
+    from benchmarks.common import timed, trained_gnn
+    from repro.core.eval import positives_from_edges, recall_from_retrieved
+    from repro.core.retrieval import brute_force_topk
+    from repro.core.transfer import SURFACES
+
+    g, truth, cfg, tr, m_emb, j_emb = trained_gnn(0, steps=60)
+    src, dst = truth["engagements"]
+    positives = positives_from_edges(src, dst, m_emb.shape[0])
+    members = np.array([i for i, p in enumerate(positives) if p])
+    q, pos_sub = m_emb[members], [positives[i] for i in members]
+
+    index = SURFACES["ebr"].build_index(j_emb, quantize="per_row",
+                                        num_lists=0, seed=0)
+    oracle_ids, _ = brute_force_topk(q, j_emb, 10)
+    exact_ids, _ = index.search(q, 10, quantized=False)
+    ok = np.array_equal(exact_ids, oracle_ids)
+    nprobe = max(1, index.num_lists // 3)
+    (ann_ids, _), us = timed(
+        lambda: index.search(q, 10, nprobe=nprobe, refine=4))
+    emit("transfer_retrieval_ebr", us / len(q),
+         f"qps={len(q) / (us / 1e6):.0f};"
+         f"recall_at_10={recall_from_retrieved(ann_ids, pos_sub, 10):.4f};"
+         f"oracle_recall={recall_from_retrieved(oracle_ids, pos_sub, 10):.4f};"
+         f"bitwise_oracle={int(ok)};corpus={len(j_emb)};nprobe={nprobe}")
+    assert ok, "exact-search ids differ from fp32 oracle"
+
+
 ALL_TRANSFER = [
     bench_transfer_sweep_vs_incremental,
     bench_transfer_staleness_tradeoff,
     bench_transfer_multi_surface_step,
+    bench_transfer_retrieval_surface,
 ]

@@ -72,10 +72,10 @@ def main():
     for arm, use_gnn in (("with GNN", True), ("control ", False)):
         tables = (dict(feat_tables, m_gnn=m_emb, j_gnn=j_emb)
                   if use_gnn else dict(feat_tables))
-        rep = fit_surfaces(tables, pairs, labels, embed_dim=cfg.embed_dim,
-                           feat_dim=graph.feat_dim, use_gnn=use_gnn,
-                           epochs=args.ranker_epochs,
-                           eval_truth=truth["engagements"])
+        rep, _ = fit_surfaces(tables, pairs, labels, embed_dim=cfg.embed_dim,
+                              feat_dim=graph.feat_dim, use_gnn=use_gnn,
+                              epochs=args.ranker_epochs,
+                              eval_truth=truth["engagements"])
         print(f"surfaces ({arm}): "
               + "  ".join(f"{k}={v:.4f}" for k, v in rep.items()))
 

@@ -81,6 +81,16 @@ class EmbeddingStore(NoSQLStore):
         self.version = 0                       # last published version
         self._tables: dict[int, dict] = {}     # version -> frozen live table
         self._caches: list = []                # attached SlabCaches (§11)
+        # derived read replicas of published tables (DESIGN.md §14):
+        # (version, node_type, scheme) -> QuantizedTable, and
+        # (version, node_type) -> (ids, dense matrix).  Pure functions of
+        # the frozen fp32 table — memoized, NOT snapshotted (a restore
+        # re-derives bit-identically, like the lifecycle's uniform memo).
+        self._derived: dict = {}
+        # (node_type, scheme) pairs to quantize EAGERLY at publish() — the
+        # paper's pipeline derives the serving replica as part of the
+        # publish step, not lazily on first query
+        self.quantize_on_publish: tuple = ()
 
     def attach_cache(self, cache) -> None:
         """Register a memory-hierarchy SlabCache whose counters this store's
@@ -94,9 +104,13 @@ class EmbeddingStore(NoSQLStore):
         self.put((node_type, int(node_id)), EmbeddingRecord(emb, float(t), v))
 
     def publish(self) -> int:
-        """Freeze the live table as the next version; returns it."""
+        """Freeze the live table as the next version; returns it.  Any
+        (node_type, scheme) pairs in ``quantize_on_publish`` get their int8
+        replica derived here, as part of the publish step."""
         self.version += 1
         self._tables[self.version] = dict(self._d)   # records are immutable
+        for ntype, scheme in self.quantize_on_publish:
+            self.quantized_table(ntype, version=self.version, scheme=scheme)
         return self.version
 
     # ---- reads ----------------------------------------------------------
@@ -139,6 +153,65 @@ class EmbeddingStore(NoSQLStore):
         """{key: emb} snapshot of the live table (parity comparisons)."""
         return {k: rec.emb for k, rec in self._d.items()}
 
+    # ---- derived read replicas (DESIGN.md §14) ---------------------------
+    def dense_table(self, node_type: str, *, version: int):
+        """One published version's ``node_type`` rows as (ids [N] i64
+        ascending, matrix [N, d] f32), both frozen.  Ascending-id order is
+        the retrieval tier's canonical row order: a corpus-row tie-break
+        is an id tie-break.  Memoized per (version, node_type) — the
+        version table is immutable, so the replica is too."""
+        key = (int(version), node_type)
+        hit = self._derived.get(key)
+        if hit is not None:
+            return hit
+        tab = self.table(version)
+        ids = np.array(sorted(i for t, i in tab if t == node_type), np.int64)
+        mat = (np.stack([tab[(node_type, int(i))].emb for i in ids])
+               .astype(np.float32) if len(ids)
+               else np.zeros((0, 0), np.float32))
+        self.reads += len(ids)
+        ids.setflags(write=False)
+        mat.setflags(write=False)
+        self._derived[key] = (ids, mat)
+        return ids, mat
+
+    def quantized_table(self, node_type: str, *, version: int,
+                        scheme: str = "per_row"):
+        """The version-pinning contract extended to quantized replicas: an
+        immutable int8 ``QuantizedTable`` derived ONCE per (version,
+        node_type, scheme) from the frozen fp32 table.  Deterministic —
+        re-deriving after snapshot/restore yields the same bits, so the
+        memo is rebuilt lazily rather than checkpointed.  Returns
+        (ids [N] i64, QuantizedTable)."""
+        from repro.core.retrieval import quantize_int8
+        key = (int(version), node_type, scheme)
+        hit = self._derived.get(key)
+        if hit is not None:
+            return hit
+        ids, mat = self.dense_table(node_type, version=version)
+        qt = quantize_int8(mat, scheme) if mat.size else None
+        self._derived[key] = (ids, qt)
+        return ids, qt
+
+    def retrieval_index(self, node_type: str, *, version: int,
+                        scheme: str | None = "per_row",
+                        num_lists: int | None = 0, seed: int = 0):
+        """Build the full retrieval tier (fp32 oracle + int8 replica + IVF
+        lists) over one published version's ``node_type`` table — the
+        offline-batch step that turns a publish into a servable ANN corpus.
+        Memoized per (version, node_type, scheme, num_lists, seed)."""
+        from repro.core.retrieval import RetrievalIndex
+        key = (int(version), node_type, scheme, num_lists, seed, "ivf")
+        hit = self._derived.get(key)
+        if hit is not None:
+            return hit
+        ids, mat = self.dense_table(node_type, version=version)
+        idx = RetrievalIndex.build(mat, ids=ids, scheme=scheme,
+                                   num_lists=num_lists, seed=seed,
+                                   version=int(version))
+        self._derived[key] = idx
+        return idx
+
     # ---- checkpoint (DESIGN.md §12) -------------------------------------
     def snapshot(self) -> dict:
         """Live records + every published version table + the version
@@ -152,6 +225,9 @@ class EmbeddingStore(NoSQLStore):
         super().restore(state)
         self.version = int(state["version"])
         self._tables = {int(v): dict(tab) for v, tab in state["tables"].items()}
+        # derived replicas are pure functions of the frozen tables: drop the
+        # memo and let them re-derive (bit-identically) on demand
+        self._derived = {}
 
     def summary(self) -> dict:
         """Store-side counters (the online-feature-store view of the same

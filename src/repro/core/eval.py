@@ -12,10 +12,12 @@ import numpy as np
 def recall_at_k(scores: np.ndarray, positives: list, k: int = 10) -> float:
     """scores [num_members, num_jobs]; positives[i] = set of relevant job ids.
 
-    Fully vectorized: one dense [n, num_jobs] membership matrix gathered at
-    the top-k indices replaces the per-member set-intersection loop.
-    Out-of-range positive ids count toward the denominator but can never be
-    retrieved (identical to the old set-based semantics).
+    Memory-flat in the corpus: top-k hits are checked by flattened-key
+    membership (row * num_jobs + col against the deduplicated positive
+    keys) instead of a dense [n, num_jobs] bool matrix — O(n·k + P) extra,
+    not O(n·J), so it survives 1M+ jobs.  Out-of-range positive ids count
+    toward the denominator but can never be retrieved (identical to the
+    old set-based semantics; asserted by tests/test_retrieval.py).
     """
     n, num_jobs = scores.shape
     topk = np.argpartition(-scores, min(k, num_jobs - 1), axis=1)[:, :k]
@@ -25,9 +27,42 @@ def recall_at_k(scores: np.ndarray, positives: list, k: int = 10) -> float:
     rows = np.repeat(np.arange(n), lens)
     cols = np.fromiter((j for p in positives for j in p), np.int64, lens.sum())
     ok = (cols >= 0) & (cols < num_jobs)
-    pos_mat = np.zeros((n, num_jobs), bool)
-    pos_mat[rows[ok], cols[ok]] = True
-    hits = int(pos_mat[np.arange(n)[:, None], topk].sum())
+    pos_keys = np.unique(rows[ok] * num_jobs + cols[ok])
+    topk_keys = np.arange(n)[:, None] * num_jobs + topk
+    hits = int(np.isin(topk_keys, pos_keys).sum())
+    total = int(np.minimum(lens, k).sum())
+    return hits / max(total, 1)
+
+
+def positives_from_edges(eng_src: np.ndarray, eng_dst: np.ndarray,
+                         num_members: int) -> list:
+    """positives[m] = set of engaged job ids, built by one sorted groupby
+    pass over the edge list instead of a per-edge Python loop (bit-identical
+    to the loop; asserted by tests/test_retrieval.py)."""
+    positives = [set() for _ in range(num_members)]
+    if len(eng_src) == 0:
+        return positives
+    src = np.asarray(eng_src, np.int64)
+    dst = np.asarray(eng_dst, np.int64)
+    order = np.argsort(src, kind="stable")
+    src_s, dst_s = src[order], dst[order]
+    uniq, starts = np.unique(src_s, return_index=True)
+    for m, js in zip(uniq, np.split(dst_s, starts[1:])):
+        positives[m] = set(js.tolist())
+    return positives
+
+
+def recall_from_retrieved(retrieved: np.ndarray, positives: list,
+                          k: int = 10) -> float:
+    """recall@k from already-retrieved ids [n, >=k] (a RetrievalIndex
+    search result) instead of a dense score matrix; -1 entries are padding.
+    Same semantics as ``recall_at_k``: denominator min(|positives|, k)."""
+    n = retrieved.shape[0]
+    lens = np.fromiter((len(p) for p in positives), np.int64, n)
+    if not (lens > 0).any():
+        return 0.0
+    hits = sum(len(set(int(j) for j in row[:k] if j >= 0) & p)
+               for row, p in zip(retrieved, positives))
     total = int(np.minimum(lens, k).sum())
     return hits / max(total, 1)
 
@@ -53,19 +88,28 @@ def auc(labels: np.ndarray, scores: np.ndarray) -> float:
 
 def retrieval_eval(member_emb: np.ndarray, job_emb: np.ndarray,
                    eng_src: np.ndarray, eng_dst: np.ndarray,
-                   *, k: int = 10, segment_mask: np.ndarray | None = None):
-    """EBR-style evaluation: dot-product retrieval vs ground-truth engagements."""
-    positives = [set() for _ in range(member_emb.shape[0])]
-    for m, j in zip(eng_src, eng_dst):
-        positives[m].add(int(j))
-    scores = member_emb @ job_emb.T
+                   *, k: int = 10, segment_mask: np.ndarray | None = None,
+                   index=None, nprobe: int | None = None):
+    """EBR-style evaluation: dot-product retrieval vs ground-truth engagements.
+
+    Default path is the exact fp32 scan.  Passing ``index`` (a
+    ``core.retrieval.RetrievalIndex`` built over ``job_emb``) routes
+    retrieval through the quantized ANN tier instead — ``nprobe`` forwarded
+    to ``search()`` — so the same eval measures the tier's recall.
+    """
+    positives = positives_from_edges(eng_src, eng_dst, member_emb.shape[0])
     members = [i for i, p in enumerate(positives) if p]
     if segment_mask is not None:
         members = [i for i in members if segment_mask[i]]
     if not members:
         return {"recall": 0.0, "num_members": 0}
     sub = np.array(members)
-    r = recall_at_k(scores[sub], [positives[i] for i in sub], k=k)
+    if index is not None:
+        ids, _ = index.search(member_emb[sub], k, nprobe=nprobe)
+        r = recall_from_retrieved(ids, [positives[i] for i in sub], k=k)
+    else:
+        scores = member_emb[sub] @ job_emb.T
+        r = recall_at_k(scores, [positives[i] for i in sub], k=k)
     return {"recall": r, "num_members": len(members)}
 
 

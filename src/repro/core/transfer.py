@@ -278,6 +278,22 @@ class EBRSurface(Surface):
             self.tower_inputs(cfg, batch["j_feat"], batch.get("j_gnn")))
         return jnp.sum(m_vec * j_vec, axis=-1)
 
+    @staticmethod
+    def build_index(job_vectors, *, job_ids=None, quantize="per_row",
+                    num_lists: int | None = 0, seed: int = 0,
+                    version: int | None = None):
+        """The serving-side retrieval tier over this surface's job tower
+        output (core.retrieval, DESIGN.md §14): int8 quantized replica +
+        IVF coarse lists; ``search(member_vectors, k, nprobe=...)`` replaces
+        the dense ``m_vec @ j_vec.T`` scan.  ``quantize=None`` /
+        ``num_lists=None`` yield the exact fp32 config, bit-identical to
+        ``retrieval.brute_force_topk`` (the parity oracle)."""
+        from repro.core.retrieval import RetrievalIndex
+        return RetrievalIndex.build(np.asarray(job_vectors, np.float32),
+                                    ids=job_ids, scheme=quantize,
+                                    num_lists=num_lists, seed=seed,
+                                    version=version)
+
 
 def surface_configs(names=None, **overrides) -> dict:
     """Per-surface RankerConfigs with shared overrides applied; jobsearch

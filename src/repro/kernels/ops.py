@@ -23,6 +23,7 @@ from repro.kernels import neighbor_agg as _nagg
 from repro.kernels import ref
 from repro.kernels import sage_attention as _sattn
 from repro.kernels import sage_layer as _slayer
+from repro.kernels import scan_topk as _scan
 from repro.kernels import ssd_scan as _ssd
 
 _IMPL = None  # resolved lazily
@@ -286,6 +287,43 @@ def sage_attention_layer(h_self: jax.Array, q: jax.Array, k: jax.Array,
                                       mask.reshape(-1, f), w_self, b_self,
                                       w_neigh, b_neigh)
     return out.reshape(*lead, h_out)
+
+
+# ------------------------------------------------------- retrieval scan
+
+
+def scan_topk(q_codes: jax.Array, q_scales: jax.Array, c_codes: jax.Array,
+              c_scales: jax.Array, *, k: int, impl=None,
+              block_q: int = 128, block_c: int = 512):
+    """Fused int8 corpus scan + per-query top-k (the EBR retrieval scorer).
+
+    q_codes [nq, d] int8, q_scales [nq], c_codes [N, d] int8, c_scales [N]
+    -> (scores [nq, k] f32, corpus row ids [nq, k] i32), ordered score-
+    descending with ties broken toward the lower row (canonical order —
+    identical across ref/interpret/pallas and the numpy retrieval tier).
+    Requires k <= N.
+    """
+    nq, d = q_codes.shape
+    n = c_codes.shape[0]
+    assert 0 < k <= n, (k, n)
+    qs = q_scales.reshape(-1, 1).astype(jnp.float32)
+    cs = c_scales.reshape(-1, 1).astype(jnp.float32)
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.scan_topk(q_codes, qs, c_codes, cs, k=k)
+    bc = max(min(block_c, n), k)       # a block must hold a full top-k
+    bq = min(block_q, nq)              # tail queries pad up to one block
+    q_p, nq0 = _pad_to(q_codes, 0, bq)
+    qs_p, _ = _pad_to(qs, 0, bq)
+    c_p, _ = _pad_to(c_codes, 0, bc)
+    cs_p, _ = _pad_to(cs, 0, bc)
+    # pad the contraction dim to the 128-lane width (zero codes score zero)
+    q_p, _ = _pad_to(q_p, 1, 128)
+    c_p, _ = _pad_to(c_p, 1, 128)
+    vals, idx = _scan.scan_topk(q_p, qs_p, c_p, cs_p, k=k, valid_n=n,
+                                block_q=min(block_q, q_p.shape[0]),
+                                block_c=bc, interpret=(impl == "interpret"))
+    return vals[:nq0], idx[:nq0]
 
 
 # ------------------------------------------------------------ attention

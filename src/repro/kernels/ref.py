@@ -77,6 +77,31 @@ def sage_attention_layer(h_self: jax.Array, q: jax.Array, k: jax.Array,
     return jax.nn.relu(out)
 
 
+# ------------------------------------------------------------ scan + top-k
+
+
+def scan_topk(q_codes: jax.Array, q_scales: jax.Array, c_codes: jax.Array,
+              c_scales: jax.Array, *, k: int):
+    """Oracle for the fused int8 scan-and-topk kernel
+    (:mod:`repro.kernels.scan_topk`).
+
+    q_codes [nq, d] int8, q_scales [nq, 1], c_codes [N, d] int8,
+    c_scales [N, 1] -> (scores [nq, k] f32, corpus rows [nq, k] i32).
+
+    Bit-identical to the kernel: the int8 dot accumulates EXACTLY in
+    float32 because every partial sum is an integer below 2^24 (enforced
+    by ``retrieval.quantize_int8``'s d <= 1024 bound), the dequantize
+    multiply applies the combined (q_scale * c_scale) in the same order,
+    and ``lax.top_k``'s tie rule (lower index first) is the kernel's
+    canonical score-descending / row-ascending order.
+    """
+    acc = jnp.dot(q_codes.astype(jnp.float32),
+                  c_codes.astype(jnp.float32).T)            # exact integers
+    scores = acc * (q_scales.reshape(-1, 1) * c_scales.reshape(1, -1))
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)
+
+
 # ------------------------------------------------------------ attention
 
 

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: fused int8 corpus scan + running top-k (EBR retrieval).
+
+The retrieval tier's inner loop scores one query block against the whole
+(or an IVF-restricted) quantized corpus and keeps only the k best ids.
+Unfused, that is an int8 matmul materializing [nq, N] scores in HBM
+followed by a top-k pass re-reading them.  This kernel streams the corpus
+through VMEM in [block_c, d] bricks and carries the running per-query
+top-k (values + ids) in the revisited output block, so the [nq, N] score
+matrix never exists: one HBM read of codes/scales, one [nq, k] write.
+
+Grid (nq/bq, N/bc), corpus innermost: the output BlockSpecs ignore the
+corpus index, making out_vals/out_idx accumulators across corpus steps
+(the matmul-k-loop pattern).  Per step:
+
+  1. int8 · int8 dot_general accumulated in int32 on the MXU (exact —
+     d ≤ 1024 keeps |acc| < 2^24, which also makes the ref oracle's
+     float32 stand-in bit-identical);
+  2. dequantize: acc * (q_scale · c_scale), one fp32 multiply per entry;
+  3. merge [bq, k] running top-k with the [bq, bc] block scores by k
+     unrolled select-max passes (k is small; each pass is a VPU
+     max/where sweep over [bq, k+bc]).
+
+Selection order is CANONICAL — score descending, corpus row ascending on
+ties — implemented as max-value then min-id-among-maxima, so the result
+is independent of the block decomposition and bit-identical to the
+numpy/ref paths (asserted in tests/test_retrieval.py).
+
+Brick budget at bq=128, bc=512, d=128: codes 64+16 KB int8, scores +
+merge buffers ~3 fp32 [bq, k+bc] arrays ≈ 1.6 MB — far under the ~16 MB
+VMEM budget; block_c can grow to 2048 before the merge buffers matter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_I32_MAX = 2_147_483_647
+
+
+def _scan_topk_kernel(k, valid_n, q_ref, qs_ref, c_ref, cs_ref,
+                      vals_ref, idx_ref):
+    c_step = pl.program_id(1)
+    bq = q_ref.shape[0]
+    bc = c_ref.shape[0]
+
+    @pl.when(c_step == 0)
+    def _init():
+        vals_ref[...] = jnp.full(vals_ref.shape, -jnp.inf, vals_ref.dtype)
+        idx_ref[...] = jnp.full(idx_ref.shape, _I32_MAX, idx_ref.dtype)
+
+    # int8 x int8 -> int32 on the MXU; exact for d <= 1024 (see module doc)
+    acc = jax.lax.dot_general(q_ref[...], c_ref[...],
+                              dimension_numbers=(((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.int32)   # [bq, bc]
+    scale = qs_ref[...] * cs_ref[...].reshape(1, bc)              # [bq, bc]
+    col = c_step * bc + jax.lax.broadcasted_iota(jnp.int32, (bq, bc), 1)
+    scores = jnp.where(col < valid_n,
+                       acc.astype(jnp.float32) * scale, -jnp.inf)
+
+    vals = jnp.concatenate([vals_ref[...], scores], axis=1)   # [bq, k+bc]
+    idx = jnp.concatenate([idx_ref[...], col], axis=1)
+    top_v, top_i = [], []
+    for _ in range(k):
+        best = jnp.max(vals, axis=1, keepdims=True)               # [bq, 1]
+        # canonical tie-break: lowest corpus row among the maxima
+        win = jnp.min(jnp.where(vals == best, idx, _I32_MAX),
+                      axis=1, keepdims=True)
+        top_v.append(best)
+        top_i.append(win)
+        vals = jnp.where(idx == win, -jnp.inf, vals)
+    vals_ref[...] = jnp.concatenate(top_v, axis=1)
+    idx_ref[...] = jnp.concatenate(top_i, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "valid_n", "block_q",
+                                             "block_c", "interpret"))
+def scan_topk(q_codes: jax.Array, q_scales: jax.Array, c_codes: jax.Array,
+              c_scales: jax.Array, *, k: int, valid_n: int,
+              block_q: int = 128, block_c: int = 512,
+              interpret: bool = False):
+    """q_codes [nq, d] int8, q_scales [nq, 1] f32, c_codes [N, d] int8,
+    c_scales [N, 1] f32 -> (top-k scores [nq, k] f32, corpus rows [nq, k]
+    i32), canonically ordered.  ``valid_n`` <= N marks the real corpus
+    rows (the tail is block padding); requires k <= min(block_c, valid_n).
+    """
+    nq, d = q_codes.shape
+    n = c_codes.shape[0]
+    bq, bc = min(block_q, nq), min(block_c, n)
+    assert nq % bq == 0 and n % bc == 0, (nq, bq, n, bc)
+    assert 0 < k <= min(bc, valid_n), (k, bc, valid_n)
+    grid = (nq // bq, n // bc)
+    kernel = functools.partial(_scan_topk_kernel, k, valid_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, c: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, c: (i, 0)),
+            pl.BlockSpec((bc, d), lambda i, c: (c, 0)),
+            pl.BlockSpec((bc, 1), lambda i, c: (c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, c: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, c: (i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((nq, k), jnp.float32),
+                   jax.ShapeDtypeStruct((nq, k), jnp.int32)],
+        interpret=interpret,
+    )(q_codes, q_scales, c_codes, c_scales)

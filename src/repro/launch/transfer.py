@@ -10,6 +10,10 @@ The full §5–§7 serving loop as one job:
      the jitted multi-surface step sharing one embedding gather (§5.1, §7)
   4. repeat with ``use_gnn=False`` (the A/B control arm) and print the
      GNN-vs-control report: AUC per ranking surface, recall@k for EBR
+  5. stand up the quantized ANN retrieval tier (§14) over the GNN arm's
+     EBR job vectors: assert the exact-search config returns ids
+     bit-identical to the fp32 brute-force oracle, then report the
+     int8+IVF arm's recall against the same positives
 
 The report's EBR row is the acceptance gate: the two-tower head with GNN
 embeddings must beat the feature-only control on recall@k.
@@ -20,7 +24,8 @@ import argparse
 
 import numpy as np
 
-from repro.core.eval import auc, recall_at_k
+from repro.core.eval import (auc, positives_from_edges, recall_at_k,
+                             recall_from_retrieved)
 from repro.core.linksage import LinkSAGETrainer
 from repro.core.transfer import MultiSurfaceTrainer, surface_configs
 from repro.data import GraphGenConfig, generate_job_marketplace_graph
@@ -89,13 +94,11 @@ def fit_surfaces(tables, pairs, labels, *, embed_dim, feat_dim, use_gnn,
     # EBR: genuine retrieval over the full corpus, not pair scoring
     src, dst = eval_truth
     m_vec, j_vec = mst.ebr_vectors(tables)
-    positives = [set() for _ in range(m_vec.shape[0])]
-    for m, j in zip(src, dst):
-        positives[m].add(int(j))
+    positives = positives_from_edges(src, dst, m_vec.shape[0])
     members = np.array([i for i, p in enumerate(positives) if p])
-    report["ebr"] = recall_at_k((m_vec @ j_vec.T)[members],
+    report["ebr"] = recall_at_k(m_vec[members] @ j_vec.T,
                                 [positives[i] for i in members], k=k)
-    return report
+    return report, (m_vec, j_vec)
 
 
 def main(argv=None):
@@ -136,13 +139,15 @@ def main(argv=None):
     pairs, labels, feat_tables = build_surface_datasets(
         graph, truth, num_members=args.members, num_jobs=args.jobs,
         seed=args.seed)
-    m_gnn = lc.store.gather("member", np.arange(args.members), version=version)
-    j_gnn = lc.store.gather("job", np.arange(args.jobs), version=version)
+    # the §14 dense-replica read path: one sorted [N, d] matrix per type
+    # out of the published version (ids are 0..N-1 here by construction)
+    _, m_gnn = lc.store.dense_table("member", version=version)
+    _, j_gnn = lc.store.dense_table("job", version=version)
 
-    report = {}
+    report, vecs = {}, {}
     for arm, tables in (("gnn", dict(feat_tables, m_gnn=m_gnn, j_gnn=j_gnn)),
                         ("control", dict(feat_tables))):
-        report[arm] = fit_surfaces(
+        report[arm], vecs[arm] = fit_surfaces(
             tables, pairs, labels, embed_dim=cfg.embed_dim,
             feat_dim=graph.feat_dim, use_gnn=(arm == "gnn"),
             epochs=args.epochs, seed=args.seed,
@@ -156,6 +161,33 @@ def main(argv=None):
     ebr_ok = report["gnn"]["ebr"] > report["control"]["ebr"]
     print(f"\nEBR acceptance (gnn > control on recall@10): "
           f"{'PASS' if ebr_ok else 'FAIL'}")
+
+    # 5. quantized ANN retrieval tier over the GNN arm's EBR vectors -------
+    from repro.core.retrieval import brute_force_topk
+    from repro.core.transfer import SURFACES
+    m_vec, j_vec = vecs["gnn"]
+    src, dst = truth["engagements"]
+    positives = positives_from_edges(src, dst, m_vec.shape[0])
+    members = np.array([i for i, p in enumerate(positives) if p])
+    queries, pos_sub = m_vec[members], [positives[i] for i in members]
+    index = SURFACES["ebr"].build_index(j_vec, quantize="per_row",
+                                        num_lists=0, seed=args.seed)
+    k = 10
+    oracle_ids, _ = brute_force_topk(queries, j_vec, k)
+    exact_ids, _ = index.search(queries, k, quantized=False)
+    exact_ok = np.array_equal(exact_ids, oracle_ids)
+    oracle_rec = recall_from_retrieved(oracle_ids, pos_sub, k=k)
+    nprobe = max(1, index.num_lists // 4)
+    ann_ids, _ = index.search(queries, k, nprobe=nprobe)
+    ann_rec = recall_from_retrieved(ann_ids, pos_sub, k=k)
+    print(f"\nretrieval tier ({index.num_lists} IVF lists, int8 per_row):")
+    print(f"  exact-search ids bit-identical to fp32 oracle: "
+          f"{'PASS' if exact_ok else 'FAIL'}")
+    print(f"  recall@{k}: oracle {oracle_rec:.4f}  "
+          f"int8+IVF(nprobe={nprobe}) {ann_rec:.4f}  "
+          f"delta {ann_rec - oracle_rec:+.4f}")
+    report["retrieval"] = {"exact_parity": bool(exact_ok),
+                           "oracle_recall": oracle_rec, "ann_recall": ann_rec}
     return report
 
 

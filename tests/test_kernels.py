@@ -371,3 +371,56 @@ def test_ssd_decode_consistent_with_scan():
         ys.append(y)
     np.testing.assert_allclose(jnp.stack(ys, 1), y_scan, rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(S, s_final, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------- fused scan-and-topk
+
+
+def _quantized_pair(nq, n, d, seed=0):
+    from repro.core.retrieval import quantize_int8, quantize_queries
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    q = rng.normal(size=(nq, d)).astype(np.float32)
+    qt = quantize_int8(x)
+    qc, qs = quantize_queries(q, qt)
+    return qc, qs, qt.codes, qt.scales
+
+
+@pytest.mark.parametrize("nq,n,d,k", [(5, 37, 16, 1), (64, 1000, 64, 10),
+                                      (150, 2048, 32, 10), (3, 17, 8, 17),
+                                      (128, 512, 128, 32)])
+def test_scan_topk_interpret_bitwise_matches_ref(nq, n, d, k):
+    """Scores AND ids bit-identical: int8 products accumulate exactly in
+    both int32 (kernel) and fp32 (ref) for d <= 1024, and both ends use
+    the canonical score-desc/row-asc order."""
+    qc, qs, cc, cs = _quantized_pair(nq, n, d, seed=n)
+    v0, i0 = ops.scan_topk(qc, qs, cc, cs, k=min(k, n), impl="ref")
+    v1, i1 = ops.scan_topk(qc, qs, cc, cs, k=min(k, n), impl="interpret")
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_scan_topk_block_decomposition_invariant():
+    """The running-topk merge is a total order, so the result cannot
+    depend on how the corpus is cut into blocks."""
+    qc, qs, cc, cs = _quantized_pair(16, 1000, 32, seed=5)
+    v0, i0 = ops.scan_topk(qc, qs, cc, cs, k=10, impl="interpret",
+                           block_c=128)
+    v1, i1 = ops.scan_topk(qc, qs, cc, cs, k=10, impl="interpret",
+                           block_c=512)
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_scan_topk_tie_break_is_lowest_row():
+    from repro.core.retrieval import quantize_int8, quantize_queries
+    rng = np.random.default_rng(11)
+    base = rng.normal(size=(20, 16)).astype(np.float32)
+    x = np.concatenate([base, base])          # rows i and i+20 identical
+    qt = quantize_int8(x)
+    qc, qs = quantize_queries(rng.normal(size=(6, 16)).astype(np.float32), qt)
+    for impl in ("ref", "interpret"):
+        _, ids = ops.scan_topk(qc, qs, qt.codes, qt.scales, k=2, impl=impl)
+        ids = np.asarray(ids)
+        assert np.all(ids[:, 0] < 20), impl
+        np.testing.assert_array_equal(ids[:, 1], ids[:, 0] + 20)

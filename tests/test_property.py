@@ -232,3 +232,44 @@ def test_sigmoid_ce_nonnegative_and_zero_at_perfect(seed):
     lab = jnp.asarray([1.0, 0.0])
     np.testing.assert_allclose(np.asarray(dec.sigmoid_ce(big, lab)), 0.0,
                                atol=1e-6)
+
+
+@given(n=st.integers(1, 60), d=st.integers(1, 48), seed=st.integers(0, 2**16),
+       scheme=st.sampled_from(["per_row", "per_dim"]),
+       scale_pow=st.integers(-3, 3))
+def test_int8_quantize_error_bounded_by_half_scale(n, d, seed, scheme,
+                                                   scale_pow):
+    """Symmetric int8 round-trip error is at most scale/2 per entry (the
+    rint bound; amax/scale <= 127 exactly, so clipping never bites)."""
+    from repro.core.retrieval import dequantize, quantize_int8
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(n, d)) * 10.0 ** scale_pow).astype(np.float32)
+    qt = quantize_int8(x, scheme)
+    bound = (qt.scales[:, None] if scheme == "per_row"
+             else qt.dim_scales[None, :]) * 0.5
+    assert np.all(np.abs(dequantize(qt) - x) <= bound * (1 + 1e-5) + 1e-30)
+    # determinism: same bits in -> same bits out
+    again = quantize_int8(x.copy(), scheme)
+    assert np.array_equal(qt.codes, again.codes)
+    assert np.array_equal(qt.scales, again.scales)
+
+
+@given(seed=st.integers(0, 2**16), scheme=st.sampled_from(["per_row",
+                                                           "per_dim"]))
+def test_published_quantized_replica_deterministic_across_restore(seed,
+                                                                  scheme):
+    """The §14 version-pinning contract: re-deriving a published version's
+    int8 replica after snapshot/restore reproduces the same bits."""
+    from repro.core.embeddings import EmbeddingStore
+    rng = np.random.default_rng(seed)
+    store = EmbeddingStore("prop")
+    for i in range(rng.integers(1, 12)):
+        store.put_embedding("job", i, rng.normal(size=8).astype(np.float32),
+                            0.0)
+    v = store.publish()
+    _, qt = store.quantized_table("job", version=v, scheme=scheme)
+    restored = EmbeddingStore("prop2")
+    restored.restore(store.snapshot())
+    _, qt2 = restored.quantized_table("job", version=v, scheme=scheme)
+    assert np.array_equal(qt.codes, qt2.codes)
+    assert np.array_equal(qt.scales, qt2.scales)

@@ -1,0 +1,310 @@
+"""Quantized ANN retrieval tier (core/retrieval, DESIGN.md §14): parity
+against the fp32 brute-force oracle, quantization determinism, the
+version-pinned replica contract on EmbeddingStore, and the eval-satellite
+regressions (recall_at_k memory fix, vectorized positives build)."""
+import numpy as np
+import pytest
+
+from repro.core import retrieval as rt
+from repro.core.embeddings import EmbeddingStore
+from repro.core.eval import (positives_from_edges, recall_at_k,
+                             recall_from_retrieved, retrieval_eval)
+
+RNG = np.random.default_rng(7)
+
+
+def _corpus(n=3000, d=24, nq=41, seed=1):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)).astype(np.float32),
+            rng.normal(size=(nq, d)).astype(np.float32))
+
+
+# ------------------------------------------------------------ quantization
+
+
+@pytest.mark.parametrize("scheme", ["per_row", "per_dim"])
+def test_quantize_roundtrip_error_bounded_by_scale(scheme):
+    x = (RNG.normal(size=(200, 32)) * RNG.uniform(0.01, 10, (200, 1))
+         ).astype(np.float32)
+    qt = rt.quantize_int8(x, scheme)
+    err = np.abs(rt.dequantize(qt) - x)
+    if scheme == "per_row":
+        bound = qt.scales[:, None] * 0.5
+    else:
+        bound = np.broadcast_to(qt.dim_scales[None, :] * 0.5, x.shape)
+    assert np.all(err <= bound * (1 + 1e-5) + 1e-7)
+
+
+@pytest.mark.parametrize("scheme", ["per_row", "per_dim"])
+def test_quantize_deterministic_same_bits(scheme):
+    x = RNG.normal(size=(64, 16)).astype(np.float32)
+    a, b = rt.quantize_int8(x, scheme), rt.quantize_int8(x.copy(), scheme)
+    assert np.array_equal(a.codes, b.codes)
+    assert np.array_equal(a.scales, b.scales)
+
+
+def test_quantize_zero_rows_and_immutability():
+    x = np.zeros((4, 8), np.float32)
+    qt = rt.quantize_int8(x)
+    assert np.all(qt.codes == 0) and np.all(qt.scales == 1.0)
+    with pytest.raises(ValueError):
+        qt.codes[0, 0] = 1          # frozen replica
+
+
+def test_quantize_rejects_unsafe_dim():
+    with pytest.raises(AssertionError):
+        rt.quantize_int8(np.zeros((2, rt.MAX_QUANT_DIM + 1), np.float32))
+
+
+# ------------------------------------------------------- oracle bit parity
+
+
+def test_exact_search_bit_identical_to_oracle():
+    x, q = _corpus()
+    oi, ov = rt.brute_force_topk(q, x, 10)
+    idx = rt.RetrievalIndex.build(x, scheme="per_row", num_lists=32)
+    ei, ev = idx.search(q, 10, quantized=False)
+    assert np.array_equal(ei, oi) and np.array_equal(ev, ov)
+
+
+def test_ivf_all_lists_fp32_bit_identical_to_oracle():
+    """Structural parity: the inverted lists partition the corpus and
+    gathered fp32 gemms reproduce the full-matmul elements bit-for-bit,
+    so probing EVERY list must equal brute force exactly."""
+    x, q = _corpus(seed=2)
+    oi, ov = rt.brute_force_topk(q, x, 10)
+    idx = rt.RetrievalIndex.build(x, scheme="per_row", num_lists=32)
+    ai, av = idx.search(q, 10, quantized=False, nprobe=32)
+    assert np.array_equal(ai, oi) and np.array_equal(av, ov)
+
+
+def test_int8_numpy_ref_interpret_bitwise_identical():
+    """The CPU/BLAS fast path and the kernel dispatch path implement the
+    same int8 scoring convention exactly (fp32 accumulation of int8
+    products is exact for d <= 1024)."""
+    x, q = _corpus(n=700, d=32, seed=3)
+    idx = rt.RetrievalIndex.build(x, scheme="per_row")
+    base_i, base_v = idx.search(q, 10, impl="numpy")
+    for impl in ("ref", "interpret"):
+        i2, v2 = idx.search(q, 10, impl=impl)
+        assert np.array_equal(i2, base_i), impl
+        assert np.array_equal(v2, base_v), impl
+
+
+def test_canonical_tie_break_lowest_id():
+    """Duplicate corpus rows score identically; the canonical order (score
+    desc, row asc) must list the lower copy first, on every path."""
+    base = RNG.normal(size=(10, 16)).astype(np.float32)
+    x = np.concatenate([base, base])              # rows i and i+10 identical
+    q = RNG.normal(size=(5, 16)).astype(np.float32)
+    oi, _ = rt.brute_force_topk(q, x, 2)          # top-2 = both copies of the
+    assert np.all(oi[:, 0] < 10)                  # best vector, low row first
+    assert np.array_equal(oi[:, 1], oi[:, 0] + 10)
+    idx = rt.RetrievalIndex.build(x, scheme="per_row", num_lists=4)
+    for kwargs in ({"quantized": False}, {"quantized": False, "nprobe": 4},
+                   {}, {"nprobe": 4}, {"impl": "ref"}, {"refine": 3}):
+        ids, _ = idx.search(q, 2, **kwargs)
+        assert np.all(ids[:, 0] < 10), kwargs
+        assert np.array_equal(ids[:, 1], ids[:, 0] + 10), kwargs
+
+
+def test_refine_recovers_quantization_loss():
+    x, q = _corpus(n=2000, d=16, seed=4)
+    oi, _ = rt.brute_force_topk(q, x, 10)
+    idx = rt.RetrievalIndex.build(x, scheme="per_row", num_lists=16)
+    ri, _ = idx.search(q, 10, nprobe=16, refine=4)   # full coverage
+    assert np.array_equal(np.sort(ri, 1), np.sort(oi, 1))
+
+
+def test_search_pads_when_k_exceeds_corpus():
+    x, q = _corpus(n=4, d=8, nq=6, seed=5)
+    idx = rt.RetrievalIndex.build(x, scheme="per_row", num_lists=2)
+    for kwargs in ({}, {"quantized": False}, {"nprobe": 2}, {"refine": 3}):
+        ids, vals = idx.search(q, 10, **kwargs)
+        assert ids.shape == (6, 10), kwargs
+        assert np.all(ids[:, 4:] == -1) and np.all(vals[:, 4:] == -np.inf)
+        assert np.all(ids[:, :4] >= 0)
+
+
+def test_external_ids_mapping():
+    x, q = _corpus(n=50, d=8, seed=6)
+    ext = np.arange(50, dtype=np.int64) * 7 + 3
+    idx = rt.RetrievalIndex.build(x, ids=ext, scheme="per_row")
+    rows, _ = rt.brute_force_topk(q, x, 5)
+    ids, _ = idx.search(q, 5, quantized=False)
+    assert np.array_equal(ids, ext[rows])
+
+
+# ---------------------------------------------------------------- IVF index
+
+
+def test_build_ivf_deterministic_and_partitions_corpus():
+    x, _ = _corpus(n=500, d=12, seed=8)
+    a = rt.build_ivf(x, 8, seed=3)
+    b = rt.build_ivf(x.copy(), 8, seed=3)
+    assert np.array_equal(a.centroids, b.centroids)
+    assert np.array_equal(a.offsets, b.offsets)
+    assert np.array_equal(a.ids, b.ids)
+    # CSR sanity: every corpus row in exactly one list, ascending per list
+    assert np.array_equal(np.sort(a.ids), np.arange(500))
+    for c in range(8):
+        seg = a.ids[a.offsets[c]:a.offsets[c + 1]]
+        assert np.all(np.diff(seg) > 0) if len(seg) > 1 else True
+
+
+def test_build_ivf_seed_changes_index():
+    x, _ = _corpus(n=500, d=12, seed=8)
+    a, b = rt.build_ivf(x, 8, seed=0), rt.build_ivf(x, 8, seed=1)
+    assert not np.array_equal(a.centroids, b.centroids)
+
+
+# ----------------------------------------- version-pinned replicas (store)
+
+
+def _seeded_store(n=20, d=16, seed=0):
+    rng = np.random.default_rng(seed)
+    store = EmbeddingStore("t")
+    for i in range(n):
+        store.put_embedding("job", i, rng.normal(size=d).astype(np.float32),
+                            0.0)
+    return store
+
+
+def test_quantized_table_version_pinned_and_memoized():
+    store = _seeded_store()
+    v1 = store.publish()
+    ids, qt = store.quantized_table("job", version=v1)
+    assert store.quantized_table("job", version=v1)[1] is qt   # memoized
+    before = qt.codes.copy()
+    # mutate the LIVE table and publish again: v1's replica must not move
+    rng = np.random.default_rng(9)
+    for i in range(20):
+        store.put_embedding("job", i, rng.normal(size=16).astype(np.float32),
+                            1.0)
+    v2 = store.publish()
+    _, qt2 = store.quantized_table("job", version=v2)
+    assert np.array_equal(store.quantized_table("job", version=v1)[1].codes,
+                          before)
+    assert not np.array_equal(qt2.codes, before)
+    with pytest.raises(ValueError):
+        qt.codes[0, 0] = 0                                     # immutable
+
+
+def test_quantized_replica_rederives_bitwise_after_restore():
+    store = _seeded_store(seed=4)
+    v = store.publish()
+    ids1, qt1 = store.quantized_table("job", version=v, scheme="per_dim")
+    snap = store.snapshot()
+    other = EmbeddingStore("r")
+    other.restore(snap)
+    ids2, qt2 = other.quantized_table("job", version=v, scheme="per_dim")
+    assert np.array_equal(ids1, ids2)
+    assert np.array_equal(qt1.codes, qt2.codes)
+    assert np.array_equal(qt1.scales, qt2.scales)
+    assert np.array_equal(qt1.dim_scales, qt2.dim_scales)
+    # restore on the original store drops the memo and re-derives too
+    store.restore(snap)
+    _, qt3 = store.quantized_table("job", version=v, scheme="per_dim")
+    assert qt3 is not qt1 and np.array_equal(qt3.codes, qt1.codes)
+
+
+def test_quantize_on_publish_eager():
+    store = _seeded_store(seed=5)
+    store.quantize_on_publish = (("job", "per_row"),)
+    v = store.publish()
+    assert (v, "job", "per_row") in store._derived
+
+
+def test_dense_table_sorted_and_frozen():
+    store = _seeded_store(seed=6)
+    v = store.publish()
+    ids, mat = store.dense_table("job", version=v)
+    assert np.array_equal(ids, np.arange(20))
+    np.testing.assert_array_equal(
+        mat[7], store.gather("job", [7], version=v)[0])
+    with pytest.raises(ValueError):
+        mat[0, 0] = 0
+
+
+def test_store_retrieval_index_end_to_end():
+    store = _seeded_store(n=60, seed=7)
+    v = store.publish()
+    idx = store.retrieval_index("job", version=v, num_lists=4)
+    assert store.retrieval_index("job", version=v, num_lists=4) is idx
+    q = np.random.default_rng(0).normal(size=(5, 16)).astype(np.float32)
+    _, mat = store.dense_table("job", version=v)
+    oi, _ = rt.brute_force_topk(q, mat, 5)
+    ei, _ = idx.search(q, 5, quantized=False)
+    assert np.array_equal(ei, oi)
+
+
+# -------------------------------------------------------- eval satellites
+
+
+def _recall_at_k_dense_reference(scores, positives, k=10):
+    """The pre-§14 implementation (dense [n, num_jobs] bool membership
+    matrix), kept verbatim as the regression reference."""
+    n, num_jobs = scores.shape
+    topk = np.argpartition(-scores, min(k, num_jobs - 1), axis=1)[:, :k]
+    lens = np.fromiter((len(p) for p in positives), np.int64, n)
+    if not (lens > 0).any():
+        return 0.0
+    rows = np.repeat(np.arange(n), lens)
+    cols = np.fromiter((j for p in positives for j in p), np.int64, lens.sum())
+    ok = (cols >= 0) & (cols < num_jobs)
+    pos_mat = np.zeros((n, num_jobs), bool)
+    pos_mat[rows[ok], cols[ok]] = True
+    hits = int(pos_mat[np.arange(n)[:, None], topk].sum())
+    total = int(np.minimum(lens, k).sum())
+    return hits / max(total, 1)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_recall_at_k_matches_dense_reference(seed):
+    rng = np.random.default_rng(seed)
+    n, j, k = 40, 90, 10
+    scores = rng.normal(size=(n, j)).astype(np.float32)
+    positives = []
+    for _ in range(n):
+        p = set(rng.integers(0, j, rng.integers(0, 25)).tolist())
+        if rng.random() < 0.3:                  # out-of-range ids: count in
+            p |= {int(j + rng.integers(0, 5)), -1}   # denominator, never hit
+        positives.append(p)
+    assert recall_at_k(scores, positives, k=k) == \
+        _recall_at_k_dense_reference(scores, positives, k=k)
+
+
+def test_recall_at_k_empty_positives():
+    scores = RNG.normal(size=(3, 5)).astype(np.float32)
+    assert recall_at_k(scores, [set(), set(), set()], k=2) == 0.0
+
+
+def test_positives_from_edges_matches_loop():
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, 50, 400)
+    dst = rng.integers(0, 200, 400)
+    want = [set() for _ in range(50)]
+    for m, j in zip(src, dst):
+        want[m].add(int(j))
+    assert positives_from_edges(src, dst, 50) == want
+    assert positives_from_edges(np.array([]), np.array([]), 3) == \
+        [set(), set(), set()]
+
+
+def test_retrieval_eval_index_arm_matches_dense_on_exact_config():
+    rng = np.random.default_rng(5)
+    m = rng.normal(size=(30, 12)).astype(np.float32)
+    j = rng.normal(size=(80, 12)).astype(np.float32)
+    src = rng.integers(0, 30, 120)
+    dst = rng.integers(0, 80, 120)
+    base = retrieval_eval(m, j, src, dst, k=10)
+    idx = rt.RetrievalIndex.build(j, scheme=None, num_lists=None)
+    via_index = retrieval_eval(m, j, src, dst, k=10, index=idx)
+    assert via_index == base
+
+
+def test_recall_from_retrieved_ignores_padding():
+    ids = np.array([[3, 1, -1, -1], [0, 2, 5, -1]])
+    positives = [{3, 9}, {5}]
+    # member 0: 1 of min(2, k)=2; member 1: 1 of 1 -> (1 + 1) / 3
+    assert recall_from_retrieved(ids, positives, k=4) == pytest.approx(2 / 3)

@@ -133,10 +133,11 @@ def test_surfaces_train_from_version_pinned_store(trained):
     for arm, use_gnn in (("gnn", True), ("control", False)):
         tables = (dict(feat_tables, m_gnn=m_gnn, j_gnn=j_gnn)
                   if use_gnn else dict(feat_tables))
-        report[arm] = fit_surfaces(tables, pairs, labels,
-                                   embed_dim=cfg.embed_dim,
-                                   feat_dim=g.feat_dim, use_gnn=use_gnn,
-                                   epochs=5, eval_truth=truth["engagements"])
+        report[arm], _ = fit_surfaces(tables, pairs, labels,
+                                      embed_dim=cfg.embed_dim,
+                                      feat_dim=g.feat_dim, use_gnn=use_gnn,
+                                      epochs=5,
+                                      eval_truth=truth["engagements"])
     assert report["gnn"]["ebr"] > report["control"]["ebr"], report
     # the ranking surfaces hold their own against control on average too
     mean_gnn = np.mean([report["gnn"][s] for s in ("taj", "jymbii", "jobsearch")])
