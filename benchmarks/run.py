@@ -27,7 +27,7 @@ def _serving_regression_line(baseline_rows, rows, path: str) -> str:
     parts = []
     for name, _us, derived in rows:
         if (not name.startswith(("serving_", "retrieval_",
-                                 "transfer_retrieval"))
+                                 "transfer_retrieval", "obs_"))
                 or name not in base):
             continue
         cur, old = _parse_derived(derived), base[name]
@@ -41,6 +41,13 @@ def _serving_regression_line(baseline_rows, rows, path: str) -> str:
             d = cur["recall_at_10"] - old["recall_at_10"]
             if d:
                 parts.append(f"{name} {d:+.4f} recall@10")
+        # §15 gate row: absolute delta (the value itself is ~0.1%, so a
+        # relative diff would be noise); tolerant of missing baseline keys
+        # on the first post-merge run (``name not in base`` already skips
+        # rows with no baseline at all)
+        if "disabled_overhead_frac" in cur and "disabled_overhead_frac" in old:
+            d = cur["disabled_overhead_frac"] - old["disabled_overhead_frac"]
+            parts.append(f"{name} {d:+.4%} obs-overhead")
     if not parts:
         return f"serving diff vs {path}: no comparable rows"
     return f"serving diff vs {path}: " + ", ".join(parts)
@@ -82,6 +89,7 @@ def main() -> None:
     from benchmarks.engine_bench import ALL_ENGINE
     from benchmarks.kernels_bench import ALL_KERNELS
     from benchmarks.nearline_bench import ALL_NEARLINE
+    from benchmarks.obs_bench import ALL_OBS
     from benchmarks.resilience_bench import ALL_RESILIENCE
     from benchmarks.retrieval_bench import ALL_RETRIEVAL
     from benchmarks.serving_bench import ALL_SERVING, ALL_SERVING_MESH
@@ -92,13 +100,13 @@ def main() -> None:
     benches = (list(ALL_TABLES) + list(ALL_ENGINE) + list(ALL_KERNELS)
                + list(ALL_CACHE) + list(ALL_NEARLINE) + list(ALL_TRAIN)
                + list(ALL_TRANSFER) + list(ALL_RETRIEVAL) + list(ALL_SERVING)
-               + list(ALL_RESILIENCE))
+               + list(ALL_RESILIENCE) + list(ALL_OBS))
     if args.skip_slow or args.quick:
         benches = [b for b in benches if b.__name__ == "bench_graph_construction"]
         benches += (list(ALL_ENGINE) + list(ALL_KERNELS) + list(ALL_CACHE)
                     + list(ALL_NEARLINE) + list(ALL_TRAIN) + list(ALL_TRANSFER)
                     + list(ALL_RETRIEVAL) + list(ALL_SERVING)
-                    + list(ALL_RESILIENCE))
+                    + list(ALL_RESILIENCE) + list(ALL_OBS))
     if args.mesh:
         benches = list(ALL_SERVING_MESH)
     if args.only:

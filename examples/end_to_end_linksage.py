@@ -40,6 +40,8 @@ def main():
     ap.add_argument("--ranker-epochs", type=int, default=4)
     ap.add_argument("--fanouts", default=None,
                     help="per-hop fanouts, e.g. '10,5' or '8,4,2' (K=3)")
+    ap.add_argument("--trace-out", default="linksage_burst_trace.json",
+                    help="perfetto trace of the serve burst ('' disables)")
     args = ap.parse_args()
     rng = np.random.default_rng(0)
     cfg = CONFIG
@@ -131,8 +133,12 @@ def main():
     # the online tier: shard the graph, coalesce concurrent scoring requests
     # into encoder batches, scatter-gather embeddings across owners
     from repro.core.partition import GraphPartitioner
+    from repro.obs import Tracer, format_freshness, freshness_report, set_tracer
     from repro.serving import (BatchPolicy, LoadConfig, LoadGenerator,
                                ResultCache, ShardedNearline, serve_trace)
+    tracer = Tracer(clock="wall") if args.trace_out else None
+    if tracer is not None:
+        set_tracer(tracer)          # §15: spans observe, bits never change
     part = GraphPartitioner(2, "greedy").fit(graph)
     # feature_cache: per-shard §11 hot-node slabs in front of the feature
     # store (first touch admits; bits never change, only fetch latency)
@@ -162,6 +168,15 @@ def main():
           f" edge cut): {s['completed']} requests in {s['batches']} batches, "
           f"{s['throughput_rps']:.0f} req/s, p95={s['latency_p95_ms']:.0f}ms, "
           f"cache hit rate {router.cache.hit_rate():.0%}")
+
+    # -- 8. freshness report + perfetto trace (§15) -------------------------
+    # how stale is what we just served, and where did the time go?
+    print(format_freshness(freshness_report(cluster)))
+    if tracer is not None:
+        tracer.write(args.trace_out)
+        set_tracer(None)
+        print(f"trace: {len(tracer.spans)} spans -> {args.trace_out} "
+              f"(load in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -41,6 +41,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.graph import NODE_TYPES
+from repro.obs.trace import span as _obs_span
 
 POLICIES = ("clock", "lfu")
 SAMPLING = ("passthrough", "cache_aware")
@@ -384,32 +385,35 @@ class CachedEngine:
         n = flat_t.shape[0]
         if n == 0:
             return np.zeros((*types.shape, d), np.float32)
-        slots = self.cache.lookup(flat_t, flat_i)
-        hit = slots >= 0
-        nh = int(hit.sum())
-        out = np.empty((n, d), np.float32)
-        if nh:
-            hs = slots[hit]
-            out[hit] = self.cache.gather(hs)
-            self.cache.touch(hs)
-        if nh < n:
-            miss = ~hit
-            mt, mi = flat_t[miss], flat_i[miss]
-            rows = self.inner.gather_features(mt, mi)
-            out[miss] = rows
-            # admission over the unique miss keys (first occurrence's row)
-            uniq, first = np.unique(pack_keys(mt, mi), return_index=True)
-            ut, ui = uniq >> _ID_BITS, uniq & _ID_MASK
-            admit = self.cache.note_misses(ut, ui)
-            if admit.any():
-                self.cache.insert(ut[admit], ui[admit], rows[first[admit]])
-        self.cache.hits += nh
-        self.cache.misses += n - nh
-        m = self.metrics
-        if m is not None:
-            m.feature_cache_hits += nh
-            m.feature_cache_misses += n - nh
-            m.feature_cache_evictions = self.cache.evictions
+        with _obs_span("cache.feature_gather") as sp:
+            slots = self.cache.lookup(flat_t, flat_i)
+            hit = slots >= 0
+            nh = int(hit.sum())
+            out = np.empty((n, d), np.float32)
+            if nh:
+                hs = slots[hit]
+                out[hit] = self.cache.gather(hs)
+                self.cache.touch(hs)
+            if nh < n:
+                miss = ~hit
+                mt, mi = flat_t[miss], flat_i[miss]
+                rows = self.inner.gather_features(mt, mi)
+                out[miss] = rows
+                # admission over the unique miss keys (first occurrence's row)
+                uniq, first = np.unique(pack_keys(mt, mi), return_index=True)
+                ut, ui = uniq >> _ID_BITS, uniq & _ID_MASK
+                admit = self.cache.note_misses(ut, ui)
+                if admit.any():
+                    self.cache.insert(ut[admit], ui[admit], rows[first[admit]])
+            self.cache.hits += nh
+            self.cache.misses += n - nh
+            sp.set("rows", n)
+            sp.set("hits", nh)
+            m = self.metrics
+            if m is not None:
+                m.feature_cache_hits += nh
+                m.feature_cache_misses += n - nh
+                m.feature_cache_evictions = self.cache.evictions
         return out.reshape(*types.shape, d)
 
     # ---- write-through invalidation -------------------------------------

@@ -44,6 +44,7 @@ from repro.configs.linksage import GNNConfig
 from repro.core.engine import TileBuilder, bucket_pow2, pad_tile
 from repro.core.graph import NODE_TYPE_ID, NODE_TYPES
 from repro.core.stores import NoSQLStore
+from repro.obs.trace import span as _obs_span
 
 # domain separator for the per-node recompute uniform streams (disjoint from
 # the trainer's (seed, step) and embed_nodes' (seed, 1<<24, chunk) streams)
@@ -80,6 +81,9 @@ class EmbeddingStore(NoSQLStore):
         super().__init__(name)
         self.version = 0                       # last published version
         self._tables: dict[int, dict] = {}     # version -> frozen live table
+        # version -> publish clock (freshness monitors read version lag;
+        # None when the caller published without a clock)
+        self.published_at: dict[int, float | None] = {}
         self._caches: list = []                # attached SlabCaches (§11)
         # derived read replicas of published tables (DESIGN.md §14):
         # (version, node_type, scheme) -> QuantizedTable, and
@@ -103,14 +107,21 @@ class EmbeddingStore(NoSQLStore):
         v = self.version + 1 if version is None else int(version)
         self.put((node_type, int(node_id)), EmbeddingRecord(emb, float(t), v))
 
-    def publish(self) -> int:
+    def publish(self, *, clock: float | None = None) -> int:
         """Freeze the live table as the next version; returns it.  Any
         (node_type, scheme) pairs in ``quantize_on_publish`` get their int8
-        replica derived here, as part of the publish step."""
-        self.version += 1
-        self._tables[self.version] = dict(self._d)   # records are immutable
-        for ntype, scheme in self.quantize_on_publish:
-            self.quantized_table(ntype, version=self.version, scheme=scheme)
+        replica derived here, as part of the publish step.  ``clock`` stamps
+        ``published_at`` for the §15 version-lag freshness monitor."""
+        with _obs_span("store.publish") as sp:
+            self.version += 1
+            self._tables[self.version] = dict(self._d)  # records are immutable
+            self.published_at[self.version] = (
+                float(clock) if clock is not None else None)
+            for ntype, scheme in self.quantize_on_publish:
+                self.quantized_table(ntype, version=self.version,
+                                     scheme=scheme)
+            sp.set("version", self.version)
+            sp.set("records", len(self._d))
         return self.version
 
     # ---- reads ----------------------------------------------------------
@@ -219,12 +230,15 @@ class EmbeddingStore(NoSQLStore):
         state = super().snapshot()
         state["version"] = self.version
         state["tables"] = {v: dict(tab) for v, tab in self._tables.items()}
+        state["published_at"] = dict(self.published_at)
         return state
 
     def restore(self, state: dict) -> None:
         super().restore(state)
         self.version = int(state["version"])
         self._tables = {int(v): dict(tab) for v, tab in state["tables"].items()}
+        self.published_at = {int(v): t for v, t
+                             in state.get("published_at", {}).items()}
         # derived replicas are pure functions of the frozen tables: drop the
         # memo and let them re-derive (bit-identically) on demand
         self._derived = {}
@@ -366,7 +380,14 @@ class RecomputeQueue:
 
 @dataclass
 class LifecycleMetrics:
-    """Recompute-pipeline counters (shared by nearline as NearlineMetrics)."""
+    """Recompute-pipeline counters (shared by nearline as NearlineMetrics).
+
+    High-water-mark policy (DESIGN.md §15): ``queue_depth_peak`` — like
+    every field here — is PROCESS-LOCAL observability state, outside the
+    §12 bits surface.  ``snapshot()/restore()`` neither saves nor resets
+    it (a warm rollback keeps the peak observed so far; a cold restart
+    starts a fresh one), and ``reshard()`` carries each shard's peak
+    unchanged — tests/test_obs.py pins all three."""
     events_processed: int = 0
     batches: int = 0
     nodes_refreshed: int = 0
@@ -646,18 +667,26 @@ class EmbeddingLifecycle:
         from repro.core import encoder as enc
         from repro.core.linksage import _to_jnp
         t0 = _time.perf_counter()
-        tile = self.tile_fn(nodes)
+        with _obs_span("tile.build") as sp:
+            tile = self.tile_fn(nodes)
+            sp.set("rows", len(nodes))
         self.metrics.join_seconds += _time.perf_counter() - t0
         t0 = _time.perf_counter()
         if self.jit_encoder:
             # one compiled executable per power-of-two bucket: steady-state
             # batches never retrace
-            tile = pad_tile(tile, bucket_pow2(len(nodes)))
-            emb = np.asarray(self._encode(self.params, _to_jnp(tile)))
+            with _obs_span("encode.stage") as sp:
+                tile = pad_tile(tile, bucket_pow2(len(nodes)))
+                tj = _to_jnp(tile)
+                sp.set("bucket", bucket_pow2(len(nodes)))
+            with _obs_span("encode.dispatch"):
+                emb = np.asarray(self._encode(self.params, tj))
         else:
-            tile = pad_tile(tile, len(nodes) + (-len(nodes)) % 8)
-            emb = np.asarray(enc.encoder_apply(self.params, self.cfg,
-                                               _to_jnp(tile)))
+            with _obs_span("encode.stage"):
+                tile = pad_tile(tile, len(nodes) + (-len(nodes)) % 8)
+                tj = _to_jnp(tile)
+            with _obs_span("encode.dispatch"):
+                emb = np.asarray(enc.encoder_apply(self.params, self.cfg, tj))
         self.metrics.encoder_seconds += _time.perf_counter() - t0
         self.metrics.batches += 1
         self.metrics.nodes_refreshed += len(nodes)
@@ -679,11 +708,13 @@ class EmbeddingLifecycle:
                 break
             batch = self.queue.pop_batch(room)
             nodes = [k for k, _ in batch]
-            emb = self.encode_nodes(nodes)
-            for r, ((nt, ni), trig) in enumerate(batch):
-                self.store.put_embedding(nt, ni, emb[r], clock,
-                                         version=self.store.version + 1)
-                self.metrics.staleness.append(clock - trig)
+            with _obs_span("drain.batch") as sp:
+                emb = self.encode_nodes(nodes)
+                for r, ((nt, ni), trig) in enumerate(batch):
+                    self.store.put_embedding(nt, ni, emb[r], clock,
+                                             version=self.store.version + 1)
+                    self.metrics.staleness.append(clock - trig)
+                sp.set("nodes", len(nodes))
             total += len(nodes)
         return total
 
@@ -717,7 +748,7 @@ class EmbeddingLifecycle:
                                          version=self.store.version + 1)
         self.queue.clear()
         self.metrics.sweeps += 1
-        return self.store.publish()
+        return self.store.publish(clock=clock)
 
     def pending(self) -> int:
         return len(self.queue)

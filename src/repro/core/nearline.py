@@ -46,6 +46,7 @@ from repro.core.engine import (ComputeGraphBatch, StreamingEngine,
 from repro.core.graph import NODE_TYPE_ID
 from repro.core.stores import (NeighborStore, NoSQLStore,  # noqa: F401
                                RingBuffer)
+from repro.obs.trace import span as _obs_span
 
 # nearline shares the lifecycle's counter set (summary() included)
 NearlineMetrics = LifecycleMetrics
@@ -161,12 +162,14 @@ def poll_and_process(topic: Topic, consumer: str, micro_batch: int,
         events = topic.poll(consumer, micro_batch, upto_time=upto_time)
         if not events:
             break
-        for ev in events:
-            for (ntype, nid, t) in apply_event(ev):
-                mark_dirty(ntype, nid, t)
-        refresh = (clock if clock is not None
-                   else max(ev.time for ev in events) + NEARLINE_LAG_S)
-        drain(refresh)
+        with _obs_span("nearline.batch") as sp:
+            for ev in events:
+                for (ntype, nid, t) in apply_event(ev):
+                    mark_dirty(ntype, nid, t)
+            refresh = (clock if clock is not None
+                       else max(ev.time for ev in events) + NEARLINE_LAG_S)
+            drain(refresh)
+            sp.set("events", len(events))
         total += len(events)
     return total
 

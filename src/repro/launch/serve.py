@@ -75,6 +75,17 @@ def main(argv=None):
     ap.add_argument("--kill-restart", action="store_true",
                     help="crash/warm-restart arm: checkpoint to disk, kill "
                          "mid-burst, restore + replay, assert bit parity")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable §15 span tracing and write a Chrome "
+                         "trace-event JSON (perfetto-loadable) at PATH; "
+                         "also prints the per-stage latency decomposition")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="attach a §15 MetricsRegistry to the cluster and "
+                         "write its to_json() artifact at PATH; also prints "
+                         "the freshness report")
+    ap.add_argument("--trace-clock", choices=("wall", "tick"), default="wall",
+                    help="span clock: wall for perf runs, tick for "
+                         "deterministic traces (the §15 dual-clock rule)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.smoke:
@@ -83,6 +94,17 @@ def main(argv=None):
         args.requests = min(args.requests, 200)
         args.events = min(args.events, 80)
         args.check_parity = True
+
+    # telemetry (§15): both pillars default OFF — the hard contract is that
+    # enabling them never changes bits, only observes
+    tracer = registry = None
+    if args.trace_out:
+        from repro.obs import Tracer, set_tracer
+        tracer = Tracer(clock=args.trace_clock)
+        set_tracer(tracer)
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+        registry = MetricsRegistry()
 
     rng = np.random.default_rng(args.seed)
     cfg = replace(CONFIG, hidden_dim=64, embed_dim=64, fanouts=(8, 4))
@@ -112,6 +134,8 @@ def main(argv=None):
     policy = StalenessPolicy(closure_radius=None)
     cluster = ShardedNearline(cfg, params, part, micro_batch=32,
                               seed=args.seed, policy=policy)
+    if registry is not None:
+        cluster.attach_registry(registry)   # before any events flow
     cluster.bootstrap_from_graph(graph)
     fanout = None
     if args.mesh:
@@ -215,6 +239,21 @@ def main(argv=None):
         print(f"cache: hit_rate={router.cache.hit_rate():.1%} "
               f"size={len(router.cache)} "
               f"invalidations={router.cache.invalidations}")
+
+    # telemetry artifacts (§15) -------------------------------------------
+    if registry is not None:
+        from repro.obs import collect_cluster, format_freshness
+        collect_cluster(registry, cluster, slo_report=report)
+        registry.write(args.metrics_out)
+        print(f"\nmetrics: {len(registry)} series -> {args.metrics_out}")
+        print(format_freshness(cluster.freshness_report()))
+    if tracer is not None:
+        from repro.obs import set_tracer
+        tracer.write(args.trace_out)
+        print(f"\ntrace: {len(tracer.spans)} spans "
+              f"({args.trace_clock} clock) -> {args.trace_out}")
+        print(tracer.format_decomposition())
+        set_tracer(None)
     return report
 
 

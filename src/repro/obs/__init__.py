@@ -1,0 +1,16 @@
+"""Unified telemetry (DESIGN.md §15): metrics registry with deterministic
+log-scale histograms, span tracing with a Chrome trace-event exporter, and
+graph-signal freshness monitors.  Hard contract: telemetry never changes
+bits, and disabled mode (the default) is allocation-free no-op objects."""
+from repro.obs.freshness import (AGE_SPEC, embedding_age_histogram,  # noqa: F401
+                                 format_freshness, freshness_report,
+                                 observe_freshness)
+from repro.obs.metrics import (DEFAULT_SPEC, Counter, Gauge,  # noqa: F401
+                               Histogram, HistogramSpec, MetricsRegistry,
+                               NULL_REGISTRY, TimeSeries, collect_cluster,
+                               mirror_batcher_metrics,
+                               mirror_lifecycle_metrics, mirror_slab_cache,
+                               mirror_slo_report)
+from repro.obs.trace import (NULL_TRACER, Span, TickClock,  # noqa: F401
+                             Tracer, emit, enabled, get_tracer, set_tracer,
+                             span)

@@ -1,0 +1,163 @@
+"""Graph-signal freshness monitors (DESIGN.md §15).
+
+LinkSAGE's operational claim — "up-to-date graph signals in near
+realtime" — becomes a measurable surface here:
+
+  * **embedding-age histogram** over the live :class:`EmbeddingStore`
+    tables (``now − record.time`` per live record);
+  * **dirty-queue depth** and **recompute lag** (``now − earliest pending
+    trigger``) gauges on the lifecycle queues;
+  * **published-version lag**: ``now − published_at`` of the latest frozen
+    version (stores record publish clocks when given);
+  * **event→re-rank lag**: the drain staleness deltas
+    (``refresh_clock − trigger_time``) as a histogram — the paper's
+    freshness curve (p50/p99 seconds from a marketplace event to the
+    re-ranked embedding);
+  * **cache-tier hit rates** (result / feature / embed) as point gauges
+    and, via :class:`~repro.obs.metrics.TimeSeries`, over time.
+
+All functions accept a ``ShardedNearline`` cluster, an
+``EmbeddingLifecycle``, or a ``NearlineInference`` and only READ state —
+freshness monitoring never changes bits.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.obs.metrics import Histogram, HistogramSpec, MetricsRegistry
+
+AGE_SPEC = HistogramSpec(lo=1e-3, hi=1e6, buckets_per_decade=24)
+
+
+def _lifecycles(obj) -> list:
+    """Normalize cluster | lifecycle | nearline-pipeline to lifecycles."""
+    if hasattr(obj, "shards"):                    # ShardedNearline
+        return list(obj.shards)
+    if hasattr(obj, "lifecycle"):                 # NearlineInference
+        return [obj.lifecycle]
+    return [obj]                                  # EmbeddingLifecycle
+
+
+def default_now(obj) -> float:
+    """Latest record time across the live tables (a simulated-clock run has
+    no wall 'now'; ages are relative to the newest write)."""
+    times = [rec.time for lc in _lifecycles(obj)
+             for rec in lc.store._d.values()]
+    return max(times) if times else 0.0
+
+
+def embedding_age_histogram(obj, *, now: float | None = None,
+                            spec: HistogramSpec | None = None) -> Histogram:
+    """Histogram of ``now − computed-at`` over every live record."""
+    lcs = _lifecycles(obj)
+    if now is None:
+        now = default_now(obj)
+    h = Histogram(spec or AGE_SPEC)
+    for lc in lcs:
+        times = np.array([rec.time for rec in lc.store._d.values()])
+        if times.size:
+            h.record_many(now - times)
+    return h
+
+
+def _tier_rates(obj) -> dict:
+    """Per-cache-tier (hits, misses, hit_rate) rollup."""
+
+    def rate(pairs):
+        h = sum(p[0] for p in pairs)
+        m = sum(p[1] for p in pairs)
+        return {"hits": h, "misses": m, "hit_rate": h / max(h + m, 1)}
+
+    tiers = {}
+    if hasattr(obj, "shards"):                    # cluster: real tier lists
+        tiers["result"] = rate(
+            [(obj.retired_cache_hits, obj.retired_cache_misses)]
+            + [(c.metrics.cache_hits, c.metrics.cache_misses)
+               for c in obj.caches])
+        tiers["feature"] = rate([(fc.hits, fc.misses)
+                                 for fc in obj.feature_caches])
+        tiers["embed"] = rate([(ec.hits, ec.misses)
+                               for ec in obj.embed_caches])
+    else:
+        lc = _lifecycles(obj)[0]
+        m = lc.metrics
+        tiers["result"] = rate([(m.cache_hits, m.cache_misses)])
+        tiers["feature"] = rate([(m.feature_cache_hits,
+                                  m.feature_cache_misses)])
+        tiers["embed"] = rate([(m.embed_cache_hits, m.embed_cache_misses)])
+    return tiers
+
+
+def freshness_report(obj, *, now: float | None = None) -> dict:
+    """The one-call freshness surface (see module docstring for fields)."""
+    lcs = _lifecycles(obj)
+    if now is None:
+        now = default_now(obj)
+    age = embedding_age_histogram(obj, now=now)
+    lag = Histogram()
+    for lc in lcs:
+        if lc.metrics.staleness:
+            lag.record_many(np.asarray(lc.metrics.staleness))
+    pending = sum(len(lc.queue) for lc in lcs)
+    triggers = [t for lc in lcs for t in lc.queue._trigger.values()]
+    versions = [lc.store.version for lc in lcs]
+    pub_ages = [now - lc.store.published_at[lc.store.version]
+                for lc in lcs
+                if lc.store.published_at.get(lc.store.version) is not None]
+    return {
+        "now": float(now),
+        "live_records": age.count,
+        "age_p50_s": age.quantile(0.50),
+        "age_p99_s": age.quantile(0.99),
+        "age_max_s": age.vmax if age.count else 0.0,
+        "dirty_queue_depth": pending,
+        "recompute_lag_s": (now - min(triggers)) if triggers else 0.0,
+        "lag_count": lag.count,                     # event→re-rank lag
+        "lag_p50_s": lag.quantile(0.50),
+        "lag_p99_s": lag.quantile(0.99),
+        "published_version": max(versions) if versions else 0,
+        "publish_lag_s": max(pub_ages) if pub_ages else None,
+        "cache_tiers": _tier_rates(obj),
+    }
+
+
+def format_freshness(rep: dict) -> str:
+    tiers = "  ".join(
+        f"{t}={d['hit_rate']:.0%} ({d['hits']}/{d['hits'] + d['misses']})"
+        for t, d in rep["cache_tiers"].items())
+    pub = ("n/a" if rep["publish_lag_s"] is None
+           else f"{rep['publish_lag_s']:.1f}s")
+    return (
+        f"freshness @ t={rep['now']:.1f}s: {rep['live_records']} live "
+        f"embeddings, age p50={rep['age_p50_s']:.2f}s "
+        f"p99={rep['age_p99_s']:.2f}s max={rep['age_max_s']:.2f}s\n"
+        f"  event->re-rank lag: p50={rep['lag_p50_s']:.2f}s "
+        f"p99={rep['lag_p99_s']:.2f}s over {rep['lag_count']} refreshes; "
+        f"dirty queue depth {rep['dirty_queue_depth']}, recompute lag "
+        f"{rep['recompute_lag_s']:.2f}s\n"
+        f"  published v{rep['published_version']} (lag {pub}); "
+        f"cache hit rates: {tiers}")
+
+
+def observe_freshness(reg: MetricsRegistry, obj, *,
+                      now: float | None = None) -> dict:
+    """Publish one freshness observation into the registry: gauges for the
+    point-in-time values, the age histogram, and (t, hit-rate) /
+    (t, queue-depth) time-series samples.  Returns the report."""
+    if now is None:
+        now = default_now(obj)
+    rep = freshness_report(obj, now=now)
+    for k in ("live_records", "age_p50_s", "age_p99_s", "dirty_queue_depth",
+              "recompute_lag_s", "lag_p50_s", "lag_p99_s",
+              "published_version"):
+        reg.gauge(f"freshness.{k}").set(float(rep[k]))
+    age_h = reg.histogram("freshness.embedding_age_s", spec=AGE_SPEC)
+    age_h.restore(Histogram(age_h.spec).snapshot())    # mirror, not sum
+    age_h.merge(embedding_age_histogram(obj, now=now))
+    reg.series("freshness.dirty_queue_depth").append(
+        now, rep["dirty_queue_depth"])
+    for tier, d in rep["cache_tiers"].items():
+        reg.gauge("freshness.cache_hit_rate", tier=tier).set(d["hit_rate"])
+        reg.series("freshness.cache_hit_rate", tier=tier).append(
+            now, d["hit_rate"])
+    return rep

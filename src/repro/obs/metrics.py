@@ -1,0 +1,442 @@
+"""Metrics registry: labeled counters, gauges, time series, and
+deterministic fixed-bucket log-scale histograms (DESIGN.md §15).
+
+The registry is the ONE rollup path for the serving tier's counters.  The
+ad-hoc dataclasses (``LifecycleMetrics``, ``BatcherMetrics``, slab-cache
+counters, ``SLOReport``) stay where they are — they are hot-path-local and
+cheap — and :func:`collect_cluster` mirrors them into one registry whose
+``to_json()`` is the telemetry artifact.  Counters incremented *natively*
+on the registry (the cluster's ``attach_registry`` lane) ride the §12
+resilience state surface: ``snapshot()/restore()`` round-trips every
+metric, so a warm rollback + replay re-derives monotonic counts with no
+double-counting (tests/test_obs.py pins this).
+
+Histogram semantics (the documented quantile contract):
+
+* Buckets are FIXED log-scale edges ``edge[i] = lo * base**i`` with
+  ``base = 10 ** (1 / buckets_per_decade)`` — independent of the data, so
+  two histograms with the same spec merge bucket-for-bucket and a
+  snapshot/restore is exact.
+* ``record(v)`` with ``v < lo`` lands in the underflow bucket, ``v >= hi``
+  in the overflow bucket; exact running min/max/sum/count are kept.
+* ``quantile(q)`` locates the nearest-rank order statistic (index
+  ``ceil(q * (n - 1))``) in the cumulative counts and returns the
+  geometric midpoint of its bucket, clamped into ``[min, max]``.  The
+  estimate is therefore within a factor of ``sqrt(base)`` of that order
+  statistic — with the default 24 buckets/decade, a relative error bound
+  of ~4.9%.  Against ``np.percentile`` (any interpolation) the estimate is
+  bracketed by ``[percentile(q, 'lower') / sqrt(base),
+  percentile(q, 'higher') * sqrt(base)]`` — the regression gate
+  tests/test_obs.py asserts.
+
+Telemetry never changes bits: nothing in this module touches RNG state or
+the data path, and the Null* objects make disabled mode allocation-free.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class HistogramSpec:
+    """Fixed log-scale bucket layout: ``buckets_per_decade`` buckets per
+    power of ten over ``[lo, hi)``, plus underflow/overflow."""
+    lo: float = 1e-6               # seconds: 1 µs
+    hi: float = 1e5                # ~28 h — covers age histograms too
+    buckets_per_decade: int = 24   # base 10**(1/24): ~4.9% quantile error
+
+    @property
+    def base(self) -> float:
+        return 10.0 ** (1.0 / self.buckets_per_decade)
+
+    @property
+    def num_buckets(self) -> int:
+        return int(round(np.log10(self.hi / self.lo)
+                         * self.buckets_per_decade))
+
+
+DEFAULT_SPEC = HistogramSpec()
+
+
+class Histogram:
+    """Deterministic fixed-bucket log-scale histogram (module docstring has
+    the quantile contract)."""
+
+    def __init__(self, spec: HistogramSpec | None = None):
+        self.spec = spec or DEFAULT_SPEC
+        n = self.spec.num_buckets
+        # counts[0] = underflow (< lo), counts[1:n+1] = log buckets,
+        # counts[n+1] = overflow (>= hi)
+        self.counts = np.zeros(n + 2, np.int64)
+        self.count = 0
+        self.sum = 0.0
+        self.vmin = float("inf")
+        self.vmax = float("-inf")
+        self._lnb = np.log(self.spec.base)
+
+    def _bucket_of(self, v: np.ndarray) -> np.ndarray:
+        s = self.spec
+        n = s.num_buckets
+        v = np.asarray(v, np.float64)
+        idx = np.zeros(v.shape, np.int64)
+        in_range = (v >= s.lo) & (v < s.hi)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            k = np.floor(np.log(np.maximum(v, s.lo) / s.lo) / self._lnb)
+        idx[in_range] = 1 + np.clip(k[in_range], 0, n - 1).astype(np.int64)
+        idx[v >= s.hi] = n + 1
+        return idx
+
+    def record(self, v: float) -> None:
+        self.record_many(np.asarray([v], np.float64))
+
+    def record_many(self, values) -> None:
+        v = np.asarray(values, np.float64).reshape(-1)
+        if v.size == 0:
+            return
+        np.add.at(self.counts, self._bucket_of(v), 1)
+        self.count += int(v.size)
+        self.sum += float(v.sum())
+        self.vmin = min(self.vmin, float(v.min()))
+        self.vmax = max(self.vmax, float(v.max()))
+
+    def edges(self) -> np.ndarray:
+        """The documented bucket edges: ``lo * base**i`` for the in-range
+        buckets (len = num_buckets + 1)."""
+        s = self.spec
+        return s.lo * s.base ** np.arange(s.num_buckets + 1)
+
+    def quantile(self, q: float) -> float:
+        """Nearest-rank bucket quantile (contract in module docstring);
+        0.0 on an empty histogram."""
+        if self.count == 0:
+            return 0.0
+        k = int(np.ceil(q * (self.count - 1)))     # order statistic index
+        k = min(max(k, 0), self.count - 1)
+        cum = np.cumsum(self.counts)
+        b = int(np.searchsorted(cum, k + 1, side="left"))
+        n = self.spec.num_buckets
+        if b == 0:                                  # underflow bucket
+            est = self.vmin
+        elif b == n + 1:                            # overflow bucket
+            est = self.vmax
+        else:
+            e_lo = self.spec.lo * self.spec.base ** (b - 1)
+            est = e_lo * np.sqrt(self.spec.base)    # geometric midpoint
+        return float(min(max(est, self.vmin), self.vmax))
+
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def merge(self, other: "Histogram") -> None:
+        assert self.spec == other.spec, "cannot merge different specs"
+        self.counts += other.counts
+        self.count += other.count
+        self.sum += other.sum
+        self.vmin = min(self.vmin, other.vmin)
+        self.vmax = max(self.vmax, other.vmax)
+
+    # ---- checkpoint (rides the §12 state surface) -----------------------
+    def snapshot(self) -> dict:
+        return {"spec": (self.spec.lo, self.spec.hi,
+                         self.spec.buckets_per_decade),
+                "counts": self.counts.copy(), "count": self.count,
+                "sum": self.sum, "vmin": self.vmin, "vmax": self.vmax}
+
+    def restore(self, state: dict) -> None:
+        lo, hi, bpd = state["spec"]
+        self.spec = HistogramSpec(lo, hi, int(bpd))
+        self._lnb = np.log(self.spec.base)
+        self.counts = np.array(state["counts"], np.int64)
+        self.count = int(state["count"])
+        self.sum = float(state["sum"])
+        self.vmin = float(state["vmin"])
+        self.vmax = float(state["vmax"])
+
+    def to_dict(self) -> dict:
+        nz = np.nonzero(self.counts)[0]
+        return {"count": self.count, "sum": self.sum,
+                "min": self.vmin if self.count else 0.0,
+                "max": self.vmax if self.count else 0.0,
+                "mean": self.mean(),
+                "p50": self.quantile(0.50), "p95": self.quantile(0.95),
+                "p99": self.quantile(0.99),
+                "spec": {"lo": self.spec.lo, "hi": self.spec.hi,
+                         "buckets_per_decade": self.spec.buckets_per_decade},
+                # sparse encoding: only occupied buckets
+                "buckets": {int(i): int(self.counts[i]) for i in nz}}
+
+
+class Counter:
+    """Monotonic counter.  ``inc`` is the native lane; mirrors use Gauges."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-observed value (mirrored dataclass counters land here)."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class TimeSeries:
+    """Append-only (t, value) samples — the hit-rate-over-time lane."""
+    __slots__ = ("samples",)
+
+    def __init__(self):
+        self.samples: list = []
+
+    def append(self, t: float, v: float) -> None:
+        self.samples.append((float(t), float(v)))
+
+
+# ---- disabled mode: shared no-op singletons, zero per-event allocation --
+
+class _NullMetric:
+    __slots__ = ()
+
+    def inc(self, n: int = 1) -> None:
+        pass
+
+    def set(self, v: float) -> None:
+        pass
+
+    def record(self, v: float) -> None:
+        pass
+
+    def record_many(self, values) -> None:
+        pass
+
+    def append(self, t: float, v: float) -> None:
+        pass
+
+
+NULL_METRIC = _NullMetric()
+
+
+class NullRegistry:
+    """Disabled-mode registry: every accessor returns the ONE shared no-op
+    metric — no dict lookups, no allocation on any hot path."""
+    __slots__ = ()
+    enabled = False
+
+    def counter(self, name: str, **labels):
+        return NULL_METRIC
+
+    def gauge(self, name: str, **labels):
+        return NULL_METRIC
+
+    def histogram(self, name: str, spec=None, **labels):
+        return NULL_METRIC
+
+    def series(self, name: str, **labels):
+        return NULL_METRIC
+
+
+NULL_REGISTRY = NullRegistry()
+
+_KINDS = ("counters", "gauges", "histograms", "series")
+
+
+class MetricsRegistry:
+    """Labeled metric registry.  Accessors are get-or-create and return the
+    live metric object — hot paths hold the handle and pay zero lookups
+    per event.  Keys are ``name{k=v,...}`` with labels sorted."""
+    enabled = True
+
+    def __init__(self):
+        self._m: dict = {k: {} for k in _KINDS}
+
+    @staticmethod
+    def _key(name: str, labels: dict) -> str:
+        if not labels:
+            return name
+        inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+        return f"{name}{{{inner}}}"
+
+    def _get(self, kind: str, name: str, labels: dict, factory):
+        key = self._key(name, labels)
+        m = self._m[kind].get(key)
+        if m is None:
+            m = self._m[kind][key] = factory()
+        return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counters", name, labels, Counter)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauges", name, labels, Gauge)
+
+    def histogram(self, name: str, spec: HistogramSpec | None = None,
+                  **labels) -> Histogram:
+        return self._get("histograms", name, labels, lambda: Histogram(spec))
+
+    def series(self, name: str, **labels) -> TimeSeries:
+        return self._get("series", name, labels, TimeSeries)
+
+    def names(self, kind: str | None = None) -> list:
+        if kind is not None:
+            return sorted(self._m[kind])
+        return sorted(k for d in self._m.values() for k in d)
+
+    def __len__(self) -> int:
+        return sum(len(d) for d in self._m.values())
+
+    # ---- checkpoint (rides the §12 state surface) -----------------------
+    def snapshot(self) -> dict:
+        return {
+            "counters": {k: c.value for k, c in self._m["counters"].items()},
+            "gauges": {k: g.value for k, g in self._m["gauges"].items()},
+            "histograms": {k: h.snapshot()
+                           for k, h in self._m["histograms"].items()},
+            "series": {k: list(s.samples)
+                       for k, s in self._m["series"].items()},
+        }
+
+    def restore(self, state: dict) -> None:
+        """Restore IN PLACE: metric objects already handed out stay live
+        (the cluster's counter handles keep working after a warm rollback)."""
+        self._prune(state)
+        for k, v in state["counters"].items():
+            self.counter_by_key(k).value = int(v)
+        for k, v in state["gauges"].items():
+            self.gauge_by_key(k).value = float(v)
+        for k, st in state["histograms"].items():
+            h = self._m["histograms"].get(k)
+            if h is None:
+                h = self._m["histograms"][k] = Histogram()
+            h.restore(st)
+        for k, samples in state["series"].items():
+            s = self._m["series"].get(k)
+            if s is None:
+                s = self._m["series"][k] = TimeSeries()
+            s.samples = [tuple(x) for x in samples]
+
+    def _prune(self, state: dict) -> None:
+        # metrics born after the checkpoint reset to zero-state rather than
+        # surviving a rollback they predate
+        for kind in _KINDS:
+            for k in list(self._m[kind]):
+                if k not in state[kind]:
+                    m = self._m[kind][k]
+                    if isinstance(m, Counter):
+                        m.value = 0
+                    elif isinstance(m, Gauge):
+                        m.value = 0.0
+                    elif isinstance(m, Histogram):
+                        fresh = Histogram(m.spec)
+                        m.restore(fresh.snapshot())
+                    else:
+                        m.samples = []
+
+    def counter_by_key(self, key: str) -> Counter:
+        m = self._m["counters"].get(key)
+        if m is None:
+            m = self._m["counters"][key] = Counter()
+        return m
+
+    def gauge_by_key(self, key: str) -> Gauge:
+        m = self._m["gauges"].get(key)
+        if m is None:
+            m = self._m["gauges"][key] = Gauge()
+        return m
+
+    # ---- artifact -------------------------------------------------------
+    def to_json(self) -> dict:
+        """The telemetry artifact (§6 artifact index): plain-JSON view of
+        every metric, histograms with their quantiles + sparse buckets."""
+        return {
+            "counters": {k: c.value for k, c in self._m["counters"].items()},
+            "gauges": {k: g.value for k, g in self._m["gauges"].items()},
+            "histograms": {k: h.to_dict()
+                           for k, h in self._m["histograms"].items()},
+            "series": {k: s.samples for k, s in self._m["series"].items()},
+        }
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2)
+
+
+# ---- the ONE rollup path: mirror the ad-hoc dataclasses -----------------
+
+_SKIP_FIELDS = ("staleness", "occupancy", "latencies_s")
+
+
+def _mirror_fields(reg: MetricsRegistry, prefix: str, obj, **labels) -> None:
+    """Mirror every scalar field of a metrics dataclass into gauges.
+    Mirrors are last-observed copies (idempotent — re-collecting never
+    double-counts), which is why they are gauges, not counters."""
+    for k, v in vars(obj).items():
+        if k.startswith("_") or k in _SKIP_FIELDS:
+            continue
+        if isinstance(v, (bool, int, float, np.integer, np.floating)):
+            reg.gauge(f"{prefix}.{k}", **labels).set(float(v))
+
+
+def mirror_lifecycle_metrics(reg: MetricsRegistry, m, **labels) -> None:
+    """LifecycleMetrics → gauges + the staleness (event→re-rank lag)
+    histogram."""
+    _mirror_fields(reg, "lifecycle", m, **labels)
+    if m.staleness:
+        h = reg.histogram("lifecycle.staleness_s", **labels)
+        h.restore(Histogram(h.spec).snapshot())    # rebuild: mirror, not sum
+        h.record_many(np.asarray(m.staleness))
+
+
+def mirror_batcher_metrics(reg: MetricsRegistry, bm, **labels) -> None:
+    _mirror_fields(reg, "batcher", bm, **labels)
+    if bm.occupancy:
+        reg.gauge("batcher.occupancy_mean", **labels).set(
+            float(np.mean(bm.occupancy)))
+
+
+def mirror_slab_cache(reg: MetricsRegistry, cache, **labels) -> None:
+    """SlabCache counters → gauges under ``cache.*`` with a tier label."""
+    for k in ("hits", "misses", "evictions", "inserts", "invalidations"):
+        reg.gauge(f"cache.{k}", **labels).set(float(getattr(cache, k, 0)))
+    reg.gauge("cache.hit_rate", **labels).set(float(cache.hit_rate()))
+
+
+def mirror_slo_report(reg: MetricsRegistry, report, **labels) -> None:
+    _mirror_fields(reg, "slo", report, **labels)
+
+
+def collect_cluster(reg: MetricsRegistry, cluster, *, slo_report=None,
+                    now: float | None = None) -> MetricsRegistry:
+    """THE rollup: one call mirrors a :class:`ShardedNearline` cluster's
+    whole counter surface (aggregate + per-shard lifecycle metrics, every
+    cache tier, retired-batcher overload counters, an optional SLO report)
+    and the freshness gauges into ``reg``.  Safe to call repeatedly —
+    mirrors overwrite, they never accumulate."""
+    from repro.obs.freshness import observe_freshness
+    mirror_lifecycle_metrics(reg, cluster.aggregate_metrics(), scope="cluster")
+    for p, lc in enumerate(cluster.shards):
+        mirror_lifecycle_metrics(reg, lc.metrics, shard=str(p))
+    for p, fc in enumerate(cluster.feature_caches):
+        mirror_slab_cache(reg, fc, tier="feature", shard=str(p))
+    for p, ec in enumerate(cluster.embed_caches):
+        mirror_slab_cache(reg, ec, tier="embed", shard=str(p))
+    for i, rc in enumerate(cluster.caches):
+        reg.gauge("cache.hits", tier="result", idx=str(i)).set(
+            rc.metrics.cache_hits)
+        reg.gauge("cache.misses", tier="result", idx=str(i)).set(
+            rc.metrics.cache_misses)
+        reg.gauge("cache.hit_rate", tier="result", idx=str(i)).set(
+            rc.hit_rate())
+    if slo_report is not None:
+        mirror_slo_report(reg, slo_report, scope="cluster")
+    observe_freshness(reg, cluster, now=now)
+    return reg

@@ -1,0 +1,252 @@
+"""Span tracing over the serve path, with a Chrome trace-event exporter
+(DESIGN.md §15).
+
+Span taxonomy (the instrumented request path, in flow order):
+
+  ``router.cache_lookup``   ResultCache probe loop
+  ``batcher.queue_wait``    per-request queue wait (sim-clock track)
+  ``nearline.batch``        one poll→apply→dirty→drain micro-batch
+  ``drain.batch``           one lifecycle recompute micro-batch
+  ``tile.build``            K-hop TileBuilder / tile_fn
+  ``cache.feature_gather``  tier-1 slab gather inside the tile build
+  ``encode.stage``          host→device staging (``_to_jnp``)
+  ``encode.dispatch``       the bucketed jitted encoder call
+  ``mesh.block_encode``     one shard_map block dispatch (§13)
+  ``mesh.exchange``         the all_to_all miss exchange (§13)
+  ``router.exchange``       host-sequential per-owner miss loop (oracle arm)
+  ``router.score_batch``    full scatter-gather scoring call
+  ``store.publish``         version freeze
+  ``serve.batch``           one served batch on the sim-clock track
+
+Dual-clock rule: a tracer owns ONE clock for code spans — wall
+(``time.perf_counter``) for perf runs, or the deterministic
+:class:`TickClock` for tests/CI, which advances a fixed tick per reading
+so span trees and durations are a pure function of control flow.
+Simulated-time measurements (queue wait, batch service — the load
+generator's event clock, i.e. the nearline batch timeline) enter via
+:meth:`Tracer.emit` with EXPLICIT timestamps and render on a separate
+``pid`` in the Chrome export, so the two timelines never mix on one track.
+
+Never-changes-bits contract: spans only *read* clocks and attach
+attributes — no RNG, no data-path branching.  Disabled mode
+(:data:`NULL_TRACER`, the module default) hands every call the one shared
+``_NullSpan``/no-op — zero per-event allocation, so instrumented code
+paths cost a function call when telemetry is off (obs_bench bounds this
+at <2% of the nearline hot path).
+"""
+from __future__ import annotations
+
+import json
+import time as _time
+
+import numpy as np
+
+
+class _NullSpan:
+    """The shared disabled-mode span: context-manager no-op, no state."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, key, value):
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class NullTracer:
+    __slots__ = ()
+    enabled = False
+
+    def span(self, name: str):
+        return _NULL_SPAN
+
+    def emit(self, name: str, t0: float, t1: float, *, track: str = "sim",
+             **attrs) -> None:
+        pass
+
+
+NULL_TRACER = NullTracer()
+
+
+class TickClock:
+    """Deterministic clock: every reading advances one fixed tick, so span
+    durations count clock *readings* between start and finish — a pure
+    function of control flow, identical across runs (the dual-clock rule's
+    test/CI arm)."""
+    __slots__ = ("t", "tick_s")
+    kind = "tick"
+
+    def __init__(self, tick_s: float = 1e-3):
+        self.t = 0.0
+        self.tick_s = float(tick_s)
+
+    def __call__(self) -> float:
+        self.t += self.tick_s
+        return self.t
+
+
+class Span:
+    """One finished-or-open span.  ``track`` picks the Chrome-export pid:
+    "code" = tracer-clock spans, "sim" = explicit simulated-time spans."""
+    __slots__ = ("name", "t0", "t1", "span_id", "parent_id", "attrs",
+                 "track", "_tracer")
+
+    def __init__(self, tracer, name, t0, span_id, parent_id, track="code"):
+        self._tracer = tracer
+        self.name = name
+        self.t0 = t0
+        self.t1 = t0
+        self.span_id = span_id
+        self.parent_id = parent_id
+        self.attrs = None
+        self.track = track
+
+    def set(self, key, value) -> None:
+        if self.attrs is None:
+            self.attrs = {}
+        self.attrs[key] = value
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self._tracer._finish(self)
+        return False
+
+
+class Tracer:
+    """Parented span collection over ONE clock (wall | tick | callable)."""
+    enabled = True
+
+    def __init__(self, clock="wall", *, tick_s: float = 1e-3):
+        if clock == "wall":
+            self.clock, self.clock_kind = _time.perf_counter, "wall"
+        elif clock == "tick":
+            self.clock, self.clock_kind = TickClock(tick_s), "tick"
+        elif callable(clock):
+            self.clock = clock
+            self.clock_kind = getattr(clock, "kind", "custom")
+        else:
+            raise ValueError(f"unknown clock {clock!r}")
+        self.spans: list[Span] = []
+        self._stack: list[int] = []          # open span ids (parenting)
+        self._next_id = 1
+
+    def span(self, name: str) -> Span:
+        sid = self._next_id
+        self._next_id += 1
+        parent = self._stack[-1] if self._stack else 0
+        s = Span(self, name, self.clock(), sid, parent)
+        self._stack.append(sid)
+        return s
+
+    def _finish(self, s: Span) -> None:
+        s.t1 = self.clock()
+        if self._stack and self._stack[-1] == s.span_id:
+            self._stack.pop()
+        self.spans.append(s)
+
+    def emit(self, name: str, t0: float, t1: float, *, track: str = "sim",
+             **attrs) -> None:
+        """Record a span with EXPLICIT timestamps (the simulated-time lane:
+        queue waits, served batches).  Not parented — sim spans live on
+        their own timeline/track."""
+        sid = self._next_id
+        self._next_id += 1
+        s = Span(self, name, float(t0), sid, 0, track=track)
+        s.t1 = float(t1)
+        if attrs:
+            s.attrs = dict(attrs)
+        self.spans.append(s)
+
+    # ---- Chrome trace-event export (perfetto-loadable) ------------------
+    def to_chrome(self) -> dict:
+        """``{"traceEvents": [...]}`` with "X" (complete) events, ts/dur in
+        µs.  pid 0 = code spans on the tracer clock, pid 1 = simulated-time
+        spans — chrome://tracing and ui.perfetto.dev load it directly."""
+        evs = [
+            {"ph": "M", "name": "process_name", "pid": 0, "tid": 0,
+             "args": {"name": f"serve path ({self.clock_kind} clock)"}},
+            {"ph": "M", "name": "process_name", "pid": 1, "tid": 0,
+             "args": {"name": "simulated time (batch clock)"}},
+        ]
+        for s in self.spans:
+            ev = {"name": s.name, "cat": s.track, "ph": "X",
+                  "ts": s.t0 * 1e6, "dur": max(s.t1 - s.t0, 0.0) * 1e6,
+                  "pid": 0 if s.track == "code" else 1, "tid": 0,
+                  "args": {"id": s.span_id, "parent": s.parent_id}}
+            if s.attrs:
+                ev["args"].update(s.attrs)
+            evs.append(ev)
+        return {"traceEvents": evs, "displayTimeUnit": "ms"}
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+
+    # ---- per-stage latency decomposition --------------------------------
+    def decomposition(self) -> dict:
+        """Per-span-name summary: count / total / mean / p50 / p99 (seconds),
+        quantiles through the shared Histogram helper."""
+        from repro.obs.metrics import Histogram
+        groups: dict = {}
+        for s in self.spans:
+            groups.setdefault(s.name, []).append(s.t1 - s.t0)
+        out = {}
+        for name, durs in groups.items():
+            h = Histogram()
+            h.record_many(np.asarray(durs))
+            out[name] = {"count": len(durs), "total_s": float(np.sum(durs)),
+                         "mean_s": float(np.mean(durs)),
+                         "p50_s": h.quantile(0.50),
+                         "p99_s": h.quantile(0.99)}
+        return out
+
+    def format_decomposition(self) -> str:
+        """The latency-decomposition table, widest stages first."""
+        rows = sorted(self.decomposition().items(),
+                      key=lambda kv: -kv[1]["total_s"])
+        lines = [f"{'stage':<24} {'count':>7} {'total_ms':>10} "
+                 f"{'mean_ms':>9} {'p50_ms':>9} {'p99_ms':>9}"]
+        for name, d in rows:
+            lines.append(
+                f"{name:<24} {d['count']:>7} {d['total_s'] * 1e3:>10.2f} "
+                f"{d['mean_s'] * 1e3:>9.3f} {d['p50_s'] * 1e3:>9.3f} "
+                f"{d['p99_s'] * 1e3:>9.3f}")
+        return "\n".join(lines)
+
+
+# ---- module-level tracer (the instrumentation call surface) -------------
+
+_TRACER = NULL_TRACER
+
+
+def get_tracer():
+    return _TRACER
+
+
+def set_tracer(tracer) -> None:
+    """Install ``tracer`` as the process tracer (None → disabled)."""
+    global _TRACER
+    _TRACER = tracer if tracer is not None else NULL_TRACER
+
+
+def enabled() -> bool:
+    return _TRACER.enabled
+
+
+def span(name: str):
+    """The ONE hot-path entry point: ``with span("tile.build") as sp:``.
+    Disabled mode returns the shared null span — no allocation."""
+    return _TRACER.span(name)
+
+
+def emit(name: str, t0: float, t1: float, *, track: str = "sim",
+         **attrs) -> None:
+    _TRACER.emit(name, t0, t1, track=track, **attrs)

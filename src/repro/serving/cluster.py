@@ -85,6 +85,10 @@ class ShardedNearline:
         self.shed_queue_full = 0
         self.shed_deadline = 0
         self.requests_degraded = 0
+        # §15 native-counter lane: an attached MetricsRegistry rides the
+        # snapshot/restore surface below, so its monotonic counters
+        # re-derive consistently under rollback + replay
+        self.obs_registry = None
         for p in range(partitioner.num_shards):
             view, lc = self._make_shard(p)
             self.views.append(view)
@@ -157,6 +161,40 @@ class ShardedNearline:
             ev, put_feature=self._put_feature, add_edge=self._add_edge,
             register=self._register)
 
+    # ---- telemetry (DESIGN.md §15) --------------------------------------
+    def attach_registry(self, registry) -> None:
+        """Wire a :class:`~repro.obs.metrics.MetricsRegistry` into the event
+        path: events/dirtied-keys/refresh counters increment natively as the
+        cluster processes, and the event→re-rank lag histogram records every
+        drain's staleness delta.  The registry state rides ``snapshot()``/
+        ``restore()``, so a §12 rollback rewinds the counters WITH the data
+        and the replay re-increments them exactly once (no double-count) —
+        warm and cold restarts converge to the uninterrupted run's counts."""
+        self.obs_registry = registry
+        self._obs_events = registry.counter("serving.events_processed")
+        self._obs_dirty = registry.counter("serving.keys_dirtied")
+        self._obs_refreshes = registry.counter("serving.drain_refreshes")
+        self._obs_lag = registry.histogram("serving.event_to_rerank_lag_s")
+        # harvest cursor per shard into metrics.staleness — process-local
+        # (deliberately NOT snapshotted: the staleness lists only grow, so
+        # after a warm rollback the cursor still points at the replay
+        # boundary, and a cold restart starts both at zero)
+        self._obs_seen = [len(lc.metrics.staleness) for lc in self.shards]
+
+    def _obs_harvest(self) -> None:
+        for p, lc in enumerate(self.shards):
+            st = lc.metrics.staleness
+            new = len(st) - self._obs_seen[p]
+            if new > 0:
+                self._obs_lag.record_many(np.asarray(st[self._obs_seen[p]:]))
+                self._obs_refreshes.inc(new)
+                self._obs_seen[p] = len(st)
+
+    def freshness_report(self, *, now: float | None = None) -> dict:
+        """The §15 freshness surface over this cluster's live stores."""
+        from repro.obs.freshness import freshness_report
+        return freshness_report(self, now=now)
+
     def mark_dirty(self, node_type: str, node_id: int, t: float) -> int:
         """Closure over the shared reverse index, each key routed to its
         owner shard's queue; attached ResultCaches drop the dirty keys.
@@ -179,6 +217,8 @@ class ShardedNearline:
             for ec in self.embed_caches:
                 for nt, ni in full:
                     ec.invalidate(NODE_TYPE_ID[nt], ni)
+        if self.obs_registry is not None:
+            self._obs_dirty.inc(len(keys))
         return len(keys)
 
     # ---- the serving loop ------------------------------------------------
@@ -202,8 +242,12 @@ class ShardedNearline:
         per-shard loop.  Bits are identical either way (per-node
         deterministic recomputes; §13 parity gate)."""
         if self.mesh_fanout is not None:
-            return self.mesh_fanout.drain(clock=clock, max_nodes=max_nodes)
-        return self.drain_host(clock=clock, max_nodes=max_nodes)
+            n = self.mesh_fanout.drain(clock=clock, max_nodes=max_nodes)
+        else:
+            n = self.drain_host(clock=clock, max_nodes=max_nodes)
+        if self.obs_registry is not None:
+            self._obs_harvest()
+        return n
 
     def drain_host(self, *, clock: float = 0.0,
                    max_nodes: int | None = None) -> int:
@@ -223,6 +267,8 @@ class ShardedNearline:
             lambda refresh: self.drain(clock=refresh),
             upto_time=upto_time, max_batches=max_batches, clock=clock)
         self.events_processed += total
+        if self.obs_registry is not None and total:
+            self._obs_events.inc(total)
         return total
 
     def publish_version(self, *, clock: float = 0.0) -> int:
@@ -271,6 +317,10 @@ class ShardedNearline:
             "events_processed": self.events_processed,
             "feature_caches": [fc.snapshot() for fc in self.feature_caches],
             "embed_caches": [ec.snapshot() for ec in self.embed_caches],
+            # §15: an attached registry's counters rewind WITH the data, so
+            # rollback + replay re-derives them without double-counting
+            "obs_registry": (self.obs_registry.snapshot()
+                             if self.obs_registry is not None else None),
         }
 
     def restore(self, state: dict) -> None:
@@ -291,6 +341,9 @@ class ShardedNearline:
             fc.restore(st)
         for ec, st in zip(self.embed_caches, state["embed_caches"]):
             ec.restore(st)
+        reg_state = state.get("obs_registry")
+        if reg_state is not None and self.obs_registry is not None:
+            self.obs_registry.restore(reg_state)
 
     # ---- elastic resharding (DESIGN.md §12, leg (b)) --------------------
     def add_shard(self) -> int:
@@ -303,6 +356,8 @@ class ShardedNearline:
         lc.store.version = self.shards[0].store.version
         self.views.append(view)
         self.shards.append(lc)
+        if self.obs_registry is not None:
+            self._obs_seen.append(0)
         return q
 
     def reshard(self, moves: dict) -> dict:

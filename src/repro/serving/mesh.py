@@ -47,6 +47,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import encoder as enc
 from repro.core.engine import bucket_pow2, pad_tile, zero_like_tile
+from repro.obs.trace import span as _obs_span
 from repro.parallel import gnn_param_pspecs, gnn_tile_block_pspecs, shards_mesh
 
 
@@ -118,7 +119,10 @@ class MeshFanout:
         host rows.  All tiles must share the same (bucketed) batch size."""
         assert self.on_mesh and len(tiles) == self.num_shards
         self.block_rounds += 1
-        return np.asarray(self._encode_block(self._params, self._put_block(tiles)))
+        with _obs_span("mesh.block_encode") as sp:
+            sp.set("shards", self.num_shards)
+            return np.asarray(
+                self._encode_block(self._params, self._put_block(tiles)))
 
     def encode_block_host(self, tiles) -> np.ndarray:
         """The sequential oracle arm of :meth:`encode_block`: the same P
@@ -205,16 +209,20 @@ class MeshFanout:
         if not keys:
             return {}
         if not self.on_mesh:
-            out: dict = {}
-            by_shard: dict = {}
-            for key in keys:
-                by_shard.setdefault(cluster.partitioner.shard_of(*key),
-                                    []).append(key)
-            for p, shard_keys in sorted(by_shard.items()):
-                emb = cluster.shards[p].encode_nodes(shard_keys)
-                for r, key in enumerate(shard_keys):
-                    out[key] = emb[r]
-            return out
+            # the host-sequential oracle arm wears the router.exchange span:
+            # same stage, same place in the span tree, different executor
+            with _obs_span("router.exchange") as sp:
+                sp.set("keys", len(keys))
+                out: dict = {}
+                by_shard: dict = {}
+                for key in keys:
+                    by_shard.setdefault(cluster.partitioner.shard_of(*key),
+                                        []).append(key)
+                for p, shard_keys in sorted(by_shard.items()):
+                    emb = cluster.shards[p].encode_nodes(shard_keys)
+                    for r, key in enumerate(shard_keys):
+                        out[key] = emb[r]
+                return out
         Pn = self.num_shards
         self.exchange_rounds += 1
         tids = np.array([NODE_TYPE_ID[t] for t, _ in keys], np.int64)
@@ -252,8 +260,11 @@ class MeshFanout:
             if tiles[p] is None:
                 tiles[p] = zero_like_tile(proto, Pn * K)
         t0 = _time.perf_counter()
-        exchanged = np.asarray(
-            self._exchange_block(self._params, self._put_block(tiles)))
+        with _obs_span("mesh.exchange") as sp:
+            sp.set("keys", len(keys))
+            sp.set("bucket", K)
+            exchanged = np.asarray(
+                self._exchange_block(self._params, self._put_block(tiles)))
         enc_s = _time.perf_counter() - t0
         active = [p for p in range(Pn)
                   if any(groups[r][p] for r in range(Pn))]

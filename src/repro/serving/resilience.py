@@ -91,7 +91,7 @@ def load_cluster_checkpoint(directory: str, step: int | None = None) -> dict:
 
 def restore_cluster(state: dict, *, cfg, params, topic=None,
                     jit_encoder: bool = True, feature_cache=None,
-                    embed_cache=None) -> ShardedNearline:
+                    embed_cache=None, registry=None) -> ShardedNearline:
     """Cold-start a cluster FROM a snapshot: shape (P, fanouts, policy,
     micro-batch, seed) comes from the snapshot's own config record, the
     ownership map from the partitioner snapshot, and all mutable state from
@@ -100,7 +100,10 @@ def restore_cluster(state: dict, *, cfg, params, topic=None,
     durable ``topic`` to resume consumption — the restored offset makes the
     next ``process()`` replay exactly the post-checkpoint suffix.  Cache
     specs must match the crashed cluster's for the slab warm-start to
-    apply."""
+    apply.  ``registry`` (a §15 MetricsRegistry) attaches BEFORE the
+    restore, so a snapshot taken with telemetry enabled re-seeds the new
+    registry's counters at the checkpoint values — the replayed suffix then
+    increments them to exactly the uninterrupted run's counts."""
     c = state["config"]
     radius, max_stale, type_order = c["policy"]
     cluster = ShardedNearline(
@@ -114,6 +117,8 @@ def restore_cluster(state: dict, *, cfg, params, topic=None,
         embed_cache=embed_cache)
     if topic is not None:
         cluster.topic = topic
+    if registry is not None:
+        cluster.attach_registry(registry)
     cluster.restore(state)
     return cluster
 

@@ -24,6 +24,7 @@ from collections import OrderedDict
 import numpy as np
 
 from repro.core.embeddings import LifecycleMetrics
+from repro.obs.trace import span as _obs_span
 
 
 class ResultCache:
@@ -121,13 +122,16 @@ class Router:
         recompute of the misses through the shard's bucketed encoder."""
         out: dict = {}
         misses: list = []
-        for key in keys:
-            emb = (self.cache.get(key, version=self._inflight_version(key))
-                   if self.cache is not None else None)
-            if emb is None:
-                misses.append(key)
-            else:
-                out[key] = emb
+        with _obs_span("router.cache_lookup") as sp:
+            for key in keys:
+                emb = (self.cache.get(key, version=self._inflight_version(key))
+                       if self.cache is not None else None)
+                if emb is None:
+                    misses.append(key)
+                else:
+                    out[key] = emb
+            sp.set("keys", len(out) + len(misses))
+            sp.set("hits", len(out))
         if self.mesh is not None:
             resolved = self.mesh.resolve(misses)
             for key in misses:
@@ -138,17 +142,19 @@ class Router:
             return out
         # host-sequential oracle arm: group by owner, one bucketed encode
         # per owner shard, scatter back into request order
-        by_shard: dict = {}
-        for key in misses:
-            by_shard.setdefault(self.cluster.partitioner.shard_of(*key),
-                                []).append(key)
-        for p, shard_keys in sorted(by_shard.items()):
-            emb = self.cluster.shards[p].encode_nodes(shard_keys)
-            for r, key in enumerate(shard_keys):
-                out[key] = emb[r]
-                if self.cache is not None:
-                    self.cache.put(key, emb[r],
-                                   version=self._inflight_version(key))
+        with _obs_span("router.exchange") as sp:
+            sp.set("keys", len(misses))
+            by_shard: dict = {}
+            for key in misses:
+                by_shard.setdefault(self.cluster.partitioner.shard_of(*key),
+                                    []).append(key)
+            for p, shard_keys in sorted(by_shard.items()):
+                emb = self.cluster.shards[p].encode_nodes(shard_keys)
+                for r, key in enumerate(shard_keys):
+                    out[key] = emb[r]
+                    if self.cache is not None:
+                        self.cache.put(key, emb[r],
+                                       version=self._inflight_version(key))
         return out
 
     def resolve_stale(self, keys) -> dict:
@@ -179,20 +185,22 @@ class Router:
         needed by BOTH a fresh and a degraded request is resolved fresh
         (the fresh requester's contract wins, and fresher never hurts the
         degraded one)."""
-        fresh_keys: dict = {}
-        stale_keys: dict = {}
-        for req in requests:
-            sink = stale_keys if req.degraded else fresh_keys
-            for key in req.keys():
-                sink[key] = None
-        self.degraded_requests += sum(1 for r in requests if r.degraded)
-        emb = self.resolve_embeddings(list(fresh_keys))
-        stale_only = [k for k in stale_keys if k not in emb]
-        if stale_only:
-            emb.update(self.resolve_stale(stale_only))
-        scores = []
-        for req in requests:
-            m = emb[("member", int(req.member_id))]
-            J = np.stack([emb[("job", int(j))] for j in req.job_ids])
-            scores.append(J @ m)
+        with _obs_span("router.score_batch") as sp:
+            fresh_keys: dict = {}
+            stale_keys: dict = {}
+            for req in requests:
+                sink = stale_keys if req.degraded else fresh_keys
+                for key in req.keys():
+                    sink[key] = None
+            self.degraded_requests += sum(1 for r in requests if r.degraded)
+            emb = self.resolve_embeddings(list(fresh_keys))
+            stale_only = [k for k in stale_keys if k not in emb]
+            if stale_only:
+                emb.update(self.resolve_stale(stale_only))
+            scores = []
+            for req in requests:
+                m = emb[("member", int(req.member_id))]
+                J = np.stack([emb[("job", int(j))] for j in req.job_ids])
+                scores.append(J @ m)
+            sp.set("requests", len(requests))
         return scores

@@ -1,0 +1,447 @@
+"""Unified telemetry (DESIGN.md §15): histogram quantile contract, the
+metrics registry on the §12 state surface, span tracing determinism, the
+never-changes-bits serve-path gate, high-water-mark policy pins, and the
+freshness monitors."""
+import json
+
+import jax
+import numpy as np
+import pytest
+from dataclasses import replace
+
+from repro.configs.linksage import smoke as gnn_smoke
+from repro.core import encoder as enc
+from repro.core.embeddings import StalenessPolicy, tables_bitwise_equal
+from repro.core.nearline import Event, NearlineInference
+from repro.core.partition import GraphPartitioner
+from repro.data import (GraphGenConfig, generate_job_marketplace_graph,
+                        marketplace_event_stream)
+from repro.obs import (DEFAULT_SPEC, Histogram, HistogramSpec,
+                       MetricsRegistry, Tracer, collect_cluster,
+                       format_freshness, freshness_report, set_tracer)
+from repro.obs import trace as obs_trace
+from repro.serving import (BatchPolicy, DynamicBatcher, FaultInjector,
+                           LoadConfig, LoadGenerator, MeshFanout, ResultCache,
+                           Router, ScoreRequest, ShardedNearline,
+                           load_cluster_checkpoint, restore_cluster,
+                           run_with_faults, serve_trace, simulate_open_loop,
+                           split_shard)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g, truth = generate_job_marketplace_graph(
+        GraphGenConfig(num_members=120, num_jobs=40, seed=5))
+    cfg = replace(gnn_smoke(), feat_dim=g.feat_dim)
+    params = enc.encoder_init(jax.random.PRNGKey(0), cfg)
+    return g, cfg, params
+
+
+@pytest.fixture(autouse=True)
+def _tracer_off():
+    """Every test starts and ends with the process tracer disabled."""
+    set_tracer(None)
+    yield
+    set_tracer(None)
+
+
+def _events(g, rng, n=40):
+    return marketplace_event_stream(g, rng, n, job_every=12,
+                                    attrs=("title", "skill"))
+
+
+def _cluster(g, cfg, params, P, *, seed=13):
+    cl = ShardedNearline(cfg, params, GraphPartitioner(P, "hash"),
+                        micro_batch=8, seed=seed,
+                        policy=StalenessPolicy(closure_radius=None))
+    cl.bootstrap_from_graph(g)
+    return cl
+
+
+# ------------------------------------------------- histogram contract
+
+
+def _bracket(vals, q, spec=DEFAULT_SPEC):
+    """The documented bound: [percentile(q,'lower')/sqrt(base),
+    percentile(q,'higher')*sqrt(base)]."""
+    rb = np.sqrt(spec.base)
+    lo = np.percentile(vals, q * 100, method="lower") / rb
+    hi = np.percentile(vals, q * 100, method="higher") * rb
+    return lo, hi
+
+
+@pytest.mark.parametrize("q", [0.5, 0.95, 0.99])
+def test_histogram_quantile_brackets_np_percentile(q):
+    vals = np.random.default_rng(0).lognormal(mean=-6.0, sigma=2.0, size=3000)
+    h = Histogram()
+    h.record_many(vals)
+    lo, hi = _bracket(vals, q)
+    est = h.quantile(q)
+    assert lo <= est <= hi, (q, lo, est, hi)
+    assert vals.min() <= est <= vals.max()      # clamped to exact min/max
+
+
+def test_histogram_edges_and_spec():
+    h = Histogram()
+    e = h.edges()
+    assert e[0] == DEFAULT_SPEC.lo
+    assert np.allclose(e[1:] / e[:-1], DEFAULT_SPEC.base)
+    assert len(e) == DEFAULT_SPEC.num_buckets + 1
+    assert np.isclose(e[-1], DEFAULT_SPEC.hi)
+
+
+def test_histogram_under_overflow_and_empty():
+    h = Histogram(HistogramSpec(lo=1e-3, hi=1e3, buckets_per_decade=8))
+    assert h.quantile(0.5) == 0.0               # empty
+    h.record(1e-9)                              # underflow
+    h.record(1e9)                               # overflow
+    assert h.count == 2
+    assert h.quantile(0.0) == 1e-9              # exact vmin
+    assert h.quantile(1.0) == 1e9               # exact vmax
+
+
+def test_histogram_snapshot_restore_and_merge():
+    rng = np.random.default_rng(1)
+    a, b = rng.exponential(0.01, 500), rng.exponential(0.1, 500)
+    h1, h2, whole = Histogram(), Histogram(), Histogram()
+    h1.record_many(a)
+    h2.record_many(b)
+    whole.record_many(np.concatenate([a, b]))
+    h1.merge(h2)
+    assert np.array_equal(h1.counts, whole.counts)
+    assert h1.quantile(0.95) == whole.quantile(0.95)
+    h3 = Histogram()
+    h3.restore(h1.snapshot())
+    assert np.array_equal(h3.counts, h1.counts)
+    assert (h3.count, h3.sum, h3.vmin, h3.vmax) == (
+        h1.count, h1.sum, h1.vmin, h1.vmax)
+
+
+# ------------------------------------------------- registry
+
+
+def test_registry_labels_handles_and_artifact(tmp_path):
+    reg = MetricsRegistry()
+    c0 = reg.counter("serving.events", shard="0")
+    c1 = reg.counter("serving.events", shard="1")
+    assert c0 is not c1
+    assert reg.counter("serving.events", shard="0") is c0   # get-or-create
+    c0.inc(5)
+    reg.gauge("freshness.age_p50_s").set(1.5)
+    reg.histogram("lag").record_many([0.01, 0.02])
+    reg.series("hit_rate", tier="result").append(1.0, 0.5)
+    art = reg.to_json()
+    assert art["counters"]["serving.events{shard=0}"] == 5
+    assert art["histograms"]["lag"]["count"] == 2
+    p = tmp_path / "metrics.json"
+    reg.write(str(p))
+    assert json.loads(p.read_text())["gauges"]["freshness.age_p50_s"] == 1.5
+
+
+def test_registry_restore_in_place_and_prune():
+    reg = MetricsRegistry()
+    c = reg.counter("events")
+    c.inc(5)
+    snap = reg.snapshot()
+    c.inc(10)
+    late = reg.counter("born.after.checkpoint")
+    late.inc(3)
+    reg.restore(snap)
+    assert c.value == 5                 # the handed-out handle stays live
+    assert late.value == 0              # post-checkpoint metric pruned
+
+
+# ------------------------------------------------- tracer
+
+
+def test_tracer_parenting_and_chrome_schema():
+    tr = Tracer(clock="tick")
+    with tr.span("outer") as outer:
+        with tr.span("inner") as inner:
+            inner.set("rows", 3)
+    tr.emit("batcher.queue_wait", 1.0, 2.5, requests=4)
+    chrome = tr.to_chrome()
+    evs = [e for e in chrome["traceEvents"] if e["ph"] == "X"]
+    by_name = {e["name"]: e for e in evs}
+    assert by_name["inner"]["args"]["parent"] == outer.span_id
+    assert by_name["inner"]["args"]["rows"] == 3
+    assert by_name["outer"]["args"]["parent"] == 0
+    # sim-track spans render on pid 1, code spans on pid 0
+    assert by_name["batcher.queue_wait"]["pid"] == 1
+    assert by_name["outer"]["pid"] == 0
+    assert by_name["batcher.queue_wait"]["dur"] == pytest.approx(1.5e6)
+    for e in evs:
+        assert {"name", "ph", "ts", "dur", "pid", "tid"} <= e.keys()
+
+
+def test_tick_clock_traces_are_deterministic():
+    def program(tr):
+        with tr.span("a"):
+            with tr.span("b"):
+                pass
+        with tr.span("c"):
+            pass
+
+    t1, t2 = Tracer(clock="tick"), Tracer(clock="tick")
+    program(t1)
+    program(t2)
+    assert json.dumps(t1.to_chrome()) == json.dumps(t2.to_chrome())
+    d = t1.decomposition()
+    assert d["a"]["count"] == 1 and d["b"]["count"] == 1
+    assert "stage" in t1.format_decomposition()
+
+
+def test_null_tracer_is_shared_noop():
+    set_tracer(None)
+    s1 = obs_trace.span("x")
+    s2 = obs_trace.span("y")
+    assert s1 is s2                     # the ONE shared null span
+    with s1 as sp:
+        sp.set("k", 1)                  # all no-ops
+    assert not obs_trace.enabled()
+
+
+# ------------------------------------------------- satellite (a): SLOReport
+
+
+class _FixedRouter:
+    def score_batch(self, requests):
+        return np.zeros((len(requests), 1))
+
+
+def test_slo_report_quantiles_match_percentile_within_bucket_resolution():
+    reqs = [ScoreRequest(time=i * 0.01, member_id=i, job_ids=(0,))
+            for i in range(64)]
+    batcher = DynamicBatcher(BatchPolicy(max_batch=4, max_wait_s=0.005))
+    rep = simulate_open_loop(_FixedRouter(), batcher, reqs, slo_ms=50.0,
+                             service_s=0.02)
+    lat = np.asarray(rep.latencies_s)
+    assert len(lat) == 64               # raw latencies stay exact
+    for q, got_ms in ((0.50, rep.latency_p50_ms), (0.95, rep.latency_p95_ms),
+                      (0.99, rep.latency_p99_ms)):
+        lo, hi = _bracket(lat, q)
+        assert lo * 1e3 <= got_ms <= hi * 1e3, (q, got_ms)
+    assert rep.latency_p99_ms >= rep.latency_p95_ms >= rep.latency_p50_ms
+
+
+# ------------------------------------------------- satellite (b): peak policy
+
+
+def test_queue_depth_peak_survives_snapshot_restore(setup):
+    """§15 policy pin: high-water marks are process-local observability
+    state — snapshot() does not save them, restore() does not reset them."""
+    g, cfg, params = setup
+    nl = NearlineInference(cfg, params, micro_batch=8, seed=13)
+    nl.bootstrap_from_graph(g)
+    for ev in _events(g, np.random.default_rng(3)):
+        nl.topic.publish(ev)
+    nl.process()
+    peak = nl.lifecycle.metrics.queue_depth_peak
+    assert peak > 0
+    snap = nl.lifecycle.snapshot()
+    assert "metrics" not in snap        # peaks are NOT on the bits surface
+    nl.lifecycle.restore(snap)
+    assert nl.lifecycle.metrics.queue_depth_peak == peak   # warm: kept
+
+
+def test_batcher_peak_survives_snapshot_restore():
+    b = DynamicBatcher(BatchPolicy(max_batch=8))
+    for i in range(3):
+        b.submit(ScoreRequest(time=float(i) * 1e-4, member_id=i, job_ids=(0,)))
+    assert b.metrics.queue_depth_peak == 3
+    b.restore(b.snapshot())
+    assert b.metrics.queue_depth_peak == 3     # restore only rebuilds queue
+    assert len(b) == 3
+
+
+def test_reshard_carries_peaks(setup):
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    for ev in _events(g, np.random.default_rng(4)):
+        cl.topic.publish(ev)
+    cl.process()
+    before = [lc.metrics.queue_depth_peak for lc in cl.shards]
+    assert max(before) > 0
+    split_shard(cl, 0)
+    after = [lc.metrics.queue_depth_peak for lc in cl.shards[:2]]
+    # never reset by a reshard; migration may only raise them
+    assert all(a >= b for a, b in zip(after, before))
+
+
+# ------------------------------------------------- satellite (c): registry
+# counters across warm rollback and cold restart
+
+
+def _counter_state(reg):
+    js = reg.to_json()
+    return (js["counters"],
+            js["histograms"]["serving.event_to_rerank_lag_s"]["count"],
+            js["histograms"]["serving.event_to_rerank_lag_s"]["buckets"])
+
+
+def test_registry_counters_no_double_count_across_faults(setup, tmp_path):
+    g, cfg, params = setup
+    events = _events(g, np.random.default_rng(7), n=32)
+
+    # golden arm: uninterrupted
+    gold = _cluster(g, cfg, params, 2)
+    reg_gold = MetricsRegistry()
+    gold.attach_registry(reg_gold)
+    for ev in events:
+        gold.topic.publish(ev)
+    gold.process()
+
+    # warm arm: kills + rollback + replay, same registry throughout
+    warm = _cluster(g, cfg, params, 2)
+    reg_warm = MetricsRegistry()
+    warm.attach_registry(reg_warm)
+    for ev in events:
+        warm.topic.publish(ev)
+    st = run_with_faults(warm, injector=FaultInjector(kill_at=(1, 4)),
+                         checkpoint_every=2)
+    assert st["kills"] == 2 and st["replayed"] > 0
+    assert _counter_state(reg_warm) == _counter_state(reg_gold)
+    assert tables_bitwise_equal(gold.live_embeddings(),
+                                warm.live_embeddings())
+
+    # cold arm: a fresh cluster + FRESH registry restore the mid-stream
+    # disk checkpoint (which re-seeds the counters) and replay the suffix
+    crash = _cluster(g, cfg, params, 2)
+    reg_crash = MetricsRegistry()
+    crash.attach_registry(reg_crash)
+    for ev in events:
+        crash.topic.publish(ev)
+    run_with_faults(crash, injector=FaultInjector(kill_at=(2,)),
+                    checkpoint_every=2, directory=str(tmp_path))
+    reg_cold = MetricsRegistry()
+    cold = restore_cluster(load_cluster_checkpoint(str(tmp_path)),
+                           cfg=cfg, params=params, topic=crash.topic,
+                           registry=reg_cold)
+    cold.process()
+    assert _counter_state(reg_cold) == _counter_state(reg_gold)
+    assert tables_bitwise_equal(gold.live_embeddings(),
+                                cold.live_embeddings())
+
+
+# ------------------------------------------------- the §15 acceptance gate:
+# telemetry never changes bits on the serve path
+
+
+def _serve_arm(g, cfg, params, P, *, instrument, mesh=False):
+    if instrument:
+        tracer = Tracer(clock="tick")
+        set_tracer(tracer)
+        reg = MetricsRegistry()
+    try:
+        cl = _cluster(g, cfg, params, P)
+        if instrument:
+            cl.attach_registry(reg)
+        fanout = None
+        if mesh:
+            fanout = MeshFanout(cl)
+            cl.attach_mesh(fanout)
+        for ev in _events(g, np.random.default_rng(11)):
+            cl.topic.publish(ev)
+        cl.process()
+        reqs = LoadGenerator(
+            LoadConfig(rate_hz=400.0, num_requests=48, candidates=4, seed=3),
+            num_members=120, num_jobs=40).requests()
+        report, _, router = serve_trace(
+            cl, reqs, policy=BatchPolicy(max_batch=8, max_wait_s=0.01),
+            cache=ResultCache(128), service_s=0.004, mesh=fanout)
+        probe = [("member", 3), ("job", 7), ("member", 55), ("job", 0)]
+        resolved = Router(cl, mesh=fanout).resolve_embeddings(probe)
+        live = cl.live_embeddings()
+    finally:
+        if instrument:
+            set_tracer(None)
+    spans = tracer.spans if instrument else []
+    return live, resolved, report.latencies_s, spans
+
+
+@pytest.mark.parametrize("P,mesh", [(1, False), (2, False), (4, False),
+                                    (2, True)])
+def test_telemetry_never_changes_bits_on_serve_path(setup, P, mesh):
+    g, cfg, params = setup
+    live0, res0, lat0, _ = _serve_arm(g, cfg, params, P, instrument=False,
+                                      mesh=mesh)
+    live1, res1, lat1, spans = _serve_arm(g, cfg, params, P, instrument=True,
+                                          mesh=mesh)
+    assert tables_bitwise_equal(live0, live1)
+    assert lat0 == lat1
+    for k in res0:
+        assert np.array_equal(res0[k], res1[k])
+    names = {s.name for s in spans}
+    assert {"batcher.queue_wait", "tile.build", "encode.stage",
+            "encode.dispatch", "drain.batch", "nearline.batch",
+            "router.score_batch", "serve.batch"} <= names
+    # the exchange stage is present in BOTH arms (§13 oracle naming)
+    assert "router.exchange" in names or "mesh.exchange" in names
+
+
+# ------------------------------------------------- freshness + rollup
+
+
+def test_freshness_report_fields_and_format(setup):
+    g, cfg, params = setup
+    nl = NearlineInference(cfg, params, micro_batch=8, seed=13)
+    nl.bootstrap_from_graph(g)
+    for ev in _events(g, np.random.default_rng(9)):
+        nl.topic.publish(ev)
+    nl.process()
+    nl.lifecycle.publish_version(clock=100.0)
+    rep = freshness_report(nl, now=110.0)
+    assert rep["live_records"] > 0
+    assert rep["dirty_queue_depth"] == 0         # full-drain regime
+    assert rep["lag_count"] > 0                  # event→re-rank samples
+    assert 0 <= rep["lag_p50_s"] <= rep["lag_p99_s"] or rep["lag_count"] == 0
+    assert rep["published_version"] >= 1
+    assert rep["publish_lag_s"] == pytest.approx(10.0)
+    assert set(rep["cache_tiers"]) == {"result", "feature", "embed"}
+    txt = format_freshness(rep)
+    assert "event->re-rank lag" in txt and "published v" in txt
+
+
+def test_dirty_queue_and_recompute_lag_visible_before_drain(setup):
+    g, cfg, params = setup
+    nl = NearlineInference(cfg, params, micro_batch=8, seed=13)
+    nl.bootstrap_from_graph(g)
+    nl.topic.publish(Event(time=5.0, kind="engagement",
+                           payload={"member_id": 3, "job_id": 7}))
+    nl.ingest()                                   # dirty, not yet drained
+    rep = freshness_report(nl, now=8.0)
+    assert rep["dirty_queue_depth"] > 0
+    assert rep["recompute_lag_s"] == pytest.approx(3.0)
+
+
+def test_collect_cluster_rollup_is_idempotent(setup):
+    g, cfg, params = setup
+    cl = _cluster(g, cfg, params, 2)
+    for ev in _events(g, np.random.default_rng(10)):
+        cl.topic.publish(ev)
+    cl.process()
+    report, _, _ = serve_trace(
+        cl, [ScoreRequest(time=0.0, member_id=1, job_ids=(2, 3))],
+        service_s=0.001)
+    reg = MetricsRegistry()
+    collect_cluster(reg, cl, slo_report=report)
+
+    def point_in_time(r):
+        js = {k: v for k, v in r.to_json().items() if k != "series"}
+        return json.dumps(js, sort_keys=True)
+
+    first = point_in_time(reg)
+    n_samples = len(reg.series("freshness.dirty_queue_depth").samples)
+    collect_cluster(reg, cl, slo_report=report)
+    # mirrors (gauges/histograms) overwrite; only time SERIES accumulate
+    assert point_in_time(reg) == first
+    assert len(reg.series("freshness.dirty_queue_depth").samples) == \
+        n_samples + 1
+    js = reg.to_json()
+    agg = cl.aggregate_metrics()
+    assert (js["gauges"]["lifecycle.nodes_refreshed{scope=cluster}"]
+            == agg.nodes_refreshed)
+    assert (js["histograms"]["lifecycle.staleness_s{scope=cluster}"]["count"]
+            == len(agg.staleness))
+    assert js["gauges"]["slo.completed{scope=cluster}"] == report.completed
+    assert "freshness.embedding_age_s" in js["histograms"]
